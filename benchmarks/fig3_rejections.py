@@ -1,0 +1,57 @@
+"""Paper Figure 3 (+ Appendix C.1 Figure 6): expected number of proposed-
+but-rejected clusters/features vs data size N, for varying Pb.
+
+Claim under test: E[M_N - k_N] is bounded by Pb and flat in N
+(Thm 3.3: E[#sent] <= Pb + E[K_N]).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import occ_bp_means, occ_dp_means, occ_ofl
+from repro.data import (bp_stick_breaking_data, dp_stick_breaking_data,
+                        separable_cluster_data)
+
+
+def run(repeats: int = 20, ns=(256, 1024, 2560), pbs=(16, 64, 256),
+        lam: float = 4.0, quiet: bool = False):
+    rows = []
+    for algo in ("dpmeans", "ofl", "bpmeans", "dpmeans_separable"):
+        for pb in pbs:
+            for n in ns:
+                rejs, t0 = [], time.time()
+                for r in range(repeats):
+                    if algo == "dpmeans":
+                        x, _, _ = dp_stick_breaking_data(n, seed=1000 + r)
+                        res = occ_dp_means(jnp.asarray(x), lam, pb=pb,
+                                           k_max=max(256, n), max_iters=1)
+                    elif algo == "dpmeans_separable":
+                        x, _, _ = separable_cluster_data(n, seed=1000 + r)
+                        res = occ_dp_means(jnp.asarray(x), 1.0, pb=pb,
+                                           k_max=max(256, n), max_iters=1)
+                    elif algo == "ofl":
+                        x, _, _ = dp_stick_breaking_data(n, seed=1000 + r)
+                        res = occ_ofl(jnp.asarray(x), lam, pb=pb,
+                                      key=jax.random.key(r), k_max=max(512, n))
+                    else:
+                        x, _, _ = bp_stick_breaking_data(n, seed=1000 + r)
+                        res = occ_bp_means(jnp.asarray(x), lam, pb=pb,
+                                           k_max=max(256, n), max_iters=1)
+                    rejs.append(int(res.stats.proposed.sum())
+                                - int(res.stats.accepted.sum()))
+                mean_rej = float(np.mean(rejs))
+                us = (time.time() - t0) / repeats * 1e6
+                rows.append((f"fig3_{algo}_pb{pb}_n{n}", us,
+                             f"rejections={mean_rej:.1f};bound_pb={pb};"
+                             f"flat={'yes' if mean_rej <= pb else 'NO'}"))
+                if not quiet:
+                    print(f"{rows[-1][0]},{us:.0f},{rows[-1][2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

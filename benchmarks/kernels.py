@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: jit'd wrapper timings + interpret-mode parity.
+
+On this CPU container the "ref" backend timings are the meaningful ones
+(the Pallas path runs interpreted, i.e. Python-speed — validated for
+correctness, not speed).  On TPU the same harness times the real kernels.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters: int = 20) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(quiet: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+    backend = "pallas" if ops.on_tpu() else "ref"
+
+    x = jnp.asarray(rng.normal(size=(4096, 64)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    m = jnp.ones((256,), bool)
+    us = _time(lambda: ops.pairwise_argmin(x, c, m, backend=backend))
+    flops = 2 * 4096 * 256 * 64
+    rows.append(("kern_dpmeans_assign_4096x256x64", us,
+                 f"backend={backend};gflops={flops / us / 1e3:.2f}"))
+
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)).astype(np.float32))
+    us = _time(lambda: ops.flash_attention(q, k, v, backend=backend))
+    rows.append(("kern_flash_attention_1x8x1024x64", us, f"backend={backend}"))
+
+    xx = jnp.asarray(rng.normal(size=(8192, 2048)).astype(np.float32))
+    w = jnp.ones((2048,), jnp.float32)
+    us = _time(lambda: ops.rmsnorm(xx, w, backend=backend))
+    gbs = 2 * xx.size * 4 / us / 1e3
+    rows.append(("kern_rmsnorm_8192x2048", us, f"backend={backend};gbps={gbs:.1f}"))
+
+    g = jnp.asarray(rng.normal(size=(8192, 2048)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(8192, 2048)).astype(np.float32))
+    us = _time(lambda: ops.swiglu(g, u, backend=backend))
+    rows.append(("kern_swiglu_8192x2048", us, f"backend={backend}"))
+
+    # interpret-mode parity spot check (the Pallas body itself)
+    d2p, _ = ops.pairwise_argmin(x[:64], c[:32], m[:32], backend="pallas")
+    d2r, _ = ops.pairwise_argmin(x[:64], c[:32], m[:32], backend="ref")
+    ok = bool(jnp.allclose(d2p, d2r, atol=1e-4))
+    rows.append(("kern_pallas_interpret_parity", 0.0, f"allclose={ok}"))
+
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

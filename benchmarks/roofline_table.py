@@ -1,0 +1,66 @@
+"""Render the §Roofline table from results/dryrun/*.json (the dry-run must
+have been run first: python -m repro.launch.dryrun --all --both-meshes)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def markdown_table(cells: list[dict], multi_pod: bool = False) -> str:
+    hdr = ("| arch | shape | dominant | compute s | memory s | collective s | "
+           "MFU-bound | useful-FLOPs ratio | peak GB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in cells:
+        if c.get("multi_pod") != multi_pod or c.get("variant"):
+            continue
+        if c.get("status") == "skipped":
+            rows.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | — | — "
+                        f"| skipped: {c['reason'][:40]} |")
+            continue
+        t = c["roofline"]
+        mfu = (c["model_flops_per_dev"] / 197e12) / max(
+            t["compute_s"], t["memory_s"], t["collective_s"])
+        peak = (c["memory"]["temp_bytes"] or 0) / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {t['dominant'].replace('_s','')} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {mfu:.3f} "
+            f"| {c['useful_flops_ratio']:.3f} | {peak:.1f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def run(quiet: bool = False):
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    rows = [("roofline_cells_ok", 0.0, f"count={len(ok)}"),
+            ("roofline_cells_skipped", 0.0, f"count={len(skipped)}")]
+    if ok:
+        worst = min(ok, key=lambda c: (c["model_flops_per_dev"] / 197e12) /
+                    max(c["roofline"]["compute_s"], c["roofline"]["memory_s"],
+                        c["roofline"]["collective_s"]))
+        rows.append(("roofline_worst_cell", 0.0,
+                     f"{worst['arch']}x{worst['shape']}"
+                     f";dominant={worst['roofline']['dominant']}"))
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+        print(markdown_table(cells))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig3,fig4,...]
+
+Suites:
+  fig3      — paper Fig 3 / Fig 6: rejections vs N, bounded by Pb
+  fig4      — paper Fig 4: strong scaling (emulated hosts + workload model)
+  kernels   — Pallas kernel microbenches
+  roofline  — §Roofline summary from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller repeats / sizes (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig3,fig4,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    rows = []
+    if want("fig3"):
+        from benchmarks import fig3_rejections
+        rows += fig3_rejections.run(
+            repeats=5 if args.fast else 20,
+            ns=(256, 1024) if args.fast else (256, 1024, 2560))
+    if want("fig4"):
+        from benchmarks import fig4_scaling
+        rows += fig4_scaling.run(
+            n=4096 if args.fast else 16384,
+            pb=512 if args.fast else 2048,
+            ps=(1, 2, 4) if args.fast else (1, 2, 4, 8))
+    if want("kernels"):
+        from benchmarks import kernels
+        rows += kernels.run()
+    if want("roofline"):
+        from benchmarks import roofline_table
+        rows += roofline_table.run()
+    print(f"# {len(rows)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving example: slot-based engine with recycling.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "qwen3-4b", "--reduced", "--requests", "6",
+                "--slots", "3", "--prompt-len", "8", "--max-new", "8",
+                "--cache-len", "64"])
+
+
+if __name__ == "__main__":
+    main()

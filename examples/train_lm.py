@@ -1,0 +1,42 @@
+"""End-to-end training driver example: train a ~100M-param granite-family
+model for a few hundred steps (CPU-scaled by default; pass --full-100m on
+real hardware).
+
+  PYTHONPATH=src python examples/train_lm.py                  # CPU-sized
+  PYTHONPATH=src python examples/train_lm.py --full-100m      # ~100M params
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args, _ = ap.parse_known_args()
+
+    if args.full_100m:
+        # ~100M params: 12L x 768d qwen3-family, few hundred steps
+        argv = ["--arch", "qwen3-4b", "--steps", str(args.steps or 300),
+                "--batch", "8", "--seq", "512", "--ckpt-dir", "/tmp/repro_100m",
+                "--ckpt-every", "100"]
+        import repro.configs.registry as reg
+        cfg = reg.ARCHS["qwen3-4b"].replace(
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+            d_ff=2048, vocab=32000)
+        reg.ARCHS["qwen3-100m"] = cfg
+        reg._ALIASES["qwen3-100m"] = "qwen3-100m"
+        argv[1] = "qwen3-100m"
+    else:
+        argv = ["--arch", "granite-3-2b", "--reduced",
+                "--steps", str(args.steps or 60), "--batch", "8",
+                "--seq", "64", "--ckpt-dir", "/tmp/repro_quick",
+                "--ckpt-every", "30", "--lr", "3e-3"]
+    loss = train_main(argv)
+    print(f"example finished; final loss {loss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

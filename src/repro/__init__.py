@@ -1,0 +1,3 @@
+"""repro: OCC for Distributed Unsupervised Learning (NIPS 2013) as a
+multi-pod JAX training/serving framework.  See README.md / DESIGN.md."""
+__version__ = "0.1.0"

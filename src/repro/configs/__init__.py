@@ -1,0 +1,5 @@
+from repro.configs.base import (
+    ArchConfig, MoEConfig, ShapeConfig, SHAPES, TrainConfig, reduced,
+    supports_shape,
+)
+from repro.configs.registry import ARCHS, get_arch

@@ -1,0 +1,15 @@
+"""The paper's contribution: OCC pattern + DP-means / OFL / BP-means."""
+from repro.core.occ import (
+    CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
+    gather_validate,
+)
+from repro.core.objective import sq_dists, dp_means_objective, bp_means_objective
+from repro.core.dp_means import (
+    DPMeansResult, serial_dp_means, serial_dp_means_pass, occ_dp_means,
+    thm31_permutation,
+)
+from repro.core.ofl import OFLResult, serial_ofl, occ_ofl, point_uniforms
+from repro.core.bp_means import (
+    BPMeansResult, serial_bp_means, serial_bp_means_pass, occ_bp_means,
+    coordinate_pass,
+)

@@ -1,0 +1,240 @@
+"""BP-means: serial (Alg. 7) and OCC-parallel (Alg. 6 + BPValidate Alg. 8).
+
+Latent binary feature learning: x_i ~ sum_k z_ik f_k.  The per-point
+transaction is (1) a greedy coordinate pass setting each z_ik in feature
+order, (2) if the residual norm exceeds lambda, proposing the residual as a
+new feature.  BPValidate re-fits each proposed feature against the features
+*newly accepted in this epoch* and accepts the remaining residual (Alg. 8).
+
+Serial equivalence holds because the greedy coordinate pass visits features
+in creation order: decisions over old features depend only on old features,
+so worker-side fitting against C^{t-1} followed by validator-side fitting of
+the residual against the epoch's new features reproduces exactly the serial
+pass over C^{t-1} ∪ Ĉ (Appendix B.2).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import bp_means_objective
+from repro.core.occ import CenterPool, OCCStats, make_pool, serial_validate
+
+__all__ = ["BPMeansResult", "coordinate_pass", "serial_bp_means_pass",
+           "serial_bp_means", "occ_bp_means"]
+
+
+class BPMeansResult(NamedTuple):
+    pool: CenterPool            # features live in pool.centers
+    z: jnp.ndarray              # (N, K_max) bool
+    stats: OCCStats
+    send: jnp.ndarray
+    epoch_of: jnp.ndarray
+    n_iters: int
+    objective: jnp.ndarray
+
+
+def coordinate_pass(x: jnp.ndarray, z0: jnp.ndarray, pool: CenterPool,
+                    feat_mask: jnp.ndarray | None = None):
+    """Greedy single pass over features in order (Alg. 7 inner loop).
+
+    x: (B, D), z0: (B, K_max) bool initial assignment.  For each feature k
+    in index order set z_k = argmin_{0,1} ||r_excl_k - z_k f_k||^2, i.e.
+    z_k = 1 iff 2 r·f_k > ||f_k||^2 with r excluding f_k's current term.
+    Returns (z, residual) with residual = x - z F.  Batched; O(K_max) scan.
+    """
+    mask = pool.mask if feat_mask is None else feat_mask
+    r0 = x - (z0 & mask[None, :]).astype(x.dtype) @ pool.centers
+
+    def step(r, inp):
+        f_k, m_k, z_k = inp                       # (D,), (), (B,)
+        r_excl = r + z_k[:, None].astype(r.dtype) * f_k[None, :]
+        znew = jnp.logical_and(m_k, 2.0 * (r_excl @ f_k) > f_k @ f_k)
+        r = r_excl - znew[:, None].astype(r.dtype) * f_k[None, :]
+        return r, znew
+
+    r, z_t = jax.lax.scan(step, r0, (pool.centers, mask, (z0 & mask[None, :]).T))
+    return z_t.T, r
+
+
+def _bp_accept(lam2, count0):
+    """BPValidate: fit f_new against features accepted *this epoch* (slots
+    >= count0), accept the residual if still badly represented."""
+    def accept_fn(pool: CenterPool, f_new, _aux):
+        k_max = pool.centers.shape[0]
+        epoch_mask = jnp.logical_and(pool.mask, jnp.arange(k_max) >= count0)
+        zref, r = coordinate_pass(f_new[None, :], jnp.zeros((1, k_max), bool),
+                                  pool, epoch_mask)
+        resid2 = jnp.sum(r[0] * r[0])
+        return resid2 > lam2, r[0], zref[0]
+    return accept_fn
+
+
+# ---------------------------------------------------------------------------
+# Serial BP-means (Alg. 7)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def _serial_bp_pass(x, z, pool, lam2):
+    """Serial pass: each point fits against the *current* feature set (which
+    grows during the pass), then may create its residual as a feature."""
+    def accept_fn(p: CenterPool, x_j, z_j):
+        znew, r = coordinate_pass(x_j[None, :], z_j[None, :], p)
+        resid2 = jnp.sum(r[0] * r[0])
+        return resid2 > lam2, r[0], znew[0]
+
+    send = jnp.ones((x.shape[0],), bool)
+    pool, slots, z_out = serial_validate(pool, send, x, accept_fn, aux=z)
+    k_max = pool.centers.shape[0]
+    created = jax.nn.one_hot(jnp.where(slots >= 0, slots, 0), k_max, dtype=bool)
+    created = jnp.logical_and(created, (slots >= 0)[:, None])
+    z = jnp.logical_or(z_out, created)
+    return pool, z
+
+
+def _init_mean(x, k_max):
+    """Alg. 7 initialization: z_i1 = 1, f_1 = mean(x)."""
+    pool = make_pool(k_max, x.shape[-1], x.dtype)
+    centers = pool.centers.at[0].set(jnp.mean(x, axis=0))
+    pool = pool._replace(centers=centers, mask=pool.mask.at[0].set(True),
+                         count=jnp.ones((), jnp.int32))
+    z = jnp.zeros((x.shape[0], k_max), bool).at[:, 0].set(True)
+    return pool, z
+
+
+def _reestimate(x, z, pool, ridge=1e-6):
+    """F <- (Z^T Z)^{-1} Z^T X restricted to valid features (parallel sums)."""
+    k_max = pool.centers.shape[0]
+    zf = jnp.logical_and(z, pool.mask[None, :]).astype(x.dtype)
+    ztz = zf.T @ zf
+    ztx = zf.T @ x
+    diag = jnp.where(pool.mask, ridge, 1.0)
+    a = ztz * (pool.mask[:, None] & pool.mask[None, :]) + jnp.diag(diag)
+    f = jnp.linalg.solve(a, ztx * pool.mask[:, None])
+    return pool._replace(centers=jnp.where(pool.mask[:, None], f, pool.centers))
+
+
+def serial_bp_means_pass(x, lam, k_max, pool=None, z=None, init_mean=True):
+    lam2 = jnp.asarray(lam, x.dtype) ** 2
+    if pool is None:
+        if init_mean:
+            pool, z = _init_mean(x, k_max)
+        else:
+            pool = make_pool(k_max, x.shape[-1], x.dtype)
+            z = jnp.zeros((x.shape[0], k_max), bool)
+    return _serial_bp_pass(x, z, pool, lam2)
+
+
+def serial_bp_means(x, lam, k_max=256, max_iters=10, init_mean=True) -> BPMeansResult:
+    n = x.shape[0]
+    pool, z = serial_bp_means_pass(x, lam, k_max, init_mean=init_mean)
+    pool = _reestimate(x, z, pool)
+    it = 1
+    for it in range(2, max_iters + 1):
+        z_prev = z
+        pool, z = serial_bp_means_pass(x, lam, k_max, pool, z)
+        pool = _reestimate(x, z, pool)
+        if bool(jnp.all(z == z_prev)):
+            break
+    obj = bp_means_objective(x, z, pool.centers, lam, pool.mask)
+    t = np.zeros((1,), np.int32)
+    return BPMeansResult(pool, z, OCCStats(t, t), jnp.zeros((n,), bool),
+                         jnp.zeros((n,), jnp.int32), it, obj)
+
+
+# ---------------------------------------------------------------------------
+# OCC BP-means (Alg. 6)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _bp_epoch(pool: CenterPool, xs, valid, z0, lam2):
+    """One OCC epoch: batched optimistic fit against C^{t-1}; residual
+    proposals serially validated against this epoch's accepted features."""
+    count0 = pool.count
+    z_old, r = coordinate_pass(xs, z0, pool)
+    resid2 = jnp.sum(r * r, axis=-1)
+    send = jnp.logical_and(resid2 > lam2, valid)
+    pool2, slots, zref = serial_validate(pool, send, r, _bp_accept(lam2, count0))
+    k_max = pool.centers.shape[0]
+    created = jnp.logical_and(
+        jax.nn.one_hot(jnp.where(slots >= 0, slots, 0), k_max, dtype=bool),
+        (slots >= 0)[:, None])
+    z = jnp.logical_or(z_old, jnp.logical_or(jnp.logical_and(zref, send[:, None]), created))
+    z = jnp.logical_and(z, valid[:, None])
+    return pool2, z, send, jnp.sum(send.astype(jnp.int32)), jnp.sum((slots >= 0).astype(jnp.int32))
+
+
+def occ_bp_means(
+    x: jnp.ndarray,
+    lam: float,
+    pb: int,
+    k_max: int = 256,
+    max_iters: int = 1,
+    init_mean: bool = True,
+    bootstrap: bool = False,
+    mesh: jax.sharding.Mesh | None = None,
+    data_axis: str = "data",
+) -> BPMeansResult:
+    """OCC BP-means (Alg. 6) with bulk-synchronous epochs of Pb points."""
+    n, d = x.shape
+    lam2 = jnp.asarray(lam, x.dtype) ** 2
+    if init_mean:
+        pool, z = _init_mean(x, k_max)   # parallel global mean (one psum)
+    else:
+        pool = make_pool(k_max, d, x.dtype)
+        z = jnp.zeros((n, k_max), bool)
+    send_all = jnp.zeros((n,), bool)
+    epoch_of = jnp.zeros((n,), jnp.int32)
+
+    put = None
+    if mesh is not None:
+        shd = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(data_axis))
+        put = lambda a: jax.device_put(a, shd)
+
+    start = 0
+    if bootstrap:
+        nb = max(1, pb // 16)
+        pool, zb = serial_bp_means_pass(x[:nb], lam, k_max, pool, z[:nb])
+        z = z.at[:nb].set(zb)
+        send_all = send_all.at[:nb].set(True)
+        start = nb
+
+    n_rest = n - start
+    t_epochs = max(1, math.ceil(n_rest / pb))
+    pad = t_epochs * pb - n_rest
+    xs = jnp.concatenate([x[start:], jnp.zeros((pad, d), x.dtype)], 0)
+    valid = jnp.concatenate([jnp.ones((n_rest,), bool), jnp.zeros((pad,), bool)])
+
+    stats_p, stats_a = [], []
+    z_prev = None
+    it_done = 0
+    for it in range(1, max_iters + 1):
+        it_done = it
+        for t in range(t_epochs):
+            sl = slice(t * pb, (t + 1) * pb)
+            lo = start + t * pb
+            hi = min(lo + pb, n)
+            ze0 = z[lo:hi] if hi - lo == pb else \
+                jnp.zeros((pb, k_max), bool).at[:hi - lo].set(z[lo:hi])
+            xe, ve = xs[sl], valid[sl]
+            if put is not None:
+                xe, ve, ze0 = put(xe), put(ve), put(ze0)
+            pool, ze, se, n_sent, n_acc = _bp_epoch(pool, xe, ve, ze0, lam2)
+            z = z.at[lo:hi].set(ze[:hi - lo])
+            send_all = send_all.at[lo:hi].set(se[:hi - lo])
+            epoch_of = epoch_of.at[lo:hi].set(t)
+            if it == 1:
+                stats_p.append(int(n_sent))
+                stats_a.append(int(n_acc))
+        pool = _reestimate(x, z, pool)
+        if z_prev is not None and bool(jnp.all(z == z_prev)):
+            break
+        z_prev = z
+    obj = bp_means_objective(x, z, pool.centers, lam, pool.mask)
+    stats = OCCStats(np.asarray(stats_p, np.int32), np.asarray(stats_a, np.int32))
+    return BPMeansResult(pool, z, stats, send_all, epoch_of, it_done, obj)

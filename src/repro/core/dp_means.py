@@ -1,0 +1,220 @@
+"""DP-means: serial (Alg. 1) and OCC-parallel (Alg. 3 + DPValidate Alg. 2).
+
+The OCC version is serially equivalent to Alg. 1 under the Thm-3.1
+permutation: within an epoch, non-proposed points (whose assignment depends
+only on C^{t-1}) are ordered before proposed points, which are validated in
+global index order.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import dp_means_objective
+from repro.core.occ import (
+    CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
+    gather_validate,
+)
+
+__all__ = ["DPMeansResult", "serial_dp_means_pass", "serial_dp_means",
+           "occ_dp_means_pass", "occ_dp_means"]
+
+
+class DPMeansResult(NamedTuple):
+    pool: CenterPool
+    z: jnp.ndarray              # (N,) int32 — assignment to pool slot
+    stats: OCCStats             # per-epoch proposed / accepted counts
+    send: jnp.ndarray           # (N,) bool — point was sent to the validator
+    epoch_of: jnp.ndarray       # (N,) int32 — epoch each point was processed in
+    n_iters: int
+    objective: jnp.ndarray
+
+
+def _dp_accept(lam2: float):
+    """DPValidate accept rule: accept iff not within lambda of any center."""
+    def accept_fn(pool: CenterPool, x_j, aux_j):
+        d2, ref = nearest_center(pool, x_j)
+        return d2 > lam2, x_j, ref
+    return accept_fn
+
+
+# ---------------------------------------------------------------------------
+# Serial DP-means (Alg. 1)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k_max",))
+def serial_dp_means_pass(x: jnp.ndarray, lam: float, k_max: int,
+                         pool: CenterPool | None = None):
+    """One serial pass of Alg. 1's inner loop: scan points in order,
+    assigning to the nearest center or creating a new one.
+
+    Equivalent to validating *every* point serially — the degenerate OCC run
+    with P = b = 1.  Returns (pool, z).
+    """
+    if pool is None:
+        pool = make_pool(k_max, x.shape[-1], x.dtype)
+    lam2 = jnp.asarray(lam, x.dtype) ** 2
+    send = jnp.ones((x.shape[0],), bool)
+    pool, slots, refs = serial_validate(pool, send, x, _dp_accept(lam2))
+    z = jnp.where(slots >= 0, slots, refs).astype(jnp.int32)
+    return pool, z
+
+
+def _recompute_means(x: jnp.ndarray, z: jnp.ndarray, pool: CenterPool) -> CenterPool:
+    """Second phase of Alg. 1/3: mu_k <- Mean({x_i | z_i = k}).
+
+    Slots with no assigned points keep their previous vector (cannot happen
+    within the creating iteration; can after reassignment in later ones).
+    Trivially parallel: segment sums are psum-able over the data axis.
+    """
+    k_max = pool.centers.shape[0]
+    zc = jnp.clip(z, 0, k_max - 1)
+    valid = z >= 0
+    w = valid.astype(x.dtype)
+    sums = jax.ops.segment_sum(x * w[:, None], zc, num_segments=k_max)
+    cnts = jax.ops.segment_sum(w, zc, num_segments=k_max)
+    means = sums / jnp.maximum(cnts, 1.0)[:, None]
+    new_centers = jnp.where((cnts > 0)[:, None] & pool.mask[:, None], means, pool.centers)
+    return pool._replace(centers=new_centers)
+
+
+def serial_dp_means(x: jnp.ndarray, lam: float, k_max: int = 256,
+                    max_iters: int = 20) -> DPMeansResult:
+    """Full serial DP-means (Alg. 1): alternate the assignment/creation pass
+    with the centroid recomputation until assignments are fixed."""
+    n = x.shape[0]
+    pool = make_pool(k_max, x.shape[-1], x.dtype)
+    z_prev = None
+    it = 0
+    for it in range(1, max_iters + 1):
+        pool, z = serial_dp_means_pass(x, lam, k_max, pool)
+        pool = _recompute_means(x, z, pool)
+        if z_prev is not None and bool(jnp.all(z == z_prev)):
+            break
+        z_prev = z
+    obj = dp_means_objective(x, pool.centers, lam, pool.mask)
+    t = np.zeros((1,), np.int32)
+    return DPMeansResult(pool, z, OCCStats(t, t), jnp.zeros((n,), bool),
+                         jnp.zeros((n,), jnp.int32), it, obj)
+
+
+# ---------------------------------------------------------------------------
+# OCC DP-means (Alg. 3)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("validate_cap",))
+def _dp_epoch(pool: CenterPool, xs: jnp.ndarray, valid: jnp.ndarray,
+              lam2: jnp.ndarray, validate_cap: int | None = None):
+    """One bulk-synchronous OCC epoch over Pb points (Alg. 3 inner body).
+
+    Optimistic phase — one batched distance computation against the
+    replicated C^{t-1} (sharded over the `data` mesh axis under pjit; this is
+    each "processor" handling its block).  Points beyond lambda of every
+    center are proposals; the rest are safely assigned.
+
+    Validation phase — deterministic serial scan (DPValidate), replicated.
+    """
+    d2, idx = nearest_center(pool, xs)
+    send = jnp.logical_and(d2 > lam2, valid)
+    pool2, slots, refs, v_overflow = gather_validate(
+        pool, send, xs, _dp_accept(lam2), cap=validate_cap)
+    z = jnp.where(send, jnp.where(slots >= 0, slots, refs), idx).astype(jnp.int32)
+    z = jnp.where(valid, z, -1)
+    n_sent = jnp.sum(send.astype(jnp.int32))
+    n_acc = jnp.sum((slots >= 0).astype(jnp.int32))
+    pool2 = pool2._replace(overflow=jnp.logical_or(pool2.overflow, v_overflow))
+    return pool2, z, send, n_sent, n_acc
+
+
+def occ_dp_means(
+    x: jnp.ndarray,
+    lam: float,
+    pb: int,
+    k_max: int = 256,
+    max_iters: int = 1,
+    bootstrap: bool = False,
+    validate_cap: int | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    data_axis: str = "data",
+) -> DPMeansResult:
+    """OCC DP-means (Alg. 3).
+
+    Args:
+      x: (N, D) data.  pb: points per epoch (the paper's P*b product — only
+      the product matters algorithmically; the mesh supplies the physical P).
+      max_iters: outer while-loop passes (1 = the paper's Fig-3 setting).
+      bootstrap: serially pre-process the first pb/16 points (paper §4.2).
+      validate_cap: bounded-master compaction (see occ.gather_validate).
+      mesh: optional device mesh; epoch inputs are sharded over `data_axis`
+      and the optimistic phase parallelizes under GSPMD while the validation
+      scan executes replicated (SPMD re-execution of the master).
+    """
+    n, d = x.shape
+    lam2 = jnp.asarray(lam, x.dtype) ** 2
+    pool = make_pool(k_max, d, x.dtype)
+    z = jnp.full((n,), -1, jnp.int32)
+    send_all = jnp.zeros((n,), bool)
+    epoch_of = jnp.zeros((n,), jnp.int32)
+
+    put = None
+    if mesh is not None:
+        shd = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(data_axis))
+        put = lambda a: jax.device_put(a, shd)
+
+    start = 0
+    if bootstrap:
+        nb = max(1, pb // 16)
+        pool, zb = serial_dp_means_pass(x[:nb], lam, k_max, pool)
+        z = z.at[:nb].set(zb)
+        send_all = send_all.at[:nb].set(True)  # bootstrapped points hit the master
+        start = nb
+
+    n_rest = n - start
+    t_epochs = max(1, math.ceil(n_rest / pb))
+    pad = t_epochs * pb - n_rest
+    xs = jnp.concatenate([x[start:], jnp.zeros((pad, d), x.dtype)], 0)
+    valid = jnp.concatenate([jnp.ones((n_rest,), bool), jnp.zeros((pad,), bool)])
+
+    stats_p, stats_a = [], []
+    z_prev = None
+    it_done = 0
+    for it in range(1, max_iters + 1):
+        it_done = it
+        for t in range(t_epochs):
+            xe = xs[t * pb:(t + 1) * pb]
+            ve = valid[t * pb:(t + 1) * pb]
+            if put is not None:
+                xe, ve = put(xe), put(ve)
+            pool, ze, se, n_sent, n_acc = _dp_epoch(pool, xe, ve, lam2, validate_cap)
+            lo = start + t * pb
+            hi = min(lo + pb, n)
+            keep = hi - lo
+            z = z.at[lo:hi].set(ze[:keep])
+            send_all = send_all.at[lo:hi].set(se[:keep])
+            epoch_of = epoch_of.at[lo:hi].set(t)
+            if it == 1:
+                stats_p.append(int(n_sent))
+                stats_a.append(int(n_acc))
+        pool = _recompute_means(x, z, pool)
+        if z_prev is not None and bool(jnp.all(z == z_prev)):
+            break
+        z_prev = z
+    obj = dp_means_objective(x, pool.centers, lam, pool.mask)
+    stats = OCCStats(np.asarray(stats_p, np.int32), np.asarray(stats_a, np.int32))
+    return DPMeansResult(pool, z, stats, send_all, epoch_of, it_done, obj)
+
+
+def thm31_permutation(result: DPMeansResult, n: int) -> np.ndarray:
+    """Build the serial order of Thm 3.1 from an OCC run: epochs in order;
+    within an epoch, non-validated points (index order) precede validated
+    points (validation = index order)."""
+    send = np.asarray(result.send)
+    epoch = np.asarray(result.epoch_of)
+    idx = np.arange(n)
+    order = np.lexsort((idx, send.astype(np.int32), epoch))
+    return idx[order]

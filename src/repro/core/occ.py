@@ -1,0 +1,169 @@
+"""Generic Optimistic Concurrency Control (OCC) scaffolding — paper §1.1.
+
+The OCC pattern: partition data over P processors; each epoch every
+processor optimistically processes its block of b points against the
+replicated global state C^{t-1}; operations that may violate serial
+invariants (new cluster / feature proposals) are *serially validated*;
+accepted state changes are replicated before the next epoch.
+
+TPU adaptation (see DESIGN.md §2): proposals within an epoch are produced by
+one batched, MXU-tiled computation over the Pb points (the per-point
+decisions depend only on C^{t-1}, so vectorization preserves the serial
+order of Thm 3.1); validation is a deterministic `lax.scan` in global index
+order, executed replicated on every device (SPMD re-execution of the
+"master") or gathered to a single device (classic mode).
+
+The global center/feature set C grows over time; JAX needs static shapes, so
+C lives in a fixed-capacity masked buffer (`CenterPool`). Overflow is
+detected and surfaced — it is the analogue of the paper's master running out
+of memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import sq_dists
+
+__all__ = [
+    "CenterPool", "make_pool", "pool_append_serial", "block_epochs",
+    "serial_validate", "nearest_center", "OCCStats",
+]
+
+
+class CenterPool(NamedTuple):
+    """Fixed-capacity masked buffer holding the global state C."""
+    centers: jnp.ndarray   # (K_max, D)
+    mask: jnp.ndarray      # (K_max,) bool — slot holds a validated center
+    count: jnp.ndarray     # () int32 — number of valid slots (== mask.sum())
+    overflow: jnp.ndarray  # () bool — a validated accept did not fit
+
+
+class OCCStats(NamedTuple):
+    """Per-epoch bookkeeping used by the Fig-3 / Thm-3.3 experiments."""
+    proposed: jnp.ndarray  # (T,) number of points sent to the validator
+    accepted: jnp.ndarray  # (T,) number of proposals accepted as new centers
+
+
+def make_pool(k_max: int, dim: int, dtype=jnp.float32) -> CenterPool:
+    return CenterPool(
+        centers=jnp.zeros((k_max, dim), dtype),
+        mask=jnp.zeros((k_max,), bool),
+        count=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), bool),
+    )
+
+
+def nearest_center(pool: CenterPool, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Min squared distance and argmin over valid centers.
+
+    x: (..., D).  Returns (d2min (...,), idx (...,)).  Empty pool -> +inf / -1.
+    """
+    d2 = sq_dists(x.reshape(-1, x.shape[-1]), pool.centers)
+    d2 = jnp.where(pool.mask[None, :], d2, jnp.inf)
+    d2min = jnp.min(d2, axis=-1)
+    idx = jnp.where(jnp.isfinite(d2min), jnp.argmin(d2, axis=-1), -1)
+    batch_shape = x.shape[:-1]
+    return d2min.reshape(batch_shape), idx.reshape(batch_shape)
+
+
+def pool_append_serial(pool: CenterPool, x: jnp.ndarray, do: jnp.ndarray) -> tuple[CenterPool, jnp.ndarray]:
+    """Append x at slot `count` if `do` (traced bool). Returns (pool, slot).
+
+    slot is the written index, or -1 when not written / overflowed.
+    """
+    k_max = pool.centers.shape[0]
+    fits = pool.count < k_max
+    write = jnp.logical_and(do, fits)
+    slot = jnp.where(write, pool.count, -1)
+    idx = jnp.clip(pool.count, 0, k_max - 1)
+    centers = jnp.where(
+        write,
+        jax.lax.dynamic_update_slice(pool.centers, x[None, :].astype(pool.centers.dtype), (idx, 0)),
+        pool.centers,
+    )
+    mask = jnp.where(write, pool.mask.at[idx].set(True), pool.mask)
+    count = pool.count + write.astype(jnp.int32)
+    overflow = jnp.logical_or(pool.overflow, jnp.logical_and(do, ~fits))
+    return CenterPool(centers, mask, count, overflow), slot
+
+
+def block_epochs(n: int, pb: int) -> int:
+    """Number of bulk-synchronous epochs for n points with Pb points/epoch."""
+    return max(1, math.ceil(n / pb))
+
+
+def serial_validate(
+    pool: CenterPool,
+    send: jnp.ndarray,              # (B,) bool — proposal flags in index order
+    payload: jnp.ndarray,           # (B, D) — proposed center / feature vectors
+    accept_fn: Callable[[CenterPool, jnp.ndarray, Any], tuple[jnp.ndarray, Any]],
+    aux: Any = None,                # per-proposal auxiliary pytree (leading dim B)
+) -> tuple[CenterPool, jnp.ndarray, Any]:
+    """The serializing validator: a deterministic scan in global index order.
+
+    `accept_fn(pool, x_j, aux_j) -> (accept: bool0-d, append_vec, out_j)`
+    decides, given the state *including previously accepted proposals of this
+    epoch*, whether proposal j becomes a new center, and what vector to
+    append (DP/OFL append x_j itself; BP-means appends the residual, Alg. 8).
+    Rejected proposals get their reference resolved by the caller via
+    `out_j` (e.g. nearest-center index).
+
+    Returns (pool', slot (B,) int32 — accepted slot or -1, outs).
+    This is Alg. 2 (DPValidate) / Alg. 5 (OFLValidate) / Alg. 8 (BPValidate)
+    generically; identical on every device, hence safe to run replicated.
+    """
+    if aux is None:
+        aux = jnp.zeros((send.shape[0],), jnp.int32)
+
+    def step(carry, inp):
+        pool = carry
+        send_j, x_j, aux_j = inp
+        accept, append_vec, out_j = accept_fn(pool, x_j, aux_j)
+        accept = jnp.logical_and(accept, send_j)
+        pool, slot = pool_append_serial(pool, append_vec, accept)
+        return pool, (slot, out_j)
+
+    pool, (slots, outs) = jax.lax.scan(step, pool, (send, payload, aux))
+    return pool, slots, outs
+
+
+def gather_validate(
+    pool: CenterPool,
+    send: jnp.ndarray,
+    payload: jnp.ndarray,
+    accept_fn,
+    aux: Any = None,
+    cap: int | None = None,
+):
+    """Bounded-master variant: compact the sent proposals (stable order) to a
+    fixed-size buffer of `cap` slots before the serial scan.
+
+    This keeps the sequential scan O(cap) instead of O(Pb) — the production
+    analogue of the paper's master only *seeing* the sent points.  Thm 3.3
+    bounds E[#sent] by Pb + K_N so cap ~ Pb is safe after epoch 1; overflow
+    is surfaced via the returned flag.
+    """
+    b = send.shape[0]
+    if cap is None or cap >= b:
+        pool, slots, outs = serial_validate(pool, send, payload, accept_fn, aux)
+        return pool, slots, outs, jnp.zeros((), bool)
+
+    n_sent = jnp.sum(send.astype(jnp.int32))
+    sent_overflow = n_sent > cap
+    # Stable compaction: indices of sent proposals in ascending order.
+    order = jnp.argsort(jnp.where(send, jnp.arange(b), b), stable=True)[:cap]
+    send_c = send[order]
+    payload_c = payload[order]
+    aux_c = None if aux is None else jax.tree.map(lambda a: a[order], aux)
+    pool, slots_c, outs_c = serial_validate(pool, send_c, payload_c, accept_fn, aux_c)
+    # Scatter results back to the full index space.
+    slots = jnp.full((b,), -1, jnp.int32).at[order].set(slots_c, mode="drop")
+    outs = jax.tree.map(
+        lambda o: jnp.zeros((b,) + o.shape[1:], o.dtype).at[order].set(o, mode="drop"),
+        outs_c,
+    )
+    return pool, slots, outs, sent_overflow

@@ -1,0 +1,129 @@
+"""Online Facility Location: serial (Meyerson [17]) and OCC-parallel (Alg. 4/5).
+
+Serial OFL processes points in one pass: x becomes a facility with
+probability min(1, d^2/lambda^2) where d is the distance to the nearest
+open facility; otherwise it is assigned to that facility.
+
+OCC OFL (Alg. 4): a point is *sent* to the validator with the probability
+computed from the stale state C^{t-1}; the validator accepts it with the
+conditional probability such that the *net* acceptance probability equals
+the serial algorithm's with the up-to-date state (Appendix B.3, Eq. 2-4).
+
+Bit-exact serializability: each point i owns one uniform draw
+u_i = U(fold_in(key, i)).  Send iff u_i < min(1, d^2/lam^2); validator
+accepts iff u_i < min(1, d*^2/lam^2).  Since d* <= d, the joint event is
+exactly {u_i < min(1, d*^2/lam^2)} — the serial decision with the same u_i —
+so distributed and serial runs agree draw-for-draw, which makes Thm 3.1
+testable exactly rather than only in distribution.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.objective import dp_means_objective
+from repro.core.occ import (
+    CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
+    gather_validate,
+)
+
+__all__ = ["OFLResult", "point_uniforms", "serial_ofl", "occ_ofl"]
+
+
+class OFLResult(NamedTuple):
+    pool: CenterPool
+    z: jnp.ndarray
+    stats: OCCStats
+    send: jnp.ndarray
+    epoch_of: jnp.ndarray
+    objective: jnp.ndarray
+
+
+def point_uniforms(key: jax.Array, n: int) -> jnp.ndarray:
+    """One counter-based uniform per point — shared by serial & OCC runs."""
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+    return jax.vmap(lambda k: jax.random.uniform(k))(keys)
+
+
+def _ofl_accept(lam2):
+    def accept_fn(pool: CenterPool, x_j, u_j):
+        d2, ref = nearest_center(pool, x_j)
+        p = jnp.minimum(1.0, d2 / lam2)   # empty pool -> inf/lam2 -> 1
+        return u_j < p, x_j, ref
+    return accept_fn
+
+
+@partial(jax.jit, static_argnames=("k_max",))
+def serial_ofl(x: jnp.ndarray, u: jnp.ndarray, lam: float, k_max: int):
+    """Serial OFL over points in the given order, with per-point uniforms u."""
+    pool = make_pool(k_max, x.shape[-1], x.dtype)
+    lam2 = jnp.asarray(lam, x.dtype) ** 2
+    send = jnp.ones((x.shape[0],), bool)
+    pool, slots, refs = serial_validate(pool, send, x, _ofl_accept(lam2), aux=u)
+    z = jnp.where(slots >= 0, slots, refs).astype(jnp.int32)
+    return pool, z
+
+
+@partial(jax.jit, static_argnames=("validate_cap",))
+def _ofl_epoch(pool: CenterPool, xs, valid, u, lam2, validate_cap=None):
+    d2, idx = nearest_center(pool, xs)
+    p_send = jnp.minimum(1.0, d2 / lam2)
+    send = jnp.logical_and(u < p_send, valid)
+    pool2, slots, refs, v_overflow = gather_validate(
+        pool, send, xs, _ofl_accept(lam2), aux=u, cap=validate_cap)
+    z = jnp.where(send, jnp.where(slots >= 0, slots, refs), idx).astype(jnp.int32)
+    z = jnp.where(valid, z, -1)
+    pool2 = pool2._replace(overflow=jnp.logical_or(pool2.overflow, v_overflow))
+    return pool2, z, send, jnp.sum(send.astype(jnp.int32)), jnp.sum((slots >= 0).astype(jnp.int32))
+
+
+def occ_ofl(
+    x: jnp.ndarray,
+    lam: float,
+    pb: int,
+    key: jax.Array,
+    k_max: int = 256,
+    validate_cap: int | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    data_axis: str = "data",
+) -> OFLResult:
+    """OCC Online Facility Location (Alg. 4).  Single pass by construction."""
+    n, d = x.shape
+    lam2 = jnp.asarray(lam, x.dtype) ** 2
+    u = point_uniforms(key, n)
+    pool = make_pool(k_max, d, x.dtype)
+    t_epochs = max(1, math.ceil(n / pb))
+    pad = t_epochs * pb - n
+    xs = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], 0)
+    us = jnp.concatenate([u, jnp.ones((pad,), u.dtype)], 0)
+    valid = jnp.concatenate([jnp.ones((n,), bool), jnp.zeros((pad,), bool)])
+
+    put = None
+    if mesh is not None:
+        shd = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(data_axis))
+        put = lambda a: jax.device_put(a, shd)
+
+    z = jnp.full((n,), -1, jnp.int32)
+    send_all = jnp.zeros((n,), bool)
+    epoch_of = jnp.zeros((n,), jnp.int32)
+    stats_p, stats_a = [], []
+    for t in range(t_epochs):
+        sl = slice(t * pb, (t + 1) * pb)
+        xe, ue, ve = xs[sl], us[sl], valid[sl]
+        if put is not None:
+            xe, ue, ve = put(xe), put(ue), put(ve)
+        pool, ze, se, n_sent, n_acc = _ofl_epoch(pool, xe, ve, ue, lam2, validate_cap)
+        lo, hi = t * pb, min((t + 1) * pb, n)
+        z = z.at[lo:hi].set(ze[:hi - lo])
+        send_all = send_all.at[lo:hi].set(se[:hi - lo])
+        epoch_of = epoch_of.at[lo:hi].set(t)
+        stats_p.append(int(n_sent))
+        stats_a.append(int(n_acc))
+    obj = dp_means_objective(x, pool.centers, lam, pool.mask)
+    stats = OCCStats(np.asarray(stats_p, np.int32), np.asarray(stats_a, np.int32))
+    return OFLResult(pool, z, stats, send_all, epoch_of, obj)

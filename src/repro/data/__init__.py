@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    dp_stick_breaking_data, bp_stick_breaking_data, separable_cluster_data,
+)
+from repro.data.tokens import TokenPipeline, synthetic_token_batches

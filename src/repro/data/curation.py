@@ -1,0 +1,62 @@
+"""OCC data curation: the paper's algorithm as a first-class framework
+feature (DESIGN.md §4).
+
+Distributed DP-means (OCC) clusters sequence embeddings on the same `data`
+mesh axis training uses; the resulting clusters drive near-duplicate
+down-weighting and topic balancing of the token pipeline.  The embeddings
+come from mean-pooled hidden states of the (possibly mid-training) model —
+so this runs *inside* the training framework, not as an offline job.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dp_means import DPMeansResult, occ_dp_means
+
+__all__ = ["embed_sequences", "curate", "CurationReport"]
+
+
+@dataclass(frozen=True)
+class CurationReport:
+    n_clusters: int
+    n_points: int
+    dup_fraction: float      # points in overfull clusters
+    keep_weight: np.ndarray  # (N,) sampling weight per example
+    result: DPMeansResult
+
+
+def embed_sequences(model, params, batches) -> jnp.ndarray:
+    """Mean-pooled final hidden states as sequence embeddings (B_total, D)."""
+    outs = []
+    for batch in batches:
+        x, n_prefix = model._embed(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.float32)
+        enc_out = model._encode(params, batch) if model.cfg.is_encdec else None
+        h, _ = model._body_train(params, x, positions, enc_out)
+        outs.append(jnp.mean(h[:, n_prefix:].astype(jnp.float32), axis=1))
+    return jnp.concatenate(outs, axis=0)
+
+
+def curate(embeds: jnp.ndarray, lam: float, pb: int, k_max: int = 512,
+           max_per_cluster: int | None = None, mesh=None) -> CurationReport:
+    """OCC DP-means over embeddings -> per-example sampling weights.
+
+    Clusters with more than `max_per_cluster` members are down-weighted to
+    that size (near-duplicate suppression); default is mean cluster size.
+    """
+    res = occ_dp_means(embeds, lam, pb=pb, k_max=k_max, max_iters=2, mesh=mesh)
+    z = np.asarray(res.z)
+    n = z.shape[0]
+    k = int(res.pool.count)
+    counts = np.bincount(z[z >= 0], minlength=max(k, 1))
+    cap = max_per_cluster or max(1, int(np.ceil(n / max(k, 1))))
+    w = np.ones(n, np.float64)
+    over = counts > cap
+    for c in np.nonzero(over)[0]:
+        w[z == c] = cap / counts[c]
+    dup_frac = float(np.sum(counts[over] - cap) / max(n, 1))
+    return CurationReport(k, n, dup_frac, w, res)

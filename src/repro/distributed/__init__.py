@@ -1,0 +1,4 @@
+from repro.distributed.shardings import (
+    ShardCtx, shard_ctx, current_ctx, constrain, batch_spec, param_specs,
+    input_shardings,
+)

@@ -1,0 +1,64 @@
+"""Elastic scaling: rebuild the mesh after node loss and reshard state.
+
+Policy (DESIGN.md §7): node failures shrink the `data` axis (DP degree) —
+TP groups must stay intact because weights are sharded across them, so a
+dead host inside a TP group takes its whole group's data-rank out.  The
+surviving mesh keeps the same `model` extent; params/opt state are restored
+from the latest checkpoint with the new shardings; the data pipeline
+re-seeds deterministically from (seed, step).
+
+On real hardware the device list comes from jax.devices() after the runtime
+excludes the failed hosts; here `surviving_devices` is injectable so tests
+can simulate failures on the 512-host-device dry-run mesh.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["plan_shrunk_mesh", "ElasticPlan"]
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: dict[str, int]
+    new_shape: dict[str, int]
+    lost_ranks: int
+
+    @property
+    def new_axis_sizes(self) -> tuple[int, ...]:
+        return tuple(self.new_shape.values())
+
+
+def plan_shrunk_mesh(mesh: Mesh, n_failed: int,
+                     data_axis: str = "data") -> ElasticPlan:
+    """Compute the largest surviving mesh after `n_failed` device failures.
+
+    Each failure removes ceil(failures / devices-per-data-rank) data ranks.
+    Keeps `model` (and `pod`) extents; shrinks `data`.
+    """
+    shape = dict(mesh.shape)
+    per_rank = math.prod(s for a, s in shape.items() if a != data_axis)
+    lost_ranks = math.ceil(n_failed / per_rank) if n_failed else 0
+    new_data = shape[data_axis] - lost_ranks
+    if new_data < 1:
+        raise RuntimeError(
+            f"too many failures: {n_failed} kills all {shape[data_axis]} data ranks")
+    new_shape = dict(shape)
+    new_shape[data_axis] = new_data
+    return ElasticPlan(shape, new_shape, lost_ranks)
+
+
+def build_mesh_from_plan(plan: ElasticPlan, devices=None) -> Mesh:
+    """Materialize the shrunk mesh from surviving devices."""
+    names = tuple(plan.new_shape.keys())
+    sizes = plan.new_axis_sizes
+    need = math.prod(sizes)
+    devs = np.asarray(devices if devices is not None else jax.devices())[:need]
+    if devs.size < need:
+        raise RuntimeError(f"need {need} devices, have {devs.size}")
+    return Mesh(devs.reshape(sizes), names)

@@ -1,0 +1,66 @@
+"""Straggler / failure detection at the step level.
+
+The OCC paper's bulk-synchronous epochs are themselves the straggler story
+for the *algorithm* (epoch size b bounds the blast radius of a slow worker).
+For training we add a host-side watchdog: per-step wall-time EWMA with a
+multiplicative threshold; breaches emit StragglerEvents that the launcher
+acts on (re-dispatch, shrink via elastic.plan_shrunk_mesh, or ignore).
+
+This is host-side control-plane logic — it works identically with 1 or
+4096 devices, and the tests drive it with synthetic timings.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+__all__ = ["StragglerEvent", "StepWatchdog", "HeartbeatTracker"]
+
+
+@dataclass(frozen=True)
+class StragglerEvent:
+    step: int
+    elapsed: float
+    ewma: float
+    ratio: float
+
+
+@dataclass
+class StepWatchdog:
+    threshold: float = 3.0        # step slower than threshold x EWMA -> event
+    alpha: float = 0.1            # EWMA smoothing
+    warmup_steps: int = 5         # ignore compile/first steps
+    ewma: float | None = None
+    _seen: int = 0
+    events: list[StragglerEvent] = field(default_factory=list)
+
+    def observe(self, step: int, elapsed: float) -> StragglerEvent | None:
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            return None
+        if self.ewma is None:
+            self.ewma = elapsed
+            return None
+        event = None
+        ratio = elapsed / max(self.ewma, 1e-9)
+        if ratio > self.threshold:
+            event = StragglerEvent(step, elapsed, self.ewma, ratio)
+            self.events.append(event)
+            # do not fold outliers into the EWMA
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * elapsed
+        return event
+
+
+@dataclass
+class HeartbeatTracker:
+    """Host-level liveness: hosts check in each step; silence -> dead."""
+    timeout: float = 60.0
+    last_seen: dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host_id: int, now: float | None = None):
+        self.last_seen[host_id] = now if now is not None else time.time()
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.time()
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout]

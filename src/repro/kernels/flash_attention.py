@@ -1,0 +1,120 @@
+"""Causal flash-attention forward kernel (Pallas TPU), GQA-aware.
+
+Used on the prefill / serving path.  Streaming softmax with running
+(max, sum, acc) scratch carried across KV tiles; KV tiles strictly above the
+diagonal are skipped via pl.when (the TPU grid is sequential, so skipped
+steps cost nothing).  GQA: the kv-head index map is h // group, so grouped
+KV is never materialized per-query-head in HBM.
+
+Block defaults (bq=bk=128, Dh<=256) keep the VMEM working set
+(bq*Dh + 2*bk*Dh + bq*bk floats) small and MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+               *, scale: float, bq: int, bk: int, causal: bool, nk: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal: KV tile fully above the diagonal contributes nothing.
+    needed = (not causal) or (kb * bk <= qb * bq + bq - 1)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)                # (bk, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qi = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ki = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(ki <= qi, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kb == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "scale", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh) with H % Hkv == 0."""
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    if scale is None:
+        scale = dh ** -0.5
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, "seq must divide block sizes"
+    nq, nk = s // bq, s // bk
+    grid = (b * h, nq, nk)
+
+    def q_map(bh, i, j):
+        return (bh, i, 0)
+
+    # kv head for flattened (b*h) index: b_idx = bh // h ; kv = (bh % h) // group
+    def kv_index(bh, i, j):
+        b_idx = bh // h
+        kv_h = (bh % h) // group
+        return (b_idx * hkv + kv_h, j, 0)
+
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * hkv, s, dh)
+    vf = v.reshape(b * hkv, s, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, bq=bq, bk=bk,
+                          causal=causal, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_map),
+            pl.BlockSpec((1, bk, dh), kv_index),
+            pl.BlockSpec((1, bk, dh), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, dh)

@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the TPU target the Pallas path runs natively; on this CPU container the
+kernels execute under interpret=True (kernel body in Python) for
+correctness, and callers default to the jnp reference for speed.  The
+`backend` knob makes the choice explicit and testable:
+
+  backend="auto"      -> pallas on TPU, ref elsewhere (production default)
+  backend="pallas"    -> pallas, interpret=True off-TPU (kernel validation)
+  backend="ref"       -> pure-jnp oracle
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.dpmeans_assign import dpmeans_assign as _dpmeans_assign
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.swiglu import swiglu as _swiglu
+
+__all__ = ["pairwise_argmin", "flash_attention", "rmsnorm", "swiglu",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    if backend == "auto":
+        return (True, False) if on_tpu() else (False, False)
+    if backend == "pallas":
+        return True, not on_tpu()
+    if backend == "ref":
+        return False, False
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def pairwise_argmin(x, centers, mask=None, backend: str = "auto", **blocks):
+    use_pallas, interp = _resolve(backend)
+    if mask is None:
+        mask = jnp.ones((centers.shape[0],), bool)
+    if use_pallas:
+        return _dpmeans_assign(x, centers, mask, interpret=interp, **blocks)
+    return _ref.pairwise_argmin_ref(x, centers, mask)
+
+
+def flash_attention(q, k, v, causal=True, scale=None, backend: str = "auto",
+                    **blocks):
+    use_pallas, interp = _resolve(backend)
+    if use_pallas:
+        return _flash_attention(q, k, v, causal=causal, scale=scale,
+                                interpret=interp, **blocks)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def rmsnorm(x, weight, eps: float = 1e-6, backend: str = "auto", **blocks):
+    use_pallas, interp = _resolve(backend)
+    if use_pallas:
+        return _rmsnorm(x, weight, eps=eps, interpret=interp, **blocks)
+    return _ref.rmsnorm_ref(x, weight, eps=eps)
+
+
+def swiglu(gate, up, backend: str = "auto", **blocks):
+    use_pallas, interp = _resolve(backend)
+    if use_pallas:
+        return _swiglu(gate, up, interpret=interp, **blocks)
+    return _ref.swiglu_ref(gate, up)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each `<name>_ref` is the semantic spec; kernel sweep tests assert_allclose
+against these across shapes and dtypes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+__all__ = ["pairwise_argmin_ref", "flash_attention_ref", "rmsnorm_ref",
+           "swiglu_ref"]
+
+
+def pairwise_argmin_ref(x: jnp.ndarray, centers: jnp.ndarray,
+                        mask: jnp.ndarray | None = None):
+    """Min squared distance + argmin over centers.  x (N,D), centers (K,D)."""
+    xf = x.astype(jnp.float32)
+    cf = centers.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+    c2 = jnp.sum(cf * cf, axis=-1)[None, :]
+    d2 = jnp.maximum(x2 + c2 - 2.0 * (xf @ cf.T), 0.0)
+    if mask is not None:
+        d2 = jnp.where(mask[None, :], d2, jnp.inf)
+    return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, scale: float | None = None):
+    """Reference attention.  q (B,H,S,Dh); k,v (B,Hkv,S,Dh); GQA broadcast."""
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    kq = jnp.repeat(k, g, axis=1)
+    vq = jnp.repeat(v, g, axis=1)
+    if scale is None:
+        scale = dh ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(ms + eps)) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_ref(gate: jnp.ndarray, up: jnp.ndarray):
+    gf = gate.astype(jnp.float32)
+    return (jax.nn.silu(gf) * up.astype(jnp.float32)).astype(gate.dtype)

@@ -1,0 +1,47 @@
+"""Fused SwiGLU activation kernel: silu(gate) * up in one VMEM pass.
+
+Avoids materializing silu(gate) in HBM between the two ops — a pure
+memory-roofline win on the MLP path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["swiglu"]
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * jax.lax.logistic(g) * u).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray, block_rows: int = 256,
+           interpret: bool = False):
+    """Elementwise silu(gate) * up; shapes must match."""
+    assert gate.shape == up.shape
+    orig_shape = gate.shape
+    d = orig_shape[-1]
+    gf = gate.reshape(-1, d)
+    uf = up.reshape(-1, d)
+    n = gf.shape[0]
+    br = min(block_rows, n)
+    pad = (-n) % br
+    if pad:
+        gf = jnp.concatenate([gf, jnp.zeros((pad, d), gate.dtype)], 0)
+        uf = jnp.concatenate([uf, jnp.zeros((pad, d), up.dtype)], 0)
+    out = pl.pallas_call(
+        _swiglu_kernel,
+        grid=(gf.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(gf.shape, gate.dtype),
+        interpret=interpret,
+    )(gf, uf)
+    return out[:n].reshape(orig_shape)

@@ -1,0 +1,200 @@
+"""ShapeDtypeStruct stand-ins and sharding specs for every dry-run cell.
+
+`input_specs(arch, shape)` follows the shannon/kernels pattern: weak-type-
+correct, shardable, zero allocation.  `cell_functions` builds the jitted
+train_step / serve_step with in/out shardings for a given mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, TrainConfig
+from repro.distributed.shardings import (
+    ShardCtx, batch_spec, current_ctx, param_specs, spec_for)
+from repro.models.model import Model
+from repro.training.step import TrainState, make_train_step, train_state_init
+
+__all__ = ["input_specs", "state_specs", "cache_specs", "pick_decode_mode",
+           "CellPlan", "plan_cell"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model-input stand-ins for one cell (no device allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        if arch.frontend:
+            specs["frontend"] = _sds((b, arch.frontend_len, arch.frontend_dim),
+                                     jnp.float32)
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+    # decode: one new token against a cache of seq_len
+    return {
+        "tokens": _sds((b, 1), jnp.int32),
+        "pos": _sds((b,), jnp.int32),
+    }
+
+
+def input_spec_shardings(arch, shape, mesh, ctx: ShardCtx):
+    bspec = batch_spec(shape.global_batch, ctx)
+    sh = lambda *elems: NamedSharding(mesh, P(*elems))
+    out = {"tokens": sh(bspec, None)}
+    if shape.kind in ("train", "prefill"):
+        if shape.kind == "train":
+            out["labels"] = sh(bspec, None)
+        if arch.frontend:
+            out["frontend"] = sh(bspec, None, None)
+    else:
+        out["pos"] = sh(bspec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# State / cache sharding specs
+# ---------------------------------------------------------------------------
+
+def state_specs(model: Model, tcfg: TrainConfig, ctx: ShardCtx):
+    """PartitionSpec tree for TrainState (params + moments + ef)."""
+    state_sds = jax.eval_shape(
+        lambda: train_state_init(model.init(jax.random.key(0)), tcfg))
+    specs = param_specs(state_sds, ctx)   # regex rules see full paths
+    return state_sds, specs
+
+
+def pick_decode_mode(arch: ArchConfig, shape: ShapeConfig, ctx: ShardCtx) -> str:
+    """cp when head-TP can't shard the cache (kv % model != 0) or the cache
+    is long enough that seq-sharding wins on memory; else tp."""
+    if ctx.force_decode_mode:
+        return ctx.force_decode_mode
+    m = ctx.axis_size(ctx.model_axis)
+    if m <= 1:
+        return "tp"
+    if shape.seq_len >= 262_144:
+        return "cp"
+    if arch.n_kv_heads % m != 0:
+        return "cp"
+    return "tp"
+
+
+def cache_specs(model: Model, shape: ShapeConfig, ctx: ShardCtx, mode: str):
+    """Spec tree mirroring model.init_cache output."""
+    cfg = model.cfg
+    b = shape.global_batch
+    cache_sds = jax.eval_shape(lambda: model.init_cache(b, shape.seq_len))
+    bsp = batch_spec(b, ctx)
+    mdl = ctx.model_axis
+
+    def leaf_spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shp = leaf.shape
+        if name in ("k", "v", "ck", "cv"):      # (L,B,S,H,hd)
+            if mode == "cp" and name in ("k", "v"):
+                return spec_for(shp, (None, bsp, mdl, None, None), ctx)
+            return spec_for(shp, (None, bsp, None, mdl, None), ctx)
+        if name == "conv":                       # (L,B,w-1,d_inner)
+            return spec_for(shp, (None, bsp, None, mdl), ctx)
+        if name == "ssm":                        # (L,B,H,hd,N)
+            return spec_for(shp, (None, bsp, mdl, None, None), ctx)
+        if name == "c" and len(shp) == 5:        # mLSTM (L,B,H,hd,hd)
+            return spec_for(shp, (None, bsp, None, mdl, None), ctx)
+        if name in ("c", "n", "h", "m"):         # (L,B,H,hd) / (L,B,H)
+            return spec_for(shp, ((None, bsp) + (None,) * (len(shp) - 2)), ctx)
+        return P(*([None] * len(shp)))
+
+    specs = jax.tree_util.tree_map_with_path(leaf_spec, cache_sds)
+    return cache_sds, specs
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly
+# ---------------------------------------------------------------------------
+
+class CellPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    def __init__(self, fn, args_sds, in_shardings, out_shardings, meta):
+        self.fn = fn
+        self.args_sds = args_sds
+        self.in_shardings = in_shardings
+        self.out_shardings = out_shardings
+        self.meta = meta
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings)
+        return jitted.lower(*self.args_sds)
+
+
+def plan_cell(arch: ArchConfig, shape: ShapeConfig, mesh,
+              tcfg: TrainConfig | None = None) -> CellPlan:
+    ctx = current_ctx()
+    assert ctx.mesh is mesh, "wrap plan_cell in shard_ctx(mesh)"
+    model = Model(arch)
+    tcfg = tcfg or TrainConfig()
+    meta: dict[str, Any] = {
+        "arch": arch.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": dict(mesh.shape), "batch_spec": str(batch_spec(shape.global_batch, ctx)),
+    }
+
+    if shape.kind == "train":
+        state_sds, sspecs = state_specs(model, tcfg, ctx)
+        train_step = make_train_step(model, tcfg)
+        batch_sds = input_specs(arch, shape)
+        in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                              is_leaf=lambda s: isinstance(s, P)),
+                 input_spec_shardings(arch, shape, mesh, ctx))
+        out_sh = (in_sh[0], None)
+
+        def step_fn(state, batch):
+            return train_step(state, batch)
+
+        return CellPlan(step_fn, (state_sds, batch_sds), in_sh, out_sh, meta)
+
+    if shape.kind == "prefill":
+        params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        pspecs = param_specs(params_sds, ctx)
+        mode = pick_decode_mode(arch, shape, ctx)
+        cache_sds, cspecs = cache_specs(model, shape, ctx, mode)
+        batch_sds = input_specs(arch, shape)
+        meta["decode_mode"] = mode
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch)
+
+        in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                              is_leaf=lambda s: isinstance(s, P)),
+                 input_spec_shardings(arch, shape, mesh, ctx))
+        return CellPlan(prefill_fn, (params_sds, batch_sds), in_sh, None, meta)
+
+    # decode
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    pspecs = param_specs(params_sds, ctx)
+    mode = pick_decode_mode(arch, shape, ctx)
+    cache_sds, cspecs = cache_specs(model, shape, ctx, mode)
+    io = input_specs(arch, shape)
+    meta["decode_mode"] = mode
+
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos, decode_mode=mode)
+
+    nsh = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                    is_leaf=lambda s: isinstance(s, P))
+    bsp = batch_spec(shape.global_batch, ctx)
+    in_sh = (nsh(pspecs), nsh(cspecs),
+             NamedSharding(mesh, P(bsp, None)), NamedSharding(mesh, P(bsp)))
+    out_sh = (NamedSharding(mesh, P(bsp, None)), nsh(cspecs))
+    return CellPlan(serve_step, (params_sds, cache_sds, io["tokens"], io["pos"]),
+                    in_sh, out_sh, meta)

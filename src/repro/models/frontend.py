@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment: `input_specs()` provides
+precomputed frame/patch embeddings; the ViT / audio encoder itself is out
+of scope).  The projector maps stub embeddings into the backbone width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+__all__ = ["init_frontend", "frontend_project"]
+
+
+def init_frontend(key, cfg):
+    if not cfg.frontend:
+        return {}
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "fe_w1": dense_init(k1, cfg.frontend_dim, cfg.d_model, dt),
+        "fe_w2": dense_init(k2, cfg.d_model, cfg.d_model, dt),
+        "fe_norm": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def frontend_project(p, embeds, cfg):
+    """embeds (B, F, frontend_dim) -> (B, F, d_model)."""
+    h = embeds.astype(jnp.dtype(cfg.dtype)) @ p["fe_w1"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return h @ p["fe_w2"]

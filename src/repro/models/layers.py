@@ -1,0 +1,108 @@
+"""Shared neural-net layers (functional, pure-dict params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.distributed.shardings import constrain, res_constrain
+
+__all__ = ["dense_init", "rmsnorm", "rope_freqs", "apply_rope", "mlp_init",
+           "mlp_apply", "embed_init", "cross_entropy_chunked"]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # "ref" backend: differentiable everywhere (the fused Pallas kernel is
+    # the inference-path option; see kernels/ops.py).
+    return ops.rmsnorm(x, w, eps=eps, backend="ref")
+
+
+def rope_freqs(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> cos, sin of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x (..., S, H, hd) with cos/sin (..., S, hd//2) — rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]   # broadcast over head dim
+    s = sin[..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], -1).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * d_model ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, d_model, d_ff, dtype),
+        "wu": dense_init(ku, d_model, d_ff, dtype),
+        "wd": dense_init(kd, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x: jnp.ndarray, batch_axes) -> jnp.ndarray:
+    g = x @ p["wg"]
+    u = x @ p["wu"]
+    g = constrain(g, batch_axes, None, "model")
+    u = constrain(u, batch_axes, None, "model")
+    h = ops.swiglu(g, u, backend="ref")
+    out = h @ p["wd"]
+    return res_constrain(out, batch_axes)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-chunked cross entropy: never materializes (B, S, V) logits.
+# ---------------------------------------------------------------------------
+
+def cross_entropy_chunked(h: jnp.ndarray, lm_head: jnp.ndarray,
+                          labels: jnp.ndarray, batch_axes,
+                          seq_chunk: int = 512, unroll: bool = False) -> jnp.ndarray:
+    """Mean next-token CE.  h (B,S,D), lm_head (D,V), labels (B,S).
+
+    Scans over sequence chunks so peak logits memory is (B, chunk, V_shard);
+    the vocab dim is model-sharded, so the logsumexp reduction carries one
+    small all-reduce per chunk instead of an all-gather of full logits.
+    """
+    b, s, d = h.shape
+    v = lm_head.shape[1]
+    c = min(seq_chunk, s)
+    n_chunks = s // c if s % c == 0 else 1
+    if s % c != 0:
+        c = s
+        n_chunks = 1
+    hc = h.reshape(b, n_chunks, c, d).swapaxes(0, 1)        # (n, B, c, D)
+    lc = labels.reshape(b, n_chunks, c).swapaxes(0, 1)      # (n, B, c)
+
+    @jax.checkpoint   # backward recomputes the (B,c,V) logits per chunk
+    def chunk_ce(hx, lx):
+        logits = (hx.astype(jnp.float32) @ lm_head.astype(jnp.float32))
+        logits = constrain(logits, batch_axes, None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def chunk_loss(carry, inp):
+        hx, lx = inp
+        return carry + chunk_ce(hx, lx), None
+
+    total, _ = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, lc),
+                            unroll=True if unroll else 1)
+    return total / (b * s)

@@ -1,0 +1,195 @@
+"""Model assembly: init / loss / prefill / decode_step for every family.
+
+Parameter tree:
+  {"tok_embed": (V,D), "final_norm": (D,), "lm_head": (D,V),
+   "segments": {"seg_00": stacked-params, ...},     # scan stacks
+   "shared": {...} | absent,                        # zamba2 shared attn block
+   "frontend": {...} | absent,                      # vlm / audio projector stub
+   "encoder": {"segments": {...}, "norm": (D,)} | absent}
+
+Caches for decode are pytrees mirroring the segment structure:
+  {"seg_00": stacked cache, ..., "cross": {...} for enc-dec}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.shardings import constrain, batch_spec, res_constrain
+from repro.models import attention as attn_mod
+from repro.models.frontend import init_frontend, frontend_project
+from repro.models.layers import cross_entropy_chunked, embed_init, rmsnorm
+from repro.models.transformer import (
+    init_block, init_block_cache, run_stack_decode, run_stack_train,
+    segments_for,
+)
+
+__all__ = ["Model", "build_model"]
+
+
+def _seg_key(i: int) -> str:
+    return f"seg_{i:02d}"
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "tok_embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, dt).T
+
+        segs = segments_for(cfg)
+        seg_params: dict[str, Any] = {}
+        shared_params = None
+        skey = jax.random.split(keys[2], len(segs) + 1)
+        for i, (kind, count, shared) in enumerate(segs):
+            if shared:
+                if shared_params is None:
+                    shared_params = init_block(skey[i], cfg, kind)
+                continue
+            if count == 1:
+                seg_params[_seg_key(i)] = init_block(skey[i], cfg, kind)
+            else:
+                lkeys = jax.random.split(skey[i], count)
+                seg_params[_seg_key(i)] = jax.vmap(
+                    lambda k: init_block(k, cfg, kind))(lkeys)
+        params["segments"] = seg_params
+        if shared_params is not None:
+            params["shared"] = shared_params
+        if cfg.frontend:
+            params["frontend"] = init_frontend(keys[3], cfg)
+        if cfg.is_encdec:
+            ekeys = jax.random.split(keys[4], cfg.enc_layers)
+            params["encoder"] = {
+                "segments": jax.vmap(
+                    lambda k: init_block(k, cfg, "enc_attn_mlp"))(ekeys),
+                "norm": jnp.ones((cfg.d_model,), dt),
+            }
+        return params
+
+    # --------------------------------------------------------------- helpers
+    def _embed(self, params, batch):
+        """-> (x (B,S,D), n_prefix) with modality prefix if present."""
+        cfg = self.cfg
+        toks = batch["tokens"]
+        x = jnp.take(params["tok_embed"], toks, axis=0)
+        n_prefix = 0
+        if cfg.frontend and not cfg.is_encdec:     # vlm: prefix tokens
+            pre = frontend_project(params["frontend"], batch["frontend"], cfg)
+            pre = rmsnorm(pre, params["frontend"]["fe_norm"], cfg.norm_eps)
+            x = jnp.concatenate([pre.astype(x.dtype), x], axis=1)
+            n_prefix = pre.shape[1]
+        b = x.shape[0]
+        return res_constrain(x, batch_spec(b)), n_prefix
+
+    def _encode(self, params, batch):
+        """Audio enc-dec: run the (stub-fed) encoder -> enc_out (B,F,D)."""
+        cfg = self.cfg
+        enc_x = frontend_project(params["frontend"], batch["frontend"], cfg)
+        enc_x = rmsnorm(enc_x, params["frontend"]["fe_norm"], cfg.norm_eps)
+        positions = jnp.arange(enc_x.shape[1], dtype=jnp.float32)
+        enc_x, _ = run_stack_train(params["encoder"]["segments"], enc_x, cfg,
+                                   "enc_attn_mlp", positions,
+                                   cfg.enc_layers, shared=False)
+        return rmsnorm(enc_x, params["encoder"]["norm"], cfg.norm_eps)
+
+    def _body_train(self, params, x, positions, enc_out=None,
+                    want_cache: bool = False):
+        cfg = self.cfg
+        segs = segments_for(cfg)
+        caches = {}
+        for i, (kind, count, shared) in enumerate(segs):
+            p_seg = params["shared"] if shared else params["segments"][_seg_key(i)]
+            x, cache = run_stack_train(p_seg, x, cfg, kind, positions, count,
+                                       shared, cross_kv=enc_out,
+                                       want_cache=want_cache)
+            if want_cache:
+                caches[_seg_key(i)] = cache
+        return x, caches
+
+    def _lm_head(self, params):
+        if self.cfg.tie_embeddings:
+            return params["tok_embed"].T
+        return params["lm_head"]
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.is_encdec else None
+        x, n_prefix = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.float32)
+        x, _ = self._body_train(params, x, positions, enc_out)
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        b = h.shape[0]
+        return cross_entropy_chunked(h, self._lm_head(params), batch["labels"],
+                                     batch_spec(b), seq_chunk=cfg.attn_chunk,
+                                     unroll=cfg.unroll)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch):
+        """Forward + caches; returns (last-token logits (B,V), caches)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.is_encdec else None
+        x, _ = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.float32)
+        x, caches = self._body_train(params, x, positions, enc_out,
+                                     want_cache=True)
+        h = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = (h @ self._lm_head(params))[:, 0]
+        return logits.astype(jnp.float32), caches
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        segs = segments_for(cfg)
+        caches: dict[str, Any] = {}
+        for i, (kind, count, shared) in enumerate(segs):
+            one = init_block_cache(cfg, kind, batch, cache_len)
+            caches[_seg_key(i)] = jax.tree.map(
+                lambda a: jnp.zeros((count,) + a.shape, a.dtype), one)
+        return caches
+
+    # ----------------------------------------------------------------- decode
+    def decode_step(self, params, caches, tokens, pos, decode_mode: str = "tp"):
+        """tokens (B,1) int32, pos (B,) int32 -> (logits (B,V) f32, caches)."""
+        cfg = self.cfg
+        x = jnp.take(params["tok_embed"], tokens, axis=0)
+        b = x.shape[0]
+        x = constrain(x, batch_spec(b), None, None)
+        segs = segments_for(cfg)
+        new_caches = dict(caches)
+        for i, (kind, count, shared) in enumerate(segs):
+            p_seg = params["shared"] if shared else params["segments"][_seg_key(i)]
+            x, c_new = run_stack_decode(
+                p_seg, x, cfg, kind, caches[_seg_key(i)], pos, count, shared,
+                decode_mode=decode_mode)
+            new_caches[_seg_key(i)] = c_new
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = (h @ self._lm_head(params))[:, 0]
+        return logits.astype(jnp.float32), new_caches
+
+    # ------------------------------------------------------------- param count
+    def param_count(self, params=None) -> int:
+        import math
+        if params is None:
+            params = jax.eval_shape(self.init, jax.random.key(0))
+        return sum(math.prod(a.shape) for a in jax.tree.leaves(params))
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

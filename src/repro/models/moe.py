@@ -1,0 +1,218 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-based dispatch (EP).
+
+Implementations (cfg.moe.impl):
+  capacity — MaxText/Mesh-TF-style dispatch/combine einsums with per-sequence
+             groups and capacity C = ceil(S*k/E * cf); experts sharded over
+             the model axis (EP), tokens over data.  GSPMD lowers the
+             dispatch einsums to the EP collectives visible in the dry-run.
+  dense    — every expert runs on every token, weighted by router probs
+             (E/k x extra FLOPs; used as the drop-free oracle in tests).
+  ragged   — sort-by-expert + lax.ragged_dot, drop-free and FLOP-minimal
+             (the §Perf hillclimb lever for MoE cells).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constrain, batch_spec, res_constrain
+from repro.kernels import ops
+from repro.models.layers import dense_init
+
+__all__ = ["init_moe", "moe_apply"]
+
+
+def init_moe(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, d, e, jnp.float32),  # router kept f32
+        "we_g": (jax.random.normal(kg, (e, d, f), jnp.float32) * d ** -0.5).astype(dt),
+        "we_u": (jax.random.normal(ku, (e, d, f), jnp.float32) * d ** -0.5).astype(dt),
+        "we_d": (jax.random.normal(kd, (e, f, d), jnp.float32) * f ** -0.5).astype(dt),
+    }
+
+
+def _router(p, x, cfg):
+    """-> (topk_probs (B,S,k), topk_idx (B,S,k)) with renormalized gates."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.moe.top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+    return top_p, top_i
+
+
+def _expert_ffn(xe, p):
+    """xe (..., E, C, D) grouped tokens -> SwiGLU expert FFN."""
+    g = jnp.einsum("becd,edf->becf", xe, p["we_g"])
+    u = jnp.einsum("becd,edf->becf", xe, p["we_u"])
+    h = ops.swiglu(g, u, backend="ref")
+    return jnp.einsum("becf,efd->becd", h, p["we_d"])
+
+
+def moe_apply(p, x, cfg, batch_axes):
+    impl = cfg.moe.impl
+    if impl == "dense":
+        return _moe_dense(p, x, cfg, batch_axes)
+    if impl == "ragged":
+        return _moe_ragged(p, x, cfg, batch_axes)
+    if impl == "gather":
+        return _moe_gather(p, x, cfg, batch_axes)
+    if impl == "hybrid":
+        return _moe_hybrid(p, x, cfg, batch_axes)
+    return _moe_capacity(p, x, cfg, batch_axes)
+
+
+def _moe_hybrid(p, x, cfg, batch_axes):
+    """Gather dispatch (zero-FLOP) + einsum combine (§Perf B6).
+
+    The scatter-add combine forces an f32 model-axis all-reduce of the
+    (B,S,D) output; the einsum combine lets GSPMD all-gather the (much
+    smaller) expert outputs instead, at the cost of re-introducing half of
+    the dispatch-einsum FLOPs (2 T E C D)."""
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    cap = min(int(math.ceil(s * k / e * cfg.moe.capacity_factor)), s)
+    top_p, top_i = _router(p, x, cfg)
+    src, hit, wslot = _capacity_slots(top_p, top_i, e, cap)
+
+    xe = jnp.take_along_axis(x[:, None, :, :], src[..., None], axis=2)
+    xe = xe * hit[..., None].astype(x.dtype)
+    xe = constrain(xe, batch_axes, "model", None, None)
+    ye = _expert_ffn(xe, p)
+    ye = constrain(ye, batch_axes, "model", None, None)
+
+    combine = (jax.nn.one_hot(src, s, dtype=jnp.float32)
+               * (wslot * hit)[..., None]).astype(x.dtype)   # (B,E,C,S)
+    out = jnp.einsum("becs,becd->bsd", combine,
+                     ye.astype(x.dtype), preferred_element_type=jnp.float32)
+    return res_constrain(out.astype(x.dtype), batch_axes)
+
+
+def _capacity_slots(top_p, top_i, e: int, cap: int):
+    """Shared slot assignment: for each (batch, expert, cap-slot) compute the
+    source token index, validity, and gate weight.  Same drop semantics as
+    the einsum dispatch (token order priority)."""
+    b, s, k = top_i.shape
+    src = jnp.zeros((b, e, cap), jnp.int32)
+    hit = jnp.zeros((b, e, cap), bool)
+    wslot = jnp.zeros((b, e, cap), jnp.float32)
+    counts = jnp.zeros((b, e), jnp.int32)
+    bidx = jnp.arange(b)[:, None, None]
+    tok = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, 1))
+    for j in range(k):
+        m_j = jax.nn.one_hot(top_i[..., j], e, dtype=jnp.int32)       # (B,S,E)
+        pos_j = jnp.cumsum(m_j, axis=1) - 1 + counts[:, None, :]
+        keep = jnp.logical_and(m_j > 0, pos_j < cap)                  # (B,S,E)
+        pos_c = jnp.where(keep, pos_j, cap)     # out-of-range -> dropped
+        eidx = jnp.broadcast_to(jnp.arange(e)[None, None, :], keep.shape)
+        src = src.at[bidx, eidx, pos_c].set(
+            jnp.broadcast_to(tok, keep.shape), mode="drop")
+        hit = hit.at[bidx, eidx, pos_c].set(True, mode="drop")
+        wslot = wslot.at[bidx, eidx, pos_c].set(
+            jnp.broadcast_to(top_p[..., j:j + 1], keep.shape), mode="drop")
+        counts = counts + jnp.sum(m_j, axis=1)
+    return src, hit, wslot
+
+
+def _moe_gather(p, x, cfg, batch_axes):
+    """Capacity-layout MoE with gather/scatter dispatch instead of the
+    one-hot einsums (§Perf hillclimb: the dispatch/combine einsums cost
+    2 x (2 T E C D) FLOPs — ~28% of this MoE block; a gather moves the same
+    bytes with no MXU work)."""
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    cap = min(int(math.ceil(s * k / e * cfg.moe.capacity_factor)), s)
+    top_p, top_i = _router(p, x, cfg)
+    src, hit, wslot = _capacity_slots(top_p, top_i, e, cap)
+
+    xe = jnp.take_along_axis(x[:, None, :, :], src[..., None], axis=2)  # (B,E,C,D)
+    xe = xe * hit[..., None].astype(x.dtype)
+    xe = constrain(xe, batch_axes, "model", None, None)
+    ye = _expert_ffn(xe, p)
+    ye = constrain(ye, batch_axes, "model", None, None)
+
+    # combine in the compute dtype: the scatter-add's model-axis psum then
+    # moves bf16, not f32 (§Perf B5) — gate weights are <= 1 so bf16 is safe
+    yw = (ye.astype(jnp.float32) * (wslot * hit)[..., None]).astype(x.dtype)
+    out = jnp.zeros((b, s, d), x.dtype)
+    bidx = jnp.arange(b)[:, None, None]
+    out = out.at[bidx, src, :].add(yw, mode="drop")
+    return res_constrain(out, batch_axes)
+
+
+def _moe_dense(p, x, cfg, batch_axes):
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    top_p, top_i = _router(p, x, cfg)
+    gates = jnp.zeros((b, s, e), jnp.float32)
+    gates = jax.vmap(lambda g, i, v: g.at[i].add(v), in_axes=(0, 0, 0))(
+        gates.reshape(-1, e), top_i.reshape(-1, k), top_p.reshape(-1, k)
+    ).reshape(b, s, e)
+    g = jnp.einsum("bsd,edf->bsef", x, p["we_g"])
+    u = jnp.einsum("bsd,edf->bsef", x, p["we_u"])
+    h = ops.swiglu(g, u, backend="ref")
+    y = jnp.einsum("bsef,efd->bsed", h, p["we_d"])
+    out = jnp.einsum("bsed,bse->bsd", y.astype(jnp.float32), gates)
+    return res_constrain(out.astype(x.dtype), batch_axes)
+
+
+def _moe_capacity(p, x, cfg, batch_axes):
+    """Dispatch/combine einsum MoE.  Each sequence is a routing group."""
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    cap = int(math.ceil(s * k / e * cfg.moe.capacity_factor))
+    cap = min(cap, s)
+    top_p, top_i = _router(p, x, cfg)
+
+    # Position of each (token, choice) within its expert's capacity buffer.
+    combine = jnp.zeros((b, s, e, cap), jnp.float32)
+    counts = jnp.zeros((b, e), jnp.int32)
+    for j in range(k):
+        m_j = jax.nn.one_hot(top_i[..., j], e, dtype=jnp.int32)        # (B,S,E)
+        pos_j = jnp.cumsum(m_j, axis=1) - 1 + counts[:, None, :]       # (B,S,E)
+        keep = jnp.logical_and(m_j > 0, pos_j < cap)
+        pos_c = jnp.clip(pos_j, 0, cap - 1)
+        oh = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32) * keep[..., None]
+        combine = combine + oh * top_p[..., j][..., None, None] * m_j[..., None]
+        counts = counts + jnp.sum(m_j, axis=1)
+
+    dispatch = (combine > 0).astype(x.dtype)                           # (B,S,E,C)
+    combine = combine.astype(jnp.float32)
+    dispatch = constrain(dispatch, batch_axes, None, "model", None)
+    xe = jnp.einsum("bsd,bsec->becd", x, dispatch)                     # (B,E,C,D)
+    xe = constrain(xe, batch_axes, "model", None, None)
+    ye = _expert_ffn(xe, p)
+    ye = constrain(ye, batch_axes, "model", None, None)
+    out = jnp.einsum("becd,bsec->bsd", ye.astype(jnp.float32), combine)
+    return res_constrain(out.astype(x.dtype), batch_axes)
+
+
+def _moe_ragged(p, x, cfg, batch_axes):
+    """Sort-by-expert + ragged_dot: drop-free, FLOP-minimal dispatch."""
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    top_p, top_i = _router(p, x, cfg)
+    t = b * s
+    xf = x.reshape(t, d)
+    flat_e = top_i.reshape(t * k)                       # expert of each slot
+    flat_w = top_p.reshape(t * k)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    xe = xf[flat_tok[order]]                            # (T*k, D) sorted
+    group_sizes = jnp.bincount(flat_e, length=e).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(xe, p["we_g"], group_sizes)
+    u = jax.lax.ragged_dot(xe, p["we_u"], group_sizes)
+    h = ops.swiglu(g, u, backend="ref")
+    y = jax.lax.ragged_dot(h, p["we_d"], group_sizes)   # (T*k, D)
+
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[flat_tok[order]].add(
+        y.astype(jnp.float32) * flat_w[order][:, None])
+    return constrain(out.reshape(b, s, d).astype(x.dtype), batch_axes, None, None)

@@ -1,0 +1,172 @@
+"""Mamba2-style SSD (state-space duality) block.
+
+Simplified but faithful Mamba2: single B/C group shared across heads,
+scalar A per head, depthwise causal conv on the x branch, gated RMSNorm
+before the output projection.
+
+Training/prefill uses the *chunked* SSD form: within a chunk of Q tokens the
+recurrence is evaluated as a masked (Q x Q) matmul (MXU work, like
+attention with a decay mask); across chunks a lax.scan carries the
+(B, H, hd, N) state.  Decode is the O(1) recurrent update.
+
+State cache for decode: {"conv": (B, w-1, d_inner), "ssm": (B, H, hd, N)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constrain, res_constrain
+from repro.models.layers import dense_init
+
+__all__ = ["init_mamba", "mamba_train", "mamba_decode", "init_ssm_cache"]
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_inner, h, n = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        # z (gate), x, B, C, dt  packed in one input projection
+        "in_w": dense_init(ks[0], d, 2 * d_inner + 2 * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, d_inner), jnp.float32)
+                   * cfg.conv_width ** -0.5).astype(dt),
+        "a_log": jnp.zeros((h,), jnp.float32),        # A = -exp(a_log)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gn": jnp.ones((d_inner,), dt),               # gated RMSNorm weight
+        "out_w": dense_init(ks[4], d_inner, d, dt),
+    }
+
+
+def _split_in(p, x, cfg):
+    d_inner, h, n = _dims(cfg)
+    proj = x @ p["in_w"]
+    z, xs, bb, cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, xs, bb.astype(jnp.float32), cc.astype(jnp.float32), dt
+
+
+def _conv_causal(xs, w, state=None):
+    """Depthwise causal conv, width w.shape[0]; state (B, w-1, d_inner)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xs.shape[:1] + (width - 1,) + xs.shape[2:], xs.dtype)
+    else:
+        pad = state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)
+    out = sum(xp[:, i:i + xs.shape[1]] * w[i][None, None, :].astype(xs.dtype)
+              for i in range(width))
+    new_state = xp[:, xs.shape[1]:]     # last width-1 inputs
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xs.dtype), new_state
+
+
+def _gated_norm(y, z, gn, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(ms + eps) * gn.astype(jnp.float32)
+
+
+def mamba_train(p, x, cfg, batch_axes):
+    """x (B,S,D) -> (B,S,D); chunked SSD scan.  Returns (out, final_cache)."""
+    b, s, d = x.shape
+    d_inner, h, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    z, xs, bb, cc, dt = _split_in(p, x, cfg)
+    xs = constrain(xs, batch_axes, None, "model")
+    xs, conv_state = _conv_causal(xs, p["conv_w"])
+    a = -jnp.exp(p["a_log"])                          # (H,) negative
+
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        q = s
+    nc = s // q
+    # Keep the big chunk operands in the compute dtype (bf16 on TPU) with
+    # f32 accumulation inside the einsums — halves HBM traffic and the bytes
+    # crossing TP collectives for their gradients (§Perf hillclimb C2).
+    cdt = xs.dtype
+    xh = xs.reshape(b, nc, q, h, hd)
+    bbc = bb.reshape(b, nc, q, n).astype(cdt)
+    ccc = cc.reshape(b, nc, q, n).astype(cdt)
+    dtc = dt.reshape(b, nc, q, h)
+
+    def chunk_fwd(state, xck, bk, ck, dk):
+        # dk (dt) stays f32: it feeds exponentials
+        la = dk * a[None, None, :]                     # (B,q,H) log-decay
+        cum = jnp.cumsum(la, axis=1)                   # inclusive
+        # intra-chunk: M[t,s] = exp(cum_t - cum_s) for s <= t
+        mdiff = cum[:, :, None, :] - cum[:, None, :, :]        # (B,q,q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        m = jnp.where(tri[None, :, :, None], jnp.exp(mdiff), 0.0)
+        g = jnp.einsum("btn,bsn->bts", ck, bk,
+                       preferred_element_type=jnp.float32)     # (B,q,q)
+        w = g[..., None] * m * dk[:, None, :, :]               # (B,t,s,H) f32
+        y_intra = jnp.einsum("btsh,bshd->bthd", w.astype(cdt), xck,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: y_inter[t] = exp(cum_t) * C_t . state
+        dec_t = jnp.exp(cum)                                   # (B,q,H)
+        y_inter = jnp.einsum("btn,bhdn,bth->bthd",
+                             ck.astype(jnp.float32), state, dec_t)
+        # state update: S' = exp(cum_end) S + sum_s exp(cum_end - cum_s) dt_s x_s B_s^T
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)                # (B,q,H)
+        upd = jnp.einsum("bshd,bsn,bsh,bsh->bhdn",
+                         xck.astype(jnp.float32), bk.astype(jnp.float32),
+                         dk, dec_end)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + upd
+        return state, y_intra + y_inter
+
+    if cfg.remat != "none":
+        # flash-style: each chunk's backward recomputes its own (q,q,H)
+        # decay/score tensors instead of keeping nc of them alive (C1).
+        chunk_fwd = jax.checkpoint(chunk_fwd)
+
+    def chunk(state, inp):
+        xck, bk, ck, dk = inp                          # (B,q,H,hd),(B,q,N),(B,q,H)
+        return chunk_fwd(state, xck, bk, ck, dk)
+
+    state0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    state, ys = jax.lax.scan(
+        chunk, state0,
+        (xh.swapaxes(0, 1), bbc.swapaxes(0, 1), ccc.swapaxes(0, 1), dtc.swapaxes(0, 1)),
+        unroll=True if cfg.unroll else 1)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, hd)
+    y = y + xh.astype(jnp.float32).reshape(b, s, h, hd) \
+        * p["d_skip"][None, None, :, None]
+    y = _gated_norm(y.reshape(b, s, d_inner), z, p["gn"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_w"]
+    cache = {"conv": conv_state, "ssm": state}
+    return res_constrain(out, batch_axes), cache
+
+
+def init_ssm_cache(cfg, batch: int):
+    d_inner, h, n = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, d_inner), jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32)}
+
+
+def mamba_decode(p, x, cfg, cache, batch_axes):
+    """One-token recurrent update.  x (B,1,D)."""
+    b = x.shape[0]
+    d_inner, h, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    z, xs, bb, cc, dt = _split_in(p, x, cfg)
+    xs, conv_state = _conv_causal(xs, p["conv_w"], cache["conv"])
+    a = -jnp.exp(p["a_log"])
+    xh = xs.reshape(b, h, hd).astype(jnp.float32)
+    dt1 = dt.reshape(b, h)
+    da = jnp.exp(dt1 * a[None, :])                               # (B,H)
+    upd = jnp.einsum("bhd,bn,bh->bhdn", xh, bb.reshape(b, n), dt1)
+    state = cache["ssm"] * da[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhdn->bhd", cc.reshape(b, n), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = _gated_norm(y.reshape(b, 1, d_inner), z, p["gn"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_w"]
+    return res_constrain(out, batch_axes), {"conv": conv_state, "ssm": state}

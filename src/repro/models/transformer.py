@@ -1,0 +1,278 @@
+"""Transformer blocks and scan-over-layers stacks.
+
+A model body is a list of *segments*; each segment is a homogeneous stack of
+blocks whose parameters are stacked along a leading layer dim and executed
+with lax.scan (keeps HLO size and compile time O(1) in depth — the MaxText
+pattern).  Hybrid architectures (zamba2: Mamba2 + shared attention, xLSTM:
+mLSTM + sLSTM) interleave segments; "shared" segments reuse one parameter
+set at several depths (weights shared, per-application KV caches distinct).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constrain, batch_spec, res_constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import mlp_init, mlp_apply, rmsnorm
+
+__all__ = ["SEGMENT_KINDS", "init_block", "block_train", "block_decode",
+           "init_block_cache", "run_stack_train", "run_stack_decode",
+           "segments_for"]
+
+
+# ---------------------------------------------------------------------------
+# Segment layout per architecture family
+# ---------------------------------------------------------------------------
+
+def segments_for(cfg) -> list[tuple[str, int, bool]]:
+    """-> [(kind, count, shared_params)] executed in order."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return [("attn_mlp", cfg.n_layers, False)]
+    if fam in ("moe",):
+        return [("attn_moe", cfg.n_layers, False)]
+    if fam == "hybrid":
+        segs: list[tuple[str, int, bool]] = []
+        k = cfg.attn_every
+        full, rem = divmod(cfg.n_layers, k)
+        for _ in range(full):
+            segs.append(("mamba", k, False))
+            segs.append(("shared_attn", 1, True))
+        if rem:
+            segs.append(("mamba", rem, False))
+        return segs
+    if fam == "ssm" and cfg.slstm_every:
+        segs = []
+        k = cfg.slstm_every
+        full, rem = divmod(cfg.n_layers, k)
+        for _ in range(full):
+            if k > 1:
+                segs.append(("mlstm", k - 1, False))
+            segs.append(("slstm", 1, False))
+        if rem:
+            segs.append(("mlstm", rem, False))
+        return segs
+    if fam == "ssm":
+        return [("mamba", cfg.n_layers, False)]
+    if fam == "audio":  # encoder-decoder handled by model.py with two bodies
+        return [("dec_attn_mlp", cfg.n_layers, False)]
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, kind: str):
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    ones = lambda: jnp.ones((cfg.d_model,), dt)
+    if kind in ("attn_mlp", "shared_attn", "enc_attn_mlp"):
+        p = {"norm1": ones(), **attn.init_attention(ks[0], cfg)}
+        if cfg.d_ff:
+            p["norm2"] = ones()
+            p.update(mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt))
+        return p
+    if kind == "attn_moe":
+        p = {"norm1": ones(), **attn.init_attention(ks[0], cfg),
+             "norm2": ones(), **moe_mod.init_moe(ks[1], cfg)}
+        return p
+    if kind == "dec_attn_mlp":
+        p = {"norm1": ones(), **attn.init_attention(ks[0], cfg),
+             "norm_x": ones(), **attn.init_attention(ks[1], cfg, cross=True),
+             "norm2": ones(), **mlp_init(ks[2], cfg.d_model, cfg.d_ff, dt)}
+        return p
+    if kind == "mamba":
+        return {"norm1": ones(), **ssm_mod.init_mamba(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"norm1": ones(), **xlstm_mod.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"norm1": ones(), **xlstm_mod.init_slstm(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def block_train(p, x, cfg, kind: str, positions, cross_kv=None, causal=True):
+    """-> (x, cache_contrib) — cache_contrib feeds prefill caches.
+
+    For dec_attn_mlp, `cross_kv` is the *encoder output* (B,F,D); the block
+    projects it with its own cross-attention weights and the projected KV
+    joins the cache (static during decode).
+    """
+    ba = batch_spec(x.shape[0])
+    eps = cfg.norm_eps
+    if kind in ("attn_mlp", "attn_moe", "enc_attn_mlp", "dec_attn_mlp", "shared_attn"):
+        h = rmsnorm(x, p["norm1"], eps)
+        if kind == "enc_attn_mlp":
+            # bidirectional encoder: full attention, no causal mask
+            a, kv = _bidir_attention(p, h, cfg, positions)
+        else:
+            a, kv = attn.attention_train(p, h, cfg, positions)
+        x = x + a
+        cache: dict[str, Any] = {"k": kv[0], "v": kv[1]}
+        if kind == "dec_attn_mlp":
+            ckv = attn.encode_kv(p, cross_kv, cfg)
+            hx = rmsnorm(x, p["norm_x"], eps)
+            x = x + attn.cross_attention(p, hx, cfg, ckv)
+            cache["ck"] = ckv["k"]
+            cache["cv"] = ckv["v"]
+        if "wg" in p:
+            h2 = rmsnorm(x, p["norm2"], eps)
+            x = x + mlp_apply(p, h2, ba)
+        elif "router" in p:
+            h2 = rmsnorm(x, p["norm2"], eps)
+            x = x + moe_mod.moe_apply(p, h2, cfg, ba)
+        return x, cache
+    if kind == "mamba":
+        h = rmsnorm(x, p["norm1"], eps)
+        out, cache = ssm_mod.mamba_train(p, h, cfg, ba)
+        return x + out, cache
+    if kind == "mlstm":
+        h = rmsnorm(x, p["norm1"], eps)
+        out, cache = xlstm_mod.mlstm_train(p, h, cfg, ba)
+        return x + out, cache
+    if kind == "slstm":
+        h = rmsnorm(x, p["norm1"], eps)
+        out, cache = xlstm_mod.slstm_train(p, h, cfg, ba)
+        return x + out, cache
+    raise ValueError(kind)
+
+
+def _bidir_attention(p, h, cfg, positions):
+    """Encoder self-attention without the causal mask (chunk-free ref)."""
+    b, s, _ = h.shape
+    q, k, v = attn._project_qkv(p, h, cfg, positions)
+    logits = attn._gqa_logits(q, k, cfg.hd ** -0.5)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = attn._gqa_out(w, v).astype(h.dtype)
+    ba = batch_spec(b)
+    o = constrain(o, ba, None, "model", None)
+    out = o.reshape(b, s, -1) @ p["wo"]
+    return res_constrain(out, ba), (k, v)
+
+
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int,
+                     enc_len: int = 0):
+    if kind == "dec_attn_mlp":
+        c = attn.init_kv_cache(cfg, batch, cache_len)
+        cc = attn.init_kv_cache(cfg, batch, enc_len or cfg.frontend_len)
+        c["ck"], c["cv"] = cc["k"], cc["v"]
+        return c
+    if kind in ("attn_mlp", "attn_moe", "shared_attn"):
+        return attn.init_kv_cache(cfg, batch, cache_len)
+    if kind == "mamba":
+        return ssm_mod.init_ssm_cache(cfg, batch)
+    if kind == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_decode(p, x, cfg, kind: str, cache, pos, cross_kv=None,
+                 decode_mode: str = "tp"):
+    ba = batch_spec(x.shape[0])
+    eps = cfg.norm_eps
+    if kind in ("attn_mlp", "attn_moe", "shared_attn", "dec_attn_mlp"):
+        h = rmsnorm(x, p["norm1"], eps)
+        self_cache = {"k": cache["k"], "v": cache["v"]}
+        a, self_cache = attn.attention_decode(p, h, cfg, self_cache, pos,
+                                              mode=decode_mode)
+        cache = {**cache, **self_cache}
+        x = x + a
+        if kind == "dec_attn_mlp":
+            hx = rmsnorm(x, p["norm_x"], eps)
+            x = x + attn.cross_attention(p, hx, cfg,
+                                         {"k": cache["ck"], "v": cache["cv"]})
+        if "wg" in p:
+            h2 = rmsnorm(x, p["norm2"], eps)
+            x = x + mlp_apply(p, h2, ba)
+        elif "router" in p:
+            h2 = rmsnorm(x, p["norm2"], eps)
+            x = x + moe_mod.moe_apply(p, h2, cfg, ba)
+        return x, cache
+    if kind == "mamba":
+        h = rmsnorm(x, p["norm1"], eps)
+        out, cache = ssm_mod.mamba_decode(p, h, cfg, cache, ba)
+        return x + out, cache
+    if kind == "mlstm":
+        h = rmsnorm(x, p["norm1"], eps)
+        out, cache = xlstm_mod.mlstm_decode(p, h, cfg, cache, ba)
+        return x + out, cache
+    if kind == "slstm":
+        h = rmsnorm(x, p["norm1"], eps)
+        out, cache = xlstm_mod.slstm_decode(p, h, cfg, cache, ba)
+        return x + out, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over stacked layer params)
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def run_stack_train(stack_p, x, cfg, kind: str, positions, count: int,
+                    shared: bool, cross_kv=None, want_cache: bool = False):
+    """Scan `count` blocks.  shared=True reuses one param set per step."""
+    if shared or count == 1:
+        p = stack_p
+        fn = _remat_wrap(
+            lambda xx: block_train(p, xx, cfg, kind, positions, cross_kv), cfg)
+        outs = []
+        for _ in range(count):
+            x, cache = fn(x)
+            outs.append(cache)
+        cache = jax.tree.map(lambda *cs: jnp.stack(cs), *outs) if want_cache else None
+        return x, cache
+
+    def body(xx, p_l):
+        out, cache = block_train(p_l, xx, cfg, kind, positions, cross_kv)
+        return out, (cache if want_cache else 0)
+
+    body = _remat_wrap(body, cfg)
+    if cfg.unroll:
+        outs = []
+        for i in range(count):
+            x, cache = body(x, jax.tree.map(lambda a: a[i], stack_p))
+            outs.append(cache)
+        caches = jax.tree.map(lambda *cs: jnp.stack(cs), *outs) \
+            if want_cache else None
+        return x, caches
+    x, caches = jax.lax.scan(body, x, stack_p)
+    return x, (caches if want_cache else None)
+
+
+def run_stack_decode(stack_p, x, cfg, kind: str, cache, pos, count: int,
+                     shared: bool, cross_kv=None, decode_mode: str = "tp"):
+    if shared or count == 1:
+        outs = []
+        for i in range(count):
+            c_i = jax.tree.map(lambda a: a[i], cache)
+            x, c_new = block_decode(stack_p, x, cfg, kind, c_i, pos,
+                                    cross_kv, decode_mode)
+            outs.append(c_new)
+        cache = jax.tree.map(lambda *cs: jnp.stack(cs), *outs)
+        return x, cache
+
+    def body(xx, inp):
+        p_l, c_l = inp
+        out, c_new = block_decode(p_l, xx, cfg, kind, c_l, pos, cross_kv,
+                                  decode_mode)
+        return out, c_new
+
+    x, caches = jax.lax.scan(body, x, (stack_p, cache))
+    return x, caches

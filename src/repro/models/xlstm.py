@@ -1,0 +1,230 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential scan).
+
+mLSTM training uses the chunkwise form: within a chunk the recurrence is a
+decay-masked (q x q) matmul (like attention); across chunks a scan carries
+the matrix state C (B, H, hd, hd) and normalizer n (B, H, hd).  Row-local
+max stabilization keeps the exponentials in f32 range; the stabilizer
+cancels between numerator and normalizer, so the math is exact.
+
+sLSTM has a true hidden-to-hidden nonlinear recurrence (block-diagonal per
+head) and cannot be parallelized over time; it runs as a lax.scan over
+steps.  This is an architectural property, not an implementation choice —
+see DESIGN.md.
+
+Decode for both is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import constrain, res_constrain
+from repro.models.layers import dense_init
+
+__all__ = ["init_mlstm", "mlstm_train", "mlstm_decode", "init_mlstm_cache",
+           "init_slstm", "slstm_train", "slstm_decode", "init_slstm_cache"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": dense_init(ks[0], d, d, dt),
+        "wk": dense_init(ks[1], d, d, dt),
+        "wv": dense_init(ks[2], d, d, dt),
+        "ig_w": dense_init(ks[3], d, h, dt, scale=0.01),
+        "fg_w": dense_init(ks[4], d, h, dt, scale=0.01),
+        "og_w": dense_init(ks[5], d, d, dt),
+        "wo": dense_init(ks[6], d, d, dt),
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(b, s, h, hd)
+    it = (x @ p["ig_w"]).astype(jnp.float32)                  # (B,S,H) input gate
+    ft = jax.nn.log_sigmoid((x @ p["fg_w"]).astype(jnp.float32) + 3.0)  # log f
+    o = jax.nn.sigmoid((x @ p["og_w"]).astype(jnp.float32))   # (B,S,D)
+    return q, k, v, it, ft, o
+
+
+def mlstm_train(p, x, cfg, batch_axes):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q, k, v, it, ft, o = _mlstm_qkv(p, x, cfg)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    cl = min(cfg.ssm_chunk, s)
+    if s % cl:
+        cl = s
+    nc = s // cl
+
+    def rs(a):
+        return a.reshape((b, nc, cl) + a.shape[2:]).swapaxes(0, 1)
+
+    def chunk(carry, inp):
+        c_st, n_st = carry                        # (B,H,hd,hd), (B,H,hd)
+        qc, kc, vc, ic, fc = inp                  # (B,cl,H,*)
+        cf = jnp.cumsum(fc, axis=1)               # (B,cl,H) inclusive log decay
+        # l[t,s] = cf_t - cf_s + i_s  for s <= t ; inter exponent = cf_t
+        lmat = cf[:, :, None, :] - cf[:, None, :, :] + ic[:, None, :, :]
+        tri = jnp.tril(jnp.ones((cl, cl), bool))
+        lmat = jnp.where(tri[None, :, :, None], lmat, -jnp.inf)
+        m_row = jnp.maximum(jnp.max(lmat, axis=2), cf)        # (B,cl,H)
+        dmat = jnp.exp(lmat - m_row[:, :, None, :])
+        g = jnp.einsum("bthd,bshd->bhts", qc, kc)             # (B,H,t,s)
+        w = g * dmat.transpose(0, 3, 1, 2)                    # (B,H,t,s)
+        y_num = jnp.einsum("bhts,bshd->bthd", w, vc)
+        n_num = jnp.einsum("bshd,btsh->bthd", kc, dmat)       # sum_s exp(l) k_s
+        inter_scale = jnp.exp(cf - m_row)                     # (B,cl,H)
+        y_num = y_num + jnp.einsum("bthd,bhde,bth->bthe", qc, c_st, inter_scale)
+        n_num = n_num + n_st[:, None] * inter_scale[..., None]
+        denom = jnp.abs(jnp.einsum("bthd,bthd->bth", n_num, qc))
+        denom = jnp.maximum(denom, jnp.exp(-m_row))
+        y = y_num / denom[..., None]
+        # state update (scaled back to absolute units)
+        dec_end = jnp.exp(cf[:, -1:, :] - cf + ic)            # (B,cl,H)
+        c_st = c_st * jnp.exp(cf[:, -1])[:, :, None, None] \
+            + jnp.einsum("bshd,bshe,bsh->bhde", kc, vc, dec_end)
+        n_st = n_st * jnp.exp(cf[:, -1])[..., None] + \
+            jnp.einsum("bshd,bsh->bhd", kc, dec_end)
+        return (c_st, n_st), y
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    (c_st, n_st), ys = jax.lax.scan(
+        chunk, (c0, n0), (rs(qf), rs(kf), rs(vf), rs(it), rs(ft)),
+        unroll=True if cfg.unroll else 1)
+    y = ys.swapaxes(0, 1).reshape(b, s, d)
+    y = (y * o).astype(x.dtype) @ p["wo"]
+    cache = {"c": c_st, "n": n_st}
+    return res_constrain(y, batch_axes), cache
+
+
+def init_mlstm_cache(cfg, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg, cache, batch_axes):
+    b = x.shape[0]
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    q, k, v, it, ft, o = _mlstm_qkv(p, x, cfg)
+    qf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    i1, f1 = it[:, 0], ft[:, 0]                   # (B,H)
+    fdec = jnp.exp(f1)[:, :, None, None]
+    iexp = jnp.exp(i1)[:, :, None, None]
+    c = cache["c"] * fdec + iexp * jnp.einsum("bhd,bhe->bhde", kf, vf)
+    n = cache["n"] * jnp.exp(f1)[..., None] + jnp.exp(i1)[..., None] * kf
+    y = jnp.einsum("bhd,bhde->bhe", qf, c)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), 1.0)
+    y = (y / denom[..., None]).reshape(b, 1, -1)
+    y = (y * o).astype(x.dtype) @ p["wo"]
+    return res_constrain(y, batch_axes), {"c": c, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    hd = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 9)
+    p = {
+        "zg_w": dense_init(ks[0], d, d, dt),
+        "ig_w": dense_init(ks[1], d, h, dt, scale=0.01),
+        "fg_w": dense_init(ks[2], d, h, dt, scale=0.01),
+        "og_w": dense_init(ks[3], d, d, dt),
+        "wo": dense_init(ks[8], d, d, dt),
+    }
+    for i, nm in enumerate(["zg_r", "ig_r", "fg_r", "og_r"]):
+        out_d = hd if nm in ("zg_r", "og_r") else 1
+        p[nm] = (jax.random.normal(ks[4 + i], (h, hd, out_d), jnp.float32)
+                 * hd ** -0.5).astype(dt)
+    return p
+
+
+def init_slstm_cache(cfg, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    z = lambda *s: jnp.zeros(s, jnp.float32)
+    return {"c": z(batch, h, hd), "n": z(batch, h, hd),
+            "h": z(batch, h, hd), "m": z(batch, h)}
+
+
+def _slstm_proj(p, x, cfg):
+    """Hoisted input projections: one batched matmul per gate for the whole
+    sequence (the recurrence itself is inherently sequential, the input
+    side is not)."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    xf = x.astype(jnp.float32)
+    xz = (xf @ p["zg_w"].astype(jnp.float32)).reshape(*x.shape[:-1], h, hd)
+    xo = (xf @ p["og_w"].astype(jnp.float32)).reshape(*x.shape[:-1], h, hd)
+    xi = xf @ p["ig_w"].astype(jnp.float32)           # (..., H)
+    xft = xf @ p["fg_w"].astype(jnp.float32)
+    return xz, xo, xi, xft
+
+
+def _slstm_recur(p, cfg, proj_t, st):
+    """One recurrent step; proj_t = per-step projected inputs."""
+    xz, xo, xi, xft = proj_t
+    hprev = st["h"].astype(jnp.float32)            # (B,H,hd)
+    rz = jnp.einsum("bhd,hde->bhe", hprev, p["zg_r"].astype(jnp.float32))
+    ro = jnp.einsum("bhd,hde->bhe", hprev, p["og_r"].astype(jnp.float32))
+    ri = jnp.einsum("bhd,hd->bh", hprev, p["ig_r"].astype(jnp.float32)[..., 0])
+    rf = jnp.einsum("bhd,hd->bh", hprev, p["fg_r"].astype(jnp.float32)[..., 0])
+    z = jnp.tanh(xz + rz)
+    og = jax.nn.sigmoid(xo + ro)
+    it = xi + ri                                    # (B,H)
+    ft = jax.nn.log_sigmoid(xft + rf + 3.0)
+    m_new = jnp.maximum(ft + st["m"], it)
+    i_s = jnp.exp(it - m_new)[..., None]
+    f_s = jnp.exp(ft + st["m"] - m_new)[..., None]
+    c = f_s * st["c"] + i_s * z
+    n = f_s * st["n"] + i_s
+    hy = og * (c / jnp.maximum(n, 1e-6))
+    return {"c": c, "n": n, "h": hy, "m": m_new}, hy
+
+
+def slstm_train(p, x, cfg, batch_axes):
+    b, s, d = x.shape
+    st0 = init_slstm_cache(cfg, b)
+    xz, xo, xi, xft = _slstm_proj(p, x, cfg)
+
+    def step(st, proj_t):
+        return _slstm_recur(p, cfg, proj_t, st)
+
+    st, hs = jax.lax.scan(
+        step, st0,
+        (xz.swapaxes(0, 1), xo.swapaxes(0, 1),
+         xi.swapaxes(0, 1), xft.swapaxes(0, 1)))
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype) @ p["wo"]
+    return res_constrain(y, batch_axes), st
+
+
+def slstm_decode(p, x, cfg, cache, batch_axes):
+    xz, xo, xi, xft = _slstm_proj(p, x[:, 0], cfg)
+    st, hy = _slstm_recur(p, cfg, (xz, xo, xi, xft), cache)
+    y = hy.reshape(x.shape[0], 1, -1).astype(x.dtype) @ p["wo"]
+    return res_constrain(y, batch_axes), st

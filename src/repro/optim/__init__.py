@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.optim.compression import (
+    compress_int8, decompress_int8, compressed_psum_with_feedback, EFState,
+    ef_init,
+)

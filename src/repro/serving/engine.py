@@ -1,0 +1,110 @@
+"""Batched serving engine (continuous-batching-lite).
+
+A fixed pool of B slots shares one stacked KV cache.  Requests claim free
+slots, prefill writes their KV into the slot (per-slot positions), and one
+jitted decode_step advances every active slot per tick; finished slots are
+recycled without disturbing neighbors.  This is the slot-based design of
+production engines, scoped to aligned prefill (no chunked-prefill queue).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeEngine", "Request"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 32
+    out: list[int] = field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, n_slots: int = 4, cache_len: int = 512,
+                 decode_mode: str = "tp", greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.greedy = greedy
+        self.caches = model.init_cache(n_slots, cache_len)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.active: list[Request | None] = [None] * n_slots
+        self.last_tok = np.zeros((n_slots,), np.int32)
+        self._decode = jax.jit(partial(model.decode_step,
+                                       decode_mode=decode_mode))
+
+    # ---------------------------------------------------------------- intake
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    def submit(self, req: Request) -> bool:
+        slots = self._free_slots()
+        if not slots:
+            return False
+        slot = slots[0]
+        req.slot = slot
+        self.active[slot] = req
+        self._prefill_into_slot(req)
+        return True
+
+    def _prefill_into_slot(self, req: Request):
+        """Token-by-token prefill through decode_step on the slot's lane.
+
+        (Aligned batch prefill via model.prefill is used by launch/serve.py
+        when a whole batch starts together; the per-slot path keeps slot
+        recycling simple and reuses the same jitted step.)
+        """
+        toks = req.prompt.astype(np.int32)
+        for t, tok in enumerate(toks):
+            tok_b = np.zeros((self.n_slots, 1), np.int32)
+            tok_b[req.slot, 0] = tok
+            pos_b = self.pos.copy()
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tok_b), jnp.asarray(pos_b))
+            self.pos[req.slot] += 1
+        self.last_tok[req.slot] = int(jnp.argmax(logits[req.slot]))
+
+    # ----------------------------------------------------------------- ticks
+    def step(self) -> list[Request]:
+        """One decode tick across all active slots; returns finished reqs."""
+        if not any(r is not None for r in self.active):
+            return []
+        tok_b = self.last_tok.reshape(-1, 1)
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(tok_b),
+            jnp.asarray(self.pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        finished = []
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(int(tok_b[i, 0]))
+            self.pos[i] += 1
+            self.last_tok[i] = nxt[i]
+            if len(req.out) >= req.max_new or self.pos[i] >= self.cache_len - 1:
+                req.done = True
+                finished.append(req)
+                self.active[i] = None
+                self.pos[i] = 0      # recycle slot
+        return finished
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Drive a request list to completion with slot recycling."""
+        pending = list(requests)
+        done: list[Request] = []
+        while pending or any(r is not None for r in self.active):
+            while pending and self._free_slots():
+                self.submit(pending.pop(0))
+            done.extend(self.step())
+        return done

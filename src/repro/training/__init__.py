@@ -1,0 +1,1 @@
+from repro.training.step import TrainState, make_train_step, train_state_init

@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 device.
+# Multi-device tests spawn subprocesses with their own flags.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

