@@ -26,7 +26,8 @@ from repro.data import dp_stick_breaking_data, bp_stick_breaking_data
 P = {P}
 algo = "{algo}"
 n, pb = {n}, {pb}
-mesh = jax.make_mesh((P,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_mesh
+mesh = compat_mesh((P,), ("data",))
 if algo == "bpmeans":
     x, _, _ = bp_stick_breaking_data(n, seed=0)
 else:

@@ -1,0 +1,112 @@
+"""Engine vs legacy driver: single-jit epoch scan vs Python epoch loop.
+
+The legacy drivers (pre-engine `occ_dp_means` et al.) dispatched one
+compiled epoch per Python-loop step and forced a device->host sync per
+epoch via `int(n_sent)`.  The unified engine runs the whole pass as one
+`lax.scan` inside one jit with stats accumulated on device.  This benchmark
+times both on identical math (the legacy loop reuses the engine's epoch
+body, so the difference is pure dispatch/sync overhead), and records the
+perf trajectory in BENCH_occ_engine.json.
+
+  PYTHONPATH=src python -m benchmarks.occ_engine
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPMeansTransaction, OCCEngine
+from repro.core.engine import _epoch_body
+from repro.core.occ import block_epochs
+from repro.data import dp_stick_breaking_data
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def _legacy_epoch(txn, pool, xe, ve, cap):
+    return _epoch_body(txn, pool, xe, ve, (), cap)
+
+
+def _legacy_pass(txn, x, pb):
+    """The seed driver pattern: T separate compiled-epoch dispatches plus a
+    per-epoch host round-trip for the stats."""
+    n, d = x.shape
+    pool = txn.init_pool(x)
+    t_epochs = block_epochs(n, pb)
+    pad = t_epochs * pb - n
+    xs = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], 0)
+    valid = jnp.concatenate([jnp.ones((n,), bool), jnp.zeros((pad,), bool)])
+    z = jnp.full((n,), -1, jnp.int32)
+    stats_p, stats_a = [], []
+    for t in range(t_epochs):
+        sl = slice(t * pb, (t + 1) * pb)
+        pool, (ze, _se, n_sent, n_acc) = _legacy_epoch(
+            txn, pool, xs[sl], valid[sl], None)
+        lo, hi = t * pb, min((t + 1) * pb, n)
+        z = z.at[lo:hi].set(ze[:hi - lo])
+        stats_p.append(int(n_sent))    # <- the per-epoch device->host sync
+        stats_a.append(int(n_acc))
+    return pool, z, np.asarray(stats_p, np.int32), t_epochs
+
+
+def run(n: int = 8192, pb: int = 256, repeats: int = 5, lam: float = 4.0,
+        out_path: str | None = None, quiet: bool = False):
+    x, _, _ = dp_stick_breaking_data(n, seed=0)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(lam, k_max=512)
+    eng = OCCEngine(txn, pb)
+    t_epochs = block_epochs(n, pb)
+
+    # warm both compilations and check the math is identical
+    pool_l, z_l, stats_l, _ = _legacy_pass(txn, x, pb)
+    res = jax.block_until_ready(eng.run(x))
+    assert np.array_equal(np.asarray(res.assign), np.asarray(z_l))
+    assert np.array_equal(np.asarray(res.stats.proposed), stats_l)
+
+    t0 = time.time()
+    for _ in range(repeats):
+        _legacy_pass(txn, x, pb)
+    legacy_s = (time.time() - t0) / repeats
+
+    t0 = time.time()
+    for _ in range(repeats):
+        jax.block_until_ready(eng.run(x))
+    engine_s = (time.time() - t0) / repeats
+
+    record = {
+        "bench": "occ_engine",
+        "n": n, "pb": pb, "t_epochs": t_epochs, "repeats": repeats,
+        "legacy_wall_s": legacy_s,
+        "engine_wall_s": engine_s,
+        "speedup": legacy_s / engine_s,
+        "legacy_dispatches_per_pass": t_epochs,
+        "legacy_host_syncs_per_pass": 2 * t_epochs,
+        "engine_dispatches_per_pass": 1,
+        "engine_host_syncs_per_pass": 0,
+    }
+    # Only persist when a path is given (the __main__ canonical run does);
+    # suite/CI fast-mode invocations must not clobber the tracked record.
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+
+    rows = [
+        (f"occ_engine_legacy_n{n}_pb{pb}", legacy_s * 1e6,
+         f"dispatches={t_epochs};host_syncs={2 * t_epochs}"),
+        (f"occ_engine_scan_n{n}_pb{pb}", engine_s * 1e6,
+         f"dispatches=1;host_syncs=0;speedup={legacy_s / engine_s:.2f}x"),
+    ]
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(out_path=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_occ_engine.json"))

@@ -4,10 +4,11 @@
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig3,fig4,...]
 
 Suites:
-  fig3      — paper Fig 3 / Fig 6: rejections vs N, bounded by Pb
-  fig4      — paper Fig 4: strong scaling (emulated hosts + workload model)
-  kernels   — Pallas kernel microbenches
-  roofline  — §Roofline summary from the dry-run artifacts
+  fig3       — paper Fig 3 / Fig 6: rejections vs N, bounded by Pb
+  fig4       — paper Fig 4: strong scaling (emulated hosts + workload model)
+  occ_engine — single-jit epoch scan vs legacy Python epoch loop
+  kernels    — Pallas kernel microbenches
+  roofline   — §Roofline summary from the dry-run artifacts
 """
 from __future__ import annotations
 
@@ -20,7 +21,8 @@ def main(argv=None) -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller repeats / sizes (CI mode)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig3,fig4,kernels,roofline")
+                    help="comma-separated subset: "
+                         "fig3,fig4,occ_engine,kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -40,6 +42,12 @@ def main(argv=None) -> None:
             n=4096 if args.fast else 16384,
             pb=512 if args.fast else 2048,
             ps=(1, 2, 4) if args.fast else (1, 2, 4, 8))
+    if want("occ_engine"):
+        from benchmarks import occ_engine
+        rows += occ_engine.run(
+            n=2048 if args.fast else 8192,
+            pb=128 if args.fast else 256,
+            repeats=3 if args.fast else 5)
     if want("kernels"):
         from benchmarks import kernels
         rows += kernels.run()

@@ -1,38 +1,54 @@
-"""Quickstart: the paper's OCC algorithms in 30 lines.
+"""Quickstart: the OCC engine and its transactions in 40 lines.
+
+The primary API is `OCCEngine` + an `OCCTransaction` (DP-means, OFL,
+BP-means, or your own): the engine runs a whole pass — padding, optional
+serial bootstrap, bounded-master validation, mesh sharding, stats — as one
+compiled epoch scan.  The legacy `occ_dp_means` / `occ_ofl` / `occ_bp_means`
+wrappers remain as one-call conveniences over the same engine.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import occ_dp_means, occ_ofl, occ_bp_means, serial_dp_means
-from repro.data import dp_stick_breaking_data, bp_stick_breaking_data
+from repro.core import (
+    DPMeansTransaction, OCCEngine, occ_bp_means, occ_ofl, serial_dp_means,
+)
+from repro.data import bp_stick_breaking_data, dp_stick_breaking_data
 
 
 def main():
-    # --- DP-means (clustering) ------------------------------------------
+    # --- DP-means through the engine (primary API) -----------------------
     x, z_true, _ = dp_stick_breaking_data(2048, seed=0)
     x = jnp.asarray(x)
-    res = occ_dp_means(x, lam=4.0, pb=256, k_max=256, max_iters=3)
+    txn = DPMeansTransaction(lam=4.0, k_max=256)
+    eng = OCCEngine(txn, pb=256)
+    res = eng.run(x)                          # ONE compiled call: all epochs
+    pool = eng.refine(res.pool, x, res.assign)
+    stats = res.stats
+    for _ in range(2):                        # Lloyd-style passes, as serial
+        res = eng.run(x, pool=pool)
+        pool = eng.refine(res.pool, x, res.assign)
     print(f"OCC DP-means:  K={int(res.pool.count)} (true {z_true.max() + 1}), "
-          f"J={float(res.objective):.1f}, "
-          f"proposed={int(res.stats.proposed.sum())}, "
-          f"rejected={int(res.stats.proposed.sum() - res.stats.accepted.sum())}"
-          f" (bound Pb=256)")
+          f"J={float(txn.objective(x, res.assign, pool)):.1f}, "
+          f"proposed={int(stats.proposed.sum())}, "
+          f"rejected={int(stats.proposed.sum() - stats.accepted.sum())}"
+          f" (bound Pb=256), dispatches={eng.n_dispatches} (1 per pass)")
     ser = serial_dp_means(x, 4.0, k_max=256, max_iters=3)
     print(f"serial DP-means: K={int(ser.pool.count)}, J={float(ser.objective):.1f}"
           f"  <- OCC matches the serial algorithm (Thm 3.1)")
 
-    # --- OFL (stochastic facility location) ------------------------------
+    # --- OFL / BP-means via the convenience wrappers ----------------------
     ofl = occ_ofl(x, lam=4.0, pb=256, key=jax.random.key(0), k_max=512)
     print(f"OCC OFL:       K={int(ofl.pool.count)}, J={float(ofl.objective):.1f}"
           f"  (constant-factor approx of DP-means objective, Lemma 3.2)")
 
-    # --- BP-means (latent features) --------------------------------------
     xb, zb, _ = bp_stick_breaking_data(1024, seed=0)
     bp = occ_bp_means(jnp.asarray(xb), lam=4.0, pb=256, k_max=128, max_iters=2)
     print(f"OCC BP-means:  K={int(bp.pool.count)} features "
           f"(true {zb.shape[1]}), cost={float(bp.objective):.1f}")
+
+    print("streaming: see examples/streaming_clusters.py (engine.partial_fit)")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,28 @@
-"""The paper's contribution: OCC pattern + DP-means / OFL / BP-means."""
+"""The paper's contribution: one OCC pattern + DP-means / OFL / BP-means.
+
+Primary entry point: `OCCEngine` running an `OCCTransaction` — the
+concurrency-control mechanism (epoch scan, serializing validator, mesh
+sharding, bounded master, streaming `partial_fit`) is factored out of the
+algorithms, which are ~50-line declarative transactions.  The legacy
+`occ_dp_means` / `occ_ofl` / `occ_bp_means` entry points remain as thin
+convenience wrappers over the engine.
+"""
 from repro.core.occ import (
     CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
     gather_validate,
 )
+from repro.core.engine import (
+    OCCEngine, OCCTransaction, OCCPassResult, resolve_assignments,
+)
 from repro.core.objective import sq_dists, dp_means_objective, bp_means_objective
 from repro.core.dp_means import (
-    DPMeansResult, serial_dp_means, serial_dp_means_pass, occ_dp_means,
-    thm31_permutation,
+    DPMeansResult, DPMeansTransaction, serial_dp_means, serial_dp_means_pass,
+    occ_dp_means, thm31_permutation,
 )
-from repro.core.ofl import OFLResult, serial_ofl, occ_ofl, point_uniforms
+from repro.core.ofl import (
+    OFLResult, OFLTransaction, serial_ofl, occ_ofl, point_uniforms,
+)
 from repro.core.bp_means import (
-    BPMeansResult, serial_bp_means, serial_bp_means_pass, occ_bp_means,
-    coordinate_pass,
+    BPMeansResult, BPMeansTransaction, serial_bp_means, serial_bp_means_pass,
+    occ_bp_means, coordinate_pass,
 )

@@ -11,22 +11,26 @@ in creation order: decisions over old features depend only on old features,
 so worker-side fitting against C^{t-1} followed by validator-side fitting of
 the residual against the epoch's new features reproduces exactly the serial
 pass over C^{t-1} ∪ Ĉ (Appendix B.2).
+
+The OCC version is a declarative `BPMeansTransaction` run by the unified
+`OCCEngine` (core/engine.py); `occ_bp_means` remains as the backward-
+compatible wrapper returning `BPMeansResult`.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import NamedTuple
+from dataclasses import dataclass
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import OCCEngine
 from repro.core.objective import bp_means_objective
 from repro.core.occ import CenterPool, OCCStats, make_pool, serial_validate
 
-__all__ = ["BPMeansResult", "coordinate_pass", "serial_bp_means_pass",
-           "serial_bp_means", "occ_bp_means"]
+__all__ = ["BPMeansResult", "BPMeansTransaction", "coordinate_pass",
+           "serial_bp_means_pass", "serial_bp_means", "occ_bp_means"]
 
 
 class BPMeansResult(NamedTuple):
@@ -62,24 +66,79 @@ def coordinate_pass(x: jnp.ndarray, z0: jnp.ndarray, pool: CenterPool,
     return z_t.T, r
 
 
-def _bp_accept(lam2, count0):
-    """BPValidate: fit f_new against features accepted *this epoch* (slots
-    >= count0), accept the residual if still badly represented."""
-    def accept_fn(pool: CenterPool, f_new, _aux):
+def _created_rows(slots: jnp.ndarray, k_max: int) -> jnp.ndarray:
+    """(B, K_max) bool: one-hot of each point's accepted slot (or all-False)."""
+    created = jax.nn.one_hot(jnp.where(slots >= 0, slots, 0), k_max, dtype=bool)
+    return jnp.logical_and(created, (slots >= 0)[:, None])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class BPMeansTransaction:
+    """OCC BP-means as a transaction (Alg. 6 optimistic phase + Alg. 8
+    BPValidate): workers fit each point against C^{t-1} and propose the
+    residual; the validator re-fits proposals against this epoch's newly
+    accepted features before deciding."""
+    lam: Any
+    k_max: int = 256
+    init_mean: bool = True
+
+    def tree_flatten(self):
+        return (self.lam,), (self.k_max, self.init_mean)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def _lam2(self, dtype):
+        return jnp.asarray(self.lam, dtype) ** 2
+
+    def init_pool(self, x):
+        pool = make_pool(self.k_max, x.shape[-1], x.dtype)
+        if not self.init_mean:
+            return pool
+        # Alg. 7 initialization: f_1 = mean(x) (one psum), z_i1 = 1.
+        centers = pool.centers.at[0].set(jnp.mean(x, axis=0))
+        return pool._replace(centers=centers, mask=pool.mask.at[0].set(True),
+                             count=jnp.ones((), jnp.int32))
+
+    def make_state(self, x, offset: int = 0):
+        z = jnp.zeros((x.shape[0], self.k_max), bool)
+        return z.at[:, 0].set(True) if self.init_mean else z
+
+    def propose(self, pool, x_e, z0_e):
+        z_old, r = coordinate_pass(x_e, z0_e, pool)
+        resid2 = jnp.sum(r * r, axis=-1)
+        return resid2 > self._lam2(x_e.dtype), r, None, z_old
+
+    def accept(self, pool, f_new, aux_j, count0):
+        # BPValidate: fit f_new against features accepted *this epoch*
+        # (slots >= count0), accept the residual if still badly represented.
         k_max = pool.centers.shape[0]
         epoch_mask = jnp.logical_and(pool.mask, jnp.arange(k_max) >= count0)
         zref, r = coordinate_pass(f_new[None, :], jnp.zeros((1, k_max), bool),
                                   pool, epoch_mask)
         resid2 = jnp.sum(r[0] * r[0])
-        return resid2 > lam2, r[0], zref[0]
-    return accept_fn
+        return resid2 > self._lam2(f_new.dtype), r[0], zref[0]
+
+    def writeback(self, send, slots, outs, safe, valid):
+        created = _created_rows(slots, self.k_max)
+        z = jnp.logical_or(
+            safe, jnp.logical_or(jnp.logical_and(outs, send[:, None]), created))
+        return jnp.logical_and(z, valid[:, None])
+
+    def refine(self, pool, x, z):
+        return _reestimate(x, z, pool)
+
+    def objective(self, x, z, pool):
+        return bp_means_objective(x, z, pool.centers, self.lam, pool.mask)
 
 
 # ---------------------------------------------------------------------------
 # Serial BP-means (Alg. 7)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=())
+@jax.jit
 def _serial_bp_pass(x, z, pool, lam2):
     """Serial pass: each point fits against the *current* feature set (which
     grows during the pass), then may create its residual as a feature."""
@@ -91,25 +150,12 @@ def _serial_bp_pass(x, z, pool, lam2):
     send = jnp.ones((x.shape[0],), bool)
     pool, slots, z_out = serial_validate(pool, send, x, accept_fn, aux=z)
     k_max = pool.centers.shape[0]
-    created = jax.nn.one_hot(jnp.where(slots >= 0, slots, 0), k_max, dtype=bool)
-    created = jnp.logical_and(created, (slots >= 0)[:, None])
-    z = jnp.logical_or(z_out, created)
-    return pool, z
-
-
-def _init_mean(x, k_max):
-    """Alg. 7 initialization: z_i1 = 1, f_1 = mean(x)."""
-    pool = make_pool(k_max, x.shape[-1], x.dtype)
-    centers = pool.centers.at[0].set(jnp.mean(x, axis=0))
-    pool = pool._replace(centers=centers, mask=pool.mask.at[0].set(True),
-                         count=jnp.ones((), jnp.int32))
-    z = jnp.zeros((x.shape[0], k_max), bool).at[:, 0].set(True)
+    z = jnp.logical_or(z_out, _created_rows(slots, k_max))
     return pool, z
 
 
 def _reestimate(x, z, pool, ridge=1e-6):
     """F <- (Z^T Z)^{-1} Z^T X restricted to valid features (parallel sums)."""
-    k_max = pool.centers.shape[0]
     zf = jnp.logical_and(z, pool.mask[None, :]).astype(x.dtype)
     ztz = zf.T @ zf
     ztx = zf.T @ x
@@ -122,11 +168,9 @@ def _reestimate(x, z, pool, ridge=1e-6):
 def serial_bp_means_pass(x, lam, k_max, pool=None, z=None, init_mean=True):
     lam2 = jnp.asarray(lam, x.dtype) ** 2
     if pool is None:
-        if init_mean:
-            pool, z = _init_mean(x, k_max)
-        else:
-            pool = make_pool(k_max, x.shape[-1], x.dtype)
-            z = jnp.zeros((x.shape[0], k_max), bool)
+        txn = BPMeansTransaction(lam, k_max, init_mean)
+        pool = txn.init_pool(x)
+        z = txn.make_state(x)
     return _serial_bp_pass(x, z, pool, lam2)
 
 
@@ -148,26 +192,8 @@ def serial_bp_means(x, lam, k_max=256, max_iters=10, init_mean=True) -> BPMeansR
 
 
 # ---------------------------------------------------------------------------
-# OCC BP-means (Alg. 6)
+# OCC BP-means (Alg. 6) — compatibility wrapper over the engine
 # ---------------------------------------------------------------------------
-
-@jax.jit
-def _bp_epoch(pool: CenterPool, xs, valid, z0, lam2):
-    """One OCC epoch: batched optimistic fit against C^{t-1}; residual
-    proposals serially validated against this epoch's accepted features."""
-    count0 = pool.count
-    z_old, r = coordinate_pass(xs, z0, pool)
-    resid2 = jnp.sum(r * r, axis=-1)
-    send = jnp.logical_and(resid2 > lam2, valid)
-    pool2, slots, zref = serial_validate(pool, send, r, _bp_accept(lam2, count0))
-    k_max = pool.centers.shape[0]
-    created = jnp.logical_and(
-        jax.nn.one_hot(jnp.where(slots >= 0, slots, 0), k_max, dtype=bool),
-        (slots >= 0)[:, None])
-    z = jnp.logical_or(z_old, jnp.logical_or(jnp.logical_and(zref, send[:, None]), created))
-    z = jnp.logical_and(z, valid[:, None])
-    return pool2, z, send, jnp.sum(send.astype(jnp.int32)), jnp.sum((slots >= 0).astype(jnp.int32))
-
 
 def occ_bp_means(
     x: jnp.ndarray,
@@ -180,61 +206,34 @@ def occ_bp_means(
     mesh: jax.sharding.Mesh | None = None,
     data_axis: str = "data",
 ) -> BPMeansResult:
-    """OCC BP-means (Alg. 6) with bulk-synchronous epochs of Pb points."""
-    n, d = x.shape
-    lam2 = jnp.asarray(lam, x.dtype) ** 2
-    if init_mean:
-        pool, z = _init_mean(x, k_max)   # parallel global mean (one psum)
-    else:
-        pool = make_pool(k_max, d, x.dtype)
-        z = jnp.zeros((n, k_max), bool)
-    send_all = jnp.zeros((n,), bool)
+    """OCC BP-means (Alg. 6) with bulk-synchronous epochs of Pb points —
+    convenience wrapper running `BPMeansTransaction` under `OCCEngine`."""
+    n = x.shape[0]
+    txn = BPMeansTransaction(lam, k_max, init_mean)
+    eng = OCCEngine(txn, pb, mesh=mesh, data_axis=data_axis)
+    nb = min(n, max(1, pb // 16)) if bootstrap else 0
+
+    pool = txn.init_pool(x)
+    z = txn.make_state(x)
+    send = jnp.zeros((n,), bool)
     epoch_of = jnp.zeros((n,), jnp.int32)
-
-    put = None
-    if mesh is not None:
-        shd = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(data_axis))
-        put = lambda a: jax.device_put(a, shd)
-
-    start = 0
-    if bootstrap:
-        nb = max(1, pb // 16)
-        pool, zb = serial_bp_means_pass(x[:nb], lam, k_max, pool, z[:nb])
-        z = z.at[:nb].set(zb)
-        send_all = send_all.at[:nb].set(True)
-        start = nb
-
-    n_rest = n - start
-    t_epochs = max(1, math.ceil(n_rest / pb))
-    pad = t_epochs * pb - n_rest
-    xs = jnp.concatenate([x[start:], jnp.zeros((pad, d), x.dtype)], 0)
-    valid = jnp.concatenate([jnp.ones((n_rest,), bool), jnp.zeros((pad,), bool)])
-
-    stats_p, stats_a = [], []
+    stats = OCCStats(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
     z_prev = None
     it_done = 0
     for it in range(1, max_iters + 1):
         it_done = it
-        for t in range(t_epochs):
-            sl = slice(t * pb, (t + 1) * pb)
-            lo = start + t * pb
-            hi = min(lo + pb, n)
-            ze0 = z[lo:hi] if hi - lo == pb else \
-                jnp.zeros((pb, k_max), bool).at[:hi - lo].set(z[lo:hi])
-            xe, ve = xs[sl], valid[sl]
-            if put is not None:
-                xe, ve, ze0 = put(xe), put(ve), put(ze0)
-            pool, ze, se, n_sent, n_acc = _bp_epoch(pool, xe, ve, ze0, lam2)
-            z = z.at[lo:hi].set(ze[:hi - lo])
-            send_all = send_all.at[lo:hi].set(se[:hi - lo])
-            epoch_of = epoch_of.at[lo:hi].set(t)
-            if it == 1:
-                stats_p.append(int(n_sent))
-                stats_a.append(int(n_acc))
-        pool = _reestimate(x, z, pool)
+        if it == 1:
+            res = eng.run(x, pool=pool, state=z, n_bootstrap=nb)
+            z, send, epoch_of, stats = res.assign, res.send, res.epoch_of, res.stats
+        else:
+            # Bootstrapped points keep their serial-prefix assignment; later
+            # passes re-run only the bulk-synchronous epochs (seed semantics).
+            res = eng.run(x[nb:], pool=pool, state=z[nb:])
+            z = z.at[nb:].set(res.assign)
+            send = send.at[nb:].set(res.send)
+        pool = txn.refine(res.pool, x, z)
         if z_prev is not None and bool(jnp.all(z == z_prev)):
             break
         z_prev = z
-    obj = bp_means_objective(x, z, pool.centers, lam, pool.mask)
-    stats = OCCStats(np.asarray(stats_p, np.int32), np.asarray(stats_a, np.int32))
-    return BPMeansResult(pool, z, stats, send_all, epoch_of, it_done, obj)
+    obj = txn.objective(x, z, pool)
+    return BPMeansResult(pool, z, stats, send, epoch_of, it_done, obj)

@@ -1,28 +1,32 @@
 """DP-means: serial (Alg. 1) and OCC-parallel (Alg. 3 + DPValidate Alg. 2).
 
-The OCC version is serially equivalent to Alg. 1 under the Thm-3.1
-permutation: within an epoch, non-proposed points (whose assignment depends
-only on C^{t-1}) are ordered before proposed points, which are validated in
-global index order.
+The OCC version is a ~40-line declarative `DPMeansTransaction` run by the
+unified `OCCEngine` (core/engine.py): one compiled `lax.scan` over epochs
+replaces the legacy hand-rolled Python epoch loop.  `occ_dp_means` remains
+as the backward-compatible convenience wrapper returning `DPMeansResult`.
+
+Serial equivalence (Thm 3.1): within an epoch, non-proposed points (whose
+assignment depends only on C^{t-1}) are ordered before proposed points,
+which are validated in global index order.
 """
 from __future__ import annotations
 
-import math
+from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import OCCEngine, resolve_assignments
 from repro.core.objective import dp_means_objective
 from repro.core.occ import (
     CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
-    gather_validate,
 )
 
-__all__ = ["DPMeansResult", "serial_dp_means_pass", "serial_dp_means",
-           "occ_dp_means_pass", "occ_dp_means"]
+__all__ = ["DPMeansResult", "DPMeansTransaction", "serial_dp_means_pass",
+           "serial_dp_means", "occ_dp_means", "thm31_permutation"]
 
 
 class DPMeansResult(NamedTuple):
@@ -35,12 +39,55 @@ class DPMeansResult(NamedTuple):
     objective: jnp.ndarray
 
 
-def _dp_accept(lam2: float):
+def _dp_accept(lam2):
     """DPValidate accept rule: accept iff not within lambda of any center."""
     def accept_fn(pool: CenterPool, x_j, aux_j):
         d2, ref = nearest_center(pool, x_j)
         return d2 > lam2, x_j, ref
     return accept_fn
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DPMeansTransaction:
+    """DP-means as an OCC transaction (Alg. 3 optimistic phase + Alg. 2
+    DPValidate): propose a point as a new cluster iff it is farther than
+    lambda from every center of C^{t-1}."""
+    lam: Any
+    k_max: int = 256
+
+    def tree_flatten(self):
+        return (self.lam,), (self.k_max,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def _lam2(self, dtype):
+        return jnp.asarray(self.lam, dtype) ** 2
+
+    def init_pool(self, x):
+        return make_pool(self.k_max, x.shape[-1], x.dtype)
+
+    def make_state(self, x, offset: int = 0):
+        return ()
+
+    def propose(self, pool, x_e, state_e):
+        d2, idx = nearest_center(pool, x_e)
+        return d2 > self._lam2(x_e.dtype), x_e, None, idx
+
+    def accept(self, pool, x_j, aux_j, count0):
+        d2, ref = nearest_center(pool, x_j)
+        return d2 > self._lam2(x_j.dtype), x_j, ref
+
+    def writeback(self, send, slots, outs, safe, valid):
+        return resolve_assignments(send, slots, outs, safe, valid)
+
+    def refine(self, pool, x, z):
+        return _recompute_means(x, z, pool)
+
+    def objective(self, x, z, pool):
+        return dp_means_objective(x, pool.centers, self.lam, pool.mask)
 
 
 # ---------------------------------------------------------------------------
@@ -104,32 +151,8 @@ def serial_dp_means(x: jnp.ndarray, lam: float, k_max: int = 256,
 
 
 # ---------------------------------------------------------------------------
-# OCC DP-means (Alg. 3)
+# OCC DP-means (Alg. 3) — compatibility wrapper over the engine
 # ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("validate_cap",))
-def _dp_epoch(pool: CenterPool, xs: jnp.ndarray, valid: jnp.ndarray,
-              lam2: jnp.ndarray, validate_cap: int | None = None):
-    """One bulk-synchronous OCC epoch over Pb points (Alg. 3 inner body).
-
-    Optimistic phase — one batched distance computation against the
-    replicated C^{t-1} (sharded over the `data` mesh axis under pjit; this is
-    each "processor" handling its block).  Points beyond lambda of every
-    center are proposals; the rest are safely assigned.
-
-    Validation phase — deterministic serial scan (DPValidate), replicated.
-    """
-    d2, idx = nearest_center(pool, xs)
-    send = jnp.logical_and(d2 > lam2, valid)
-    pool2, slots, refs, v_overflow = gather_validate(
-        pool, send, xs, _dp_accept(lam2), cap=validate_cap)
-    z = jnp.where(send, jnp.where(slots >= 0, slots, refs), idx).astype(jnp.int32)
-    z = jnp.where(valid, z, -1)
-    n_sent = jnp.sum(send.astype(jnp.int32))
-    n_acc = jnp.sum((slots >= 0).astype(jnp.int32))
-    pool2 = pool2._replace(overflow=jnp.logical_or(pool2.overflow, v_overflow))
-    return pool2, z, send, n_sent, n_acc
-
 
 def occ_dp_means(
     x: jnp.ndarray,
@@ -142,7 +165,8 @@ def occ_dp_means(
     mesh: jax.sharding.Mesh | None = None,
     data_axis: str = "data",
 ) -> DPMeansResult:
-    """OCC DP-means (Alg. 3).
+    """OCC DP-means (Alg. 3) — convenience wrapper running
+    `DPMeansTransaction` under `OCCEngine`.
 
     Args:
       x: (N, D) data.  pb: points per epoch (the paper's P*b product — only
@@ -154,59 +178,36 @@ def occ_dp_means(
       and the optimistic phase parallelizes under GSPMD while the validation
       scan executes replicated (SPMD re-execution of the master).
     """
-    n, d = x.shape
-    lam2 = jnp.asarray(lam, x.dtype) ** 2
-    pool = make_pool(k_max, d, x.dtype)
+    n = x.shape[0]
+    txn = DPMeansTransaction(lam, k_max)
+    eng = OCCEngine(txn, pb, validate_cap=validate_cap, mesh=mesh,
+                    data_axis=data_axis)
+    nb = min(n, max(1, pb // 16)) if bootstrap else 0
+
+    pool = txn.init_pool(x)
     z = jnp.full((n,), -1, jnp.int32)
-    send_all = jnp.zeros((n,), bool)
+    send = jnp.zeros((n,), bool)
     epoch_of = jnp.zeros((n,), jnp.int32)
-
-    put = None
-    if mesh is not None:
-        shd = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(data_axis))
-        put = lambda a: jax.device_put(a, shd)
-
-    start = 0
-    if bootstrap:
-        nb = max(1, pb // 16)
-        pool, zb = serial_dp_means_pass(x[:nb], lam, k_max, pool)
-        z = z.at[:nb].set(zb)
-        send_all = send_all.at[:nb].set(True)  # bootstrapped points hit the master
-        start = nb
-
-    n_rest = n - start
-    t_epochs = max(1, math.ceil(n_rest / pb))
-    pad = t_epochs * pb - n_rest
-    xs = jnp.concatenate([x[start:], jnp.zeros((pad, d), x.dtype)], 0)
-    valid = jnp.concatenate([jnp.ones((n_rest,), bool), jnp.zeros((pad,), bool)])
-
-    stats_p, stats_a = [], []
+    stats = OCCStats(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
     z_prev = None
     it_done = 0
     for it in range(1, max_iters + 1):
         it_done = it
-        for t in range(t_epochs):
-            xe = xs[t * pb:(t + 1) * pb]
-            ve = valid[t * pb:(t + 1) * pb]
-            if put is not None:
-                xe, ve = put(xe), put(ve)
-            pool, ze, se, n_sent, n_acc = _dp_epoch(pool, xe, ve, lam2, validate_cap)
-            lo = start + t * pb
-            hi = min(lo + pb, n)
-            keep = hi - lo
-            z = z.at[lo:hi].set(ze[:keep])
-            send_all = send_all.at[lo:hi].set(se[:keep])
-            epoch_of = epoch_of.at[lo:hi].set(t)
-            if it == 1:
-                stats_p.append(int(n_sent))
-                stats_a.append(int(n_acc))
-        pool = _recompute_means(x, z, pool)
+        if it == 1:
+            res = eng.run(x, pool=pool, n_bootstrap=nb)
+            z, send, epoch_of, stats = res.assign, res.send, res.epoch_of, res.stats
+        else:
+            # Bootstrapped points keep their serial-prefix assignment; later
+            # passes re-run only the bulk-synchronous epochs (seed semantics).
+            res = eng.run(x[nb:], pool=pool)
+            z = z.at[nb:].set(res.assign)
+            send = send.at[nb:].set(res.send)
+        pool = txn.refine(res.pool, x, z)
         if z_prev is not None and bool(jnp.all(z == z_prev)):
             break
         z_prev = z
-    obj = dp_means_objective(x, pool.centers, lam, pool.mask)
-    stats = OCCStats(np.asarray(stats_p, np.int32), np.asarray(stats_a, np.int32))
-    return DPMeansResult(pool, z, stats, send_all, epoch_of, it_done, obj)
+    obj = txn.objective(x, z, pool)
+    return DPMeansResult(pool, z, stats, send, epoch_of, it_done, obj)
 
 
 def thm31_permutation(result: DPMeansResult, n: int) -> np.ndarray:

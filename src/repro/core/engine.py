@@ -1,0 +1,310 @@
+"""Unified OCC engine: one compiled epoch scan for every OCC algorithm.
+
+The paper's observation (and DESIGN.md §2-§3) is that DP-means, OFL, and
+BP-means are *one* pattern — optimistic per-point transactions against the
+replicated stale state C^{t-1}, plus a serializing validator.  The
+`OCCTransaction` protocol captures exactly the algorithm-specific pieces:
+
+  init_pool  — allocate the fixed-capacity global state (may use data stats)
+  make_state — per-point auxiliary state for a span of points (e.g. OFL's
+               counter-based uniforms, BP-means' previous-pass assignments)
+  propose    — the optimistic phase: one batched computation over an epoch's
+               points deciding which are sent to the validator
+  accept     — the serial validation rule for one proposal, given the pool
+               *including this epoch's previously accepted proposals*
+  writeback  — resolve per-point outputs from the validator's verdicts
+  refine     — the bulk-synchronous refinement between passes (mean /
+               least-squares re-estimation)
+  objective  — the algorithm's objective for reporting
+
+`OCCEngine` owns everything the three hand-rolled drivers used to copy:
+epoch padding and valid-masking, the serial bootstrap prefix (paper §4.2),
+bounded-master validation (`gather_validate`), mesh sharding of epoch
+inputs, and per-epoch statistics.  An entire pass — bootstrap prefix plus
+all T bulk-synchronous epochs — runs as a single `jax.lax.scan` inside ONE
+jit: the legacy drivers dispatched T compiled epochs from Python and forced
+a device→host sync per epoch via `int(n_sent)`; the engine accumulates
+`OCCStats` on device and returns them as arrays from the one compiled call
+(zero per-epoch host transfers, zero per-epoch dispatch overhead).
+
+Transactions are registered as jax pytrees (scalar hyperparameters and rng
+keys are leaves; shape-determining fields are static aux data), so the
+compiled pass is shared process-wide across engine instances — repeated
+calls with the same shapes hit the jit cache exactly like the legacy
+module-level epoch jits did.
+
+Streaming: `OCCEngine.partial_fit(batch)` reuses the same transactions and
+the same compiled scan for incremental epochs over arriving data — the
+online/heavy-traffic serving mode (see examples/streaming_clusters.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.occ import CenterPool, OCCStats, block_epochs, gather_validate
+
+__all__ = ["OCCTransaction", "OCCEngine", "OCCPassResult", "resolve_assignments"]
+
+
+@runtime_checkable
+class OCCTransaction(Protocol):
+    """What an algorithm must supply to run under the OCC engine.
+
+    Implementations must be registered as jax pytrees (dynamic leaves:
+    scalar hyperparameters, rng keys; static aux: anything shape-determining
+    such as k_max) so they can flow through the engine's jitted pass.
+    """
+
+    def init_pool(self, x: jnp.ndarray) -> CenterPool:
+        """Allocate the global state; may use data statistics (BP init_mean)."""
+        ...
+
+    def make_state(self, x: jnp.ndarray, offset: int = 0) -> Any:
+        """Per-point state pytree (leading dim len(x)) for points starting at
+        global index `offset`; () when the transaction is stateless."""
+        ...
+
+    def propose(self, pool: CenterPool, x_e: jnp.ndarray, state_e: Any
+                ) -> tuple[jnp.ndarray, jnp.ndarray, Any, Any]:
+        """Optimistic phase over one epoch's points against C^{t-1}.
+
+        Returns (send (B,) bool, payload (B, D), aux, safe) where `payload`
+        is what a sent point proposes (DP/OFL: the point; BP: its residual),
+        `aux` is the per-proposal pytree forwarded to `accept` (or None),
+        and `safe` is the resolved output for points not sent (e.g. the
+        nearest-center index, or BP's fitted assignment row).
+        """
+        ...
+
+    def accept(self, pool: CenterPool, payload_j: jnp.ndarray, aux_j: Any,
+               count0: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, Any]:
+        """Serial validation of one proposal.  `count0` is the pool count at
+        epoch start (BPValidate fits only against this epoch's accepts).
+        Returns (accept bool, vector to append, out_j for writeback)."""
+        ...
+
+    def writeback(self, send, slots, outs, safe, valid) -> Any:
+        """Combine validator verdicts into the per-point epoch output."""
+        ...
+
+    def refine(self, pool: CenterPool, x: jnp.ndarray, assign: Any) -> CenterPool:
+        """Bulk-synchronous refinement between passes (identity for OFL)."""
+        ...
+
+    def objective(self, x: jnp.ndarray, assign: Any, pool: CenterPool) -> jnp.ndarray:
+        ...
+
+
+class OCCPassResult(NamedTuple):
+    """Everything one compiled pass returns — all device arrays."""
+    pool: CenterPool
+    assign: Any             # (N,) int32 or (N, K_max) bool
+    send: jnp.ndarray       # (N,) bool — point hit the validator
+    epoch_of: jnp.ndarray   # (N,) int32 — epoch each point was processed in
+    stats: OCCStats         # (T,) proposed / accepted, on device
+
+
+def resolve_assignments(send, slots, outs, safe, valid):
+    """The DP/OFL writeback: accepted → new slot, rejected → validator's
+    nearest-center ref, not sent → optimistic nearest, padding → -1."""
+    z = jnp.where(send, jnp.where(slots >= 0, slots, outs), safe)
+    return jnp.where(valid, z, -1).astype(jnp.int32)
+
+
+# Trace counter: incremented only when the pass is (re)compiled.  Lets tests
+# assert the epoch loop lives inside a single compilation unit.
+_PASS_TRACES = 0
+
+
+def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap):
+    """One bulk-synchronous OCC epoch (any width, incl. the width-1 epochs
+    of the serial bootstrap prefix)."""
+    count0 = pool.count
+    send, payload, aux, safe = txn.propose(pool, x_e, state_e)
+    send = jnp.logical_and(send, valid_e)
+    accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
+    pool, slots, outs, sent_ovf = gather_validate(
+        pool, send, payload, accept, aux, cap=validate_cap)
+    assign_e = txn.writeback(send, slots, outs, safe, valid_e)
+    pool = pool._replace(overflow=jnp.logical_or(pool.overflow, sent_ovf))
+    n_sent = jnp.sum(send.astype(jnp.int32))
+    n_acc = jnp.sum((slots >= 0).astype(jnp.int32))
+    return pool, (assign_e, send, n_sent, n_acc)
+
+
+def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
+                 mesh, data_axis):
+    """The whole pass: bootstrap prefix + T epochs, one `lax.scan` each,
+    inside one jit.  All sizes static; no host round-trips."""
+    global _PASS_TRACES
+    _PASS_TRACES += 1
+    n, d = x.shape
+    nb = n_bootstrap
+
+    def epoch(pool, inp):
+        return _epoch_body(txn, pool, *inp, validate_cap)
+
+    # Serial bootstrap prefix (paper §4.2): width-1 epochs are exactly the
+    # serial algorithm — each point proposes against the fully up-to-date
+    # pool, so this reproduces serial_*_pass on x[:nb].
+    assign_b = None
+    if nb:
+        xb = x[:nb][:, None, :]
+        vb = jnp.ones((nb, 1), bool)
+        sb = jax.tree.map(lambda s: s[:nb][:, None], state)
+        pool, (ab, _, _, _) = jax.lax.scan(epoch, pool, (xb, vb, sb))
+        assign_b = jax.tree.map(lambda a: a.reshape((nb,) + a.shape[2:]), ab)
+
+    # Main epochs: pad to T*pb, reshape to (T, pb, ...), scan.
+    n_rest = n - nb
+    t_epochs = block_epochs(n_rest, pb)
+    pad = t_epochs * pb - n_rest
+
+    def stack(a):
+        flat = jnp.concatenate(
+            [a[nb:], jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0)
+        return flat.reshape((t_epochs, pb) + a.shape[1:])
+
+    xs = stack(x)
+    valid = stack(jnp.ones((n,), bool))
+    ss = jax.tree.map(stack, state)
+    if mesh is not None:
+        # Shard each epoch's points over the data axis: the optimistic phase
+        # parallelizes under GSPMD, the validation scan runs replicated
+        # (SPMD re-execution of the master).  See shardings.occ_epoch_spec.
+        from repro.distributed.shardings import occ_epoch_sharding
+        put = lambda a: jax.lax.with_sharding_constraint(
+            a, occ_epoch_sharding(mesh, data_axis, pb, a.ndim))
+        xs, valid = put(xs), put(valid)
+        ss = jax.tree.map(put, ss)
+
+    pool, (am, sm, n_sent, n_acc) = jax.lax.scan(epoch, pool, (xs, valid, ss))
+
+    unstack = lambda a: a.reshape((t_epochs * pb,) + a.shape[2:])[:n_rest]
+    assign = jax.tree.map(unstack, am)
+    send = unstack(sm)
+    if nb:
+        assign = jax.tree.map(lambda b, m: jnp.concatenate([b, m], 0),
+                              assign_b, assign)
+        # Bootstrapped points are processed by the master by construction.
+        send = jnp.concatenate([jnp.ones((nb,), bool), send], 0)
+    epoch_of = jnp.concatenate([
+        jnp.zeros((nb,), jnp.int32),
+        jnp.repeat(jnp.arange(t_epochs, dtype=jnp.int32), pb)[:n_rest]])
+    return OCCPassResult(pool, assign, send, epoch_of,
+                         OCCStats(proposed=n_sent, accepted=n_acc))
+
+
+_engine_pass_jit = jax.jit(
+    _engine_pass,
+    static_argnames=("pb", "validate_cap", "n_bootstrap", "mesh", "data_axis"))
+
+
+class OCCEngine:
+    """Driver for OCC transactions: batch passes and streaming epochs.
+
+    Args:
+      transaction: an `OCCTransaction` (pytree-registered).
+      pb: points per epoch (the paper's P*b product — only the product
+        matters algorithmically; `mesh` supplies the physical P).
+      validate_cap: bounded-master compaction (see occ.gather_validate);
+        overflow is surfaced on `pool.overflow`.
+      mesh / data_axis: optional device mesh; each epoch's points are
+        sharded over `data_axis` while the validation scan is replicated.
+    """
+
+    def __init__(self, transaction: OCCTransaction, pb: int,
+                 validate_cap: int | None = None,
+                 mesh: jax.sharding.Mesh | None = None,
+                 data_axis: str = "data"):
+        self.txn = transaction
+        self.pb = int(pb)
+        self.validate_cap = validate_cap
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.n_dispatches = 0       # compiled-pass invocations (1 per pass)
+        # streaming state
+        self._pool: CenterPool | None = None
+        self._n_seen = 0
+        self._stat_chunks: list[OCCStats] = []
+
+    # ------------------------------------------------------------- batch
+    def run(self, x: jnp.ndarray, *, pool: CenterPool | None = None,
+            state: Any = None, n_bootstrap: int = 0) -> OCCPassResult:
+        """One full pass over x as a single compiled call."""
+        if pool is None:
+            pool = self.txn.init_pool(x)
+        if state is None:
+            state = self.txn.make_state(x, 0)
+        res = _engine_pass_jit(
+            self.txn, pool, x, state, pb=self.pb,
+            validate_cap=self.validate_cap,
+            n_bootstrap=min(int(n_bootstrap), x.shape[0]),
+            mesh=self.mesh, data_axis=self.data_axis)
+        self.n_dispatches += 1
+        return res
+
+    def refine(self, pool: CenterPool, x: jnp.ndarray, assign: Any) -> CenterPool:
+        return self.txn.refine(pool, x, assign)
+
+    # --------------------------------------------------------- streaming
+    @property
+    def pool(self) -> CenterPool | None:
+        """Current streaming pool (None before the first partial_fit)."""
+        return self._pool
+
+    @property
+    def n_seen(self) -> int:
+        return self._n_seen
+
+    @property
+    def stats(self) -> OCCStats:
+        """All streaming epochs' stats so far, concatenated on device.
+
+        Chunks are consolidated into one array pair on read, so repeated
+        reads stay O(1) and the retained list never grows unboundedly."""
+        if not self._stat_chunks:
+            z = jnp.zeros((0,), jnp.int32)
+            return OCCStats(z, z)
+        if len(self._stat_chunks) > 1:
+            merged = OCCStats(
+                jnp.concatenate([s.proposed for s in self._stat_chunks]),
+                jnp.concatenate([s.accepted for s in self._stat_chunks]))
+            self._stat_chunks = [merged]
+        return self._stat_chunks[0]
+
+    def reset_stream(self) -> None:
+        self._pool, self._n_seen, self._stat_chunks = None, 0, []
+
+    def partial_fit(self, xb: jnp.ndarray, *, state: Any = None) -> OCCPassResult:
+        """Incremental epochs over an arriving batch (online serving mode).
+
+        The batch is processed against the pool accumulated so far; the
+        pool, the count of points seen, and the epoch statistics carry over
+        to the next call.  Per-point state is derived from the global point
+        index (`make_state(xb, n_seen)`), so e.g. OCC-OFL's counter-based
+        uniforms match a one-shot run over the concatenated stream.  When
+        every batch length is a multiple of pb the epoch boundaries line up
+        too and the stream is *identical* to the one-shot run; a short final
+        epoch inside a batch shifts later epoch boundaries, which is valid
+        OCC (Thm 3.1 still applies) but not the same epoch partition.
+        Returns this batch's OCCPassResult.
+        """
+        if self._pool is None:
+            self._pool = self.txn.init_pool(xb)
+        if state is None:
+            state = self.txn.make_state(xb, self._n_seen)
+        res = _engine_pass_jit(
+            self.txn, self._pool, xb, state, pb=self.pb,
+            validate_cap=self.validate_cap, n_bootstrap=0,
+            mesh=self.mesh, data_axis=self.data_axis)
+        self.n_dispatches += 1
+        self._pool = res.pool
+        self._n_seen += xb.shape[0]
+        self._stat_chunks.append(res.stats)
+        if len(self._stat_chunks) >= 64:
+            _ = self.stats          # consolidate chunks on long streams
+        return res

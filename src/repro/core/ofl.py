@@ -15,24 +15,34 @@ accepts iff u_i < min(1, d*^2/lam^2).  Since d* <= d, the joint event is
 exactly {u_i < min(1, d*^2/lam^2)} — the serial decision with the same u_i —
 so distributed and serial runs agree draw-for-draw, which makes Thm 3.1
 testable exactly rather than only in distribution.
+
+The uniforms are counter-based in the *global* point index, so the
+streaming surface (`OCCEngine.partial_fit`) reproduces a one-shot run over
+the concatenated stream draw-for-draw as well — exactly so when batch
+lengths are multiples of pb (otherwise the epoch partition shifts; still
+serializable, just a different epoch layout).
+
+The OCC version is a declarative `OFLTransaction` run by the unified
+`OCCEngine` (core/engine.py); `occ_ofl` remains as the backward-compatible
+wrapper returning `OFLResult`.
 """
 from __future__ import annotations
 
-import math
+from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.engine import OCCEngine, resolve_assignments
 from repro.core.objective import dp_means_objective
 from repro.core.occ import (
     CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
-    gather_validate,
 )
 
-__all__ = ["OFLResult", "point_uniforms", "serial_ofl", "occ_ofl"]
+__all__ = ["OFLResult", "OFLTransaction", "point_uniforms", "serial_ofl",
+           "occ_ofl"]
 
 
 class OFLResult(NamedTuple):
@@ -44,9 +54,11 @@ class OFLResult(NamedTuple):
     objective: jnp.ndarray
 
 
-def point_uniforms(key: jax.Array, n: int) -> jnp.ndarray:
-    """One counter-based uniform per point — shared by serial & OCC runs."""
-    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+def point_uniforms(key: jax.Array, n: int, offset: int = 0) -> jnp.ndarray:
+    """One counter-based uniform per global point index — shared by serial,
+    OCC, and streaming runs."""
+    idx = offset + jnp.arange(n)
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
     return jax.vmap(lambda k: jax.random.uniform(k))(keys)
 
 
@@ -56,6 +68,51 @@ def _ofl_accept(lam2):
         p = jnp.minimum(1.0, d2 / lam2)   # empty pool -> inf/lam2 -> 1
         return u_j < p, x_j, ref
     return accept_fn
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class OFLTransaction:
+    """OCC Online Facility Location as a transaction (Alg. 4/5): the
+    per-point state is its counter-based uniform draw, making the validator
+    decision the exact serial decision (App. B.3)."""
+    lam: Any
+    k_max: int
+    key: jax.Array
+
+    def tree_flatten(self):
+        return (self.lam, self.key), (self.k_max,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        lam, key = children
+        return cls(lam, aux[0], key)
+
+    def _lam2(self, dtype):
+        return jnp.asarray(self.lam, dtype) ** 2
+
+    def init_pool(self, x):
+        return make_pool(self.k_max, x.shape[-1], x.dtype)
+
+    def make_state(self, x, offset: int = 0):
+        return point_uniforms(self.key, x.shape[0], offset)
+
+    def propose(self, pool, x_e, u_e):
+        d2, idx = nearest_center(pool, x_e)
+        p_send = jnp.minimum(1.0, d2 / self._lam2(x_e.dtype))
+        return u_e < p_send, x_e, u_e, idx
+
+    def accept(self, pool, x_j, u_j, count0):
+        return _ofl_accept(self._lam2(x_j.dtype))(pool, x_j, u_j)
+
+    def writeback(self, send, slots, outs, safe, valid):
+        return resolve_assignments(send, slots, outs, safe, valid)
+
+    def refine(self, pool, x, z):
+        return pool   # single-pass algorithm: no refinement phase
+
+    def objective(self, x, z, pool):
+        return dp_means_objective(x, pool.centers, self.lam, pool.mask)
 
 
 @partial(jax.jit, static_argnames=("k_max",))
@@ -69,19 +126,6 @@ def serial_ofl(x: jnp.ndarray, u: jnp.ndarray, lam: float, k_max: int):
     return pool, z
 
 
-@partial(jax.jit, static_argnames=("validate_cap",))
-def _ofl_epoch(pool: CenterPool, xs, valid, u, lam2, validate_cap=None):
-    d2, idx = nearest_center(pool, xs)
-    p_send = jnp.minimum(1.0, d2 / lam2)
-    send = jnp.logical_and(u < p_send, valid)
-    pool2, slots, refs, v_overflow = gather_validate(
-        pool, send, xs, _ofl_accept(lam2), aux=u, cap=validate_cap)
-    z = jnp.where(send, jnp.where(slots >= 0, slots, refs), idx).astype(jnp.int32)
-    z = jnp.where(valid, z, -1)
-    pool2 = pool2._replace(overflow=jnp.logical_or(pool2.overflow, v_overflow))
-    return pool2, z, send, jnp.sum(send.astype(jnp.int32)), jnp.sum((slots >= 0).astype(jnp.int32))
-
-
 def occ_ofl(
     x: jnp.ndarray,
     lam: float,
@@ -92,38 +136,12 @@ def occ_ofl(
     mesh: jax.sharding.Mesh | None = None,
     data_axis: str = "data",
 ) -> OFLResult:
-    """OCC Online Facility Location (Alg. 4).  Single pass by construction."""
-    n, d = x.shape
-    lam2 = jnp.asarray(lam, x.dtype) ** 2
-    u = point_uniforms(key, n)
-    pool = make_pool(k_max, d, x.dtype)
-    t_epochs = max(1, math.ceil(n / pb))
-    pad = t_epochs * pb - n
-    xs = jnp.concatenate([x, jnp.zeros((pad, d), x.dtype)], 0)
-    us = jnp.concatenate([u, jnp.ones((pad,), u.dtype)], 0)
-    valid = jnp.concatenate([jnp.ones((n,), bool), jnp.zeros((pad,), bool)])
-
-    put = None
-    if mesh is not None:
-        shd = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(data_axis))
-        put = lambda a: jax.device_put(a, shd)
-
-    z = jnp.full((n,), -1, jnp.int32)
-    send_all = jnp.zeros((n,), bool)
-    epoch_of = jnp.zeros((n,), jnp.int32)
-    stats_p, stats_a = [], []
-    for t in range(t_epochs):
-        sl = slice(t * pb, (t + 1) * pb)
-        xe, ue, ve = xs[sl], us[sl], valid[sl]
-        if put is not None:
-            xe, ue, ve = put(xe), put(ue), put(ve)
-        pool, ze, se, n_sent, n_acc = _ofl_epoch(pool, xe, ve, ue, lam2, validate_cap)
-        lo, hi = t * pb, min((t + 1) * pb, n)
-        z = z.at[lo:hi].set(ze[:hi - lo])
-        send_all = send_all.at[lo:hi].set(se[:hi - lo])
-        epoch_of = epoch_of.at[lo:hi].set(t)
-        stats_p.append(int(n_sent))
-        stats_a.append(int(n_acc))
-    obj = dp_means_objective(x, pool.centers, lam, pool.mask)
-    stats = OCCStats(np.asarray(stats_p, np.int32), np.asarray(stats_a, np.int32))
-    return OFLResult(pool, z, stats, send_all, epoch_of, obj)
+    """OCC Online Facility Location (Alg. 4) — convenience wrapper running
+    `OFLTransaction` under `OCCEngine`.  Single pass by construction."""
+    txn = OFLTransaction(lam, k_max, key)
+    eng = OCCEngine(txn, pb, validate_cap=validate_cap, mesh=mesh,
+                    data_axis=data_axis)
+    res = eng.run(x)
+    obj = txn.objective(x, res.assign, res.pool)
+    return OFLResult(res.pool, res.assign, res.stats, res.send,
+                     res.epoch_of, obj)

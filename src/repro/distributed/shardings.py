@@ -23,7 +23,17 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardCtx", "shard_ctx", "current_ctx", "constrain", "batch_spec",
-           "param_specs", "input_shardings", "axes_that_divide"]
+           "param_specs", "input_shardings", "axes_that_divide",
+           "occ_epoch_sharding", "compat_shard_map"]
+
+
+def compat_shard_map(f, **kw):
+    """`jax.shard_map` across jax versions (older releases only have
+    `jax.experimental.shard_map.shard_map`)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    return sm(f, **kw)
 
 
 @dataclass
@@ -121,6 +131,17 @@ def batch_spec(batch: int, ctx: ShardCtx | None = None):
     """Sharding element for the global-batch dim (DP over pod+data)."""
     ctx = ctx or _CTX
     return axes_that_divide(batch, ctx.present_data_axes, ctx) or None
+
+
+def occ_epoch_sharding(mesh: Mesh, data_axis: str, pb: int,
+                       rank: int) -> NamedSharding:
+    """Sharding for the OCC engine's stacked (T, pb, ...) epoch inputs
+    (DESIGN.md §5): each epoch's pb points are sharded over `data_axis` —
+    the paper's P workers — with divisibility fallback to replication.
+    The leading epoch dim stays unsharded (it is the scan axis)."""
+    ctx = ShardCtx(mesh=mesh, data_axes=(data_axis,))
+    elem = _norm_elem(pb, data_axis, ctx)
+    return NamedSharding(mesh, P(None, elem, *([None] * (rank - 2))))
 
 
 def res_constrain(x: jax.Array, batch_axes) -> jax.Array:

@@ -1,0 +1,179 @@
+"""The unified OCC engine: single-compiled-call epoch loop (zero per-epoch
+host transfers), overflow surfacing, and the streaming partial_fit surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CenterPool, OCCEngine, DPMeansTransaction, OFLTransaction,
+    BPMeansTransaction, gather_validate, make_pool, nearest_center,
+    occ_dp_means, occ_ofl,
+)
+from repro.core import engine as engine_mod
+from repro.data import dp_stick_breaking_data
+
+LAM = 4.0
+
+
+# ------------------------------------------------------------------ one jit
+
+def test_pass_is_one_compiled_call_no_per_epoch_transfers():
+    """A multi-epoch pass is ONE trace and ONE dispatch; OCCStats come back
+    as device arrays from that call — the legacy drivers dispatched T
+    compiled epochs and forced a device->host int() sync per epoch."""
+    # distinctive shapes so no other test has warmed this cache entry
+    x, _, _ = dp_stick_breaking_data(488, seed=11, dim=12)
+    x = jnp.asarray(x)
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=99), pb=61)
+    t_epochs = -(-488 // 61)
+
+    traces0 = engine_mod._PASS_TRACES
+    res = eng.run(x)
+    assert eng.n_dispatches == 1
+    assert engine_mod._PASS_TRACES - traces0 == 1   # epoch loop inside 1 jit
+
+    # stats for all epochs are device arrays out of the single call
+    assert isinstance(res.stats.proposed, jax.Array)
+    assert isinstance(res.stats.accepted, jax.Array)
+    assert res.stats.proposed.shape == (t_epochs,)
+    assert isinstance(res.assign, jax.Array) and isinstance(res.send, jax.Array)
+
+    # a second pass with identical shapes reuses the compilation
+    eng.run(x)
+    assert eng.n_dispatches == 2
+    assert engine_mod._PASS_TRACES - traces0 == 1
+
+
+def test_engine_matches_wrapper():
+    """The convenience wrapper is a thin shim: engine + refine == occ_dp_means."""
+    x, _, _ = dp_stick_breaking_data(512, seed=3)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=128)
+    eng = OCCEngine(txn, pb=64)
+    res = eng.run(x)
+    pool = txn.refine(res.pool, x, res.assign)
+    ref = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)
+    assert np.array_equal(np.asarray(res.assign), np.asarray(ref.z))
+    np.testing.assert_array_equal(np.asarray(pool.centers),
+                                  np.asarray(ref.pool.centers))
+    assert np.array_equal(np.asarray(res.stats.proposed),
+                          np.asarray(ref.stats.proposed))
+
+
+# ----------------------------------------------------------------- overflow
+
+def test_gather_validate_sent_overflow_flag():
+    """cap < #sent proposals -> sent_overflow raised; proposals beyond the
+    cap are dropped (slot -1), the first `cap` validated in index order."""
+    pool = make_pool(16, 2)
+    pts = jnp.asarray(np.eye(8, 2, dtype=np.float32) * 100
+                      + np.arange(8, dtype=np.float32)[:, None] * 50)
+    send = jnp.ones((8,), bool)
+
+    def accept_fn(pool, x_j, aux_j):
+        d2, ref = nearest_center(pool, x_j)
+        return d2 > 1.0, x_j, ref
+
+    pool2, slots, _, ovf = gather_validate(pool, send, pts, accept_fn, cap=3)
+    assert bool(ovf)
+    assert int(pool2.count) == 3
+    assert np.array_equal(np.asarray(slots[:3]), [0, 1, 2])
+    assert (np.asarray(slots[3:]) == -1).all()
+
+    # cap not exceeded -> no flag, identical to the unbounded validator
+    send2 = send.at[3:].set(False)
+    pool3, slots3, _, ovf2 = gather_validate(pool, send2, pts, accept_fn, cap=3)
+    assert not bool(ovf2)
+    assert int(pool3.count) == 3
+
+
+def test_sent_overflow_propagates_to_pool_through_engine():
+    """The engine surfaces validate_cap overflow on pool.overflow even when
+    the pool itself has spare capacity."""
+    x, _, _ = dp_stick_breaking_data(256, seed=6)
+    x = jnp.asarray(x)
+    # epoch 1 sends everything (empty pool); cap=8 << pb=64 overflows
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=256), pb=64, validate_cap=8)
+    res = eng.run(x)
+    assert bool(res.pool.overflow)
+    assert int(res.pool.count) < 256          # pool capacity NOT the cause
+    # stats still count what was optimistically sent
+    assert int(res.stats.proposed[0]) == 64
+
+
+def test_pool_capacity_overflow_through_engine():
+    """CenterPool.overflow rises when validated accepts exceed k_max."""
+    x, _, _ = dp_stick_breaking_data(256, seed=6)
+    eng = OCCEngine(DPMeansTransaction(0.01, k_max=8), pb=64)
+    res = eng.run(jnp.asarray(x))
+    assert bool(res.pool.overflow)
+    assert int(res.pool.count) == 8
+
+
+# ---------------------------------------------------------------- streaming
+
+def test_partial_fit_stream_equals_batch_dp():
+    """Streaming epochs over arriving batches == the one-shot batch pass
+    (same pool evolution, same assignments, same stats)."""
+    x, _, _ = dp_stick_breaking_data(512, seed=4)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=128)
+
+    batch = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)
+
+    eng = OCCEngine(txn, pb=64)
+    zs = [eng.partial_fit(x[i:i + 128]).assign for i in range(0, 512, 128)]
+    z_stream = np.concatenate([np.asarray(z) for z in zs])
+
+    assert eng.n_seen == 512
+    assert int(eng.pool.count) == int(batch.pool.count)
+    assert np.array_equal(z_stream, np.asarray(batch.z))
+    # note: batch.pool went through refine(); compare pre-refine via stats
+    assert np.array_equal(np.asarray(eng.stats.proposed),
+                          np.asarray(batch.stats.proposed))
+    assert np.array_equal(np.asarray(eng.stats.accepted),
+                          np.asarray(batch.stats.accepted))
+
+
+def test_partial_fit_stream_equals_batch_ofl_bitexact():
+    """OFL's counter-based uniforms are keyed on the global point index, so
+    the stream reproduces the one-shot run draw-for-draw (App. B.3)."""
+    x, _, _ = dp_stick_breaking_data(384, seed=5)
+    x = jnp.asarray(x)
+    key = jax.random.key(9)
+    batch = occ_ofl(x, LAM, pb=64, key=key, k_max=256)
+
+    eng = OCCEngine(OFLTransaction(LAM, 256, key), pb=64)
+    zs = [eng.partial_fit(x[i:i + 64]).assign for i in range(0, 384, 64)]
+    assert np.array_equal(np.concatenate([np.asarray(z) for z in zs]),
+                          np.asarray(batch.z))
+    k = int(batch.pool.count)
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers[:k]),
+                                  np.asarray(batch.pool.centers[:k]))
+
+
+def test_partial_fit_stats_accumulate_on_device():
+    x, _, _ = dp_stick_breaking_data(256, seed=8)
+    x = jnp.asarray(x)
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=64), pb=32)
+    assert eng.stats.proposed.shape == (0,)
+    eng.partial_fit(x[:128])
+    eng.partial_fit(x[128:])
+    assert isinstance(eng.stats.proposed, jax.Array)
+    assert eng.stats.proposed.shape == (8,)      # 2 batches x 4 epochs
+    eng.reset_stream()
+    assert eng.pool is None and eng.n_seen == 0
+
+
+def test_bp_transaction_through_engine():
+    """BP-means runs through the same engine (feature pool, (N,K) assigns)."""
+    from repro.data import bp_stick_breaking_data
+    xb, _, _ = bp_stick_breaking_data(128, seed=2)
+    xb = jnp.asarray(xb)
+    txn = BPMeansTransaction(LAM, k_max=32)
+    eng = OCCEngine(txn, pb=32)
+    res = eng.run(xb)
+    assert res.assign.shape == (128, 32) and res.assign.dtype == bool
+    assert isinstance(res.pool, CenterPool)
+    assert res.stats.proposed.shape == (4,)

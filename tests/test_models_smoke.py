@@ -9,6 +9,9 @@ from repro.configs import ARCHS, TrainConfig, reduced
 from repro.models import build_model
 from repro.training.step import make_train_step, train_state_init
 
+# Heavy per-arch LM smoke tests — deselected in CI (`-m "not slow"`).
+pytestmark = pytest.mark.slow
+
 ALL_ARCHS = sorted(ARCHS)
 
 

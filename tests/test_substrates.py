@@ -125,9 +125,8 @@ def test_checkpoint_missing_leaf_raises(tmp_path):
 # ------------------------------------------------------------------ elastic
 
 def test_elastic_plan_shrinks_data_axis():
-    import jax as _jax
-    mesh = _jax.make_mesh((1,), ("data",),
-                          axis_types=(_jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_mesh
+    mesh = compat_mesh((1,), ("data",))
 
     class FakeMesh:
         shape = {"pod": 2, "data": 16, "model": 16}
