@@ -1,14 +1,19 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig3,fig4,...]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--quick] [--only fig3,...]
 
 Suites:
   fig3       — paper Fig 3 / Fig 6: rejections vs N, bounded by Pb
   fig4       — paper Fig 4: strong scaling (emulated hosts + workload model)
   occ_engine — single-jit epoch scan vs legacy Python epoch loop
+  validator  — precomputed (D-free) validator vs legacy per-step recompute
   kernels    — Pallas kernel microbenches
   roofline   — §Roofline summary from the dry-run artifacts
+
+--fast shrinks repeats/sizes (local iteration); --quick shrinks further to
+a smoke pass over EVERY suite — wired into CI so benchmark scripts can't
+silently rot (numbers from --quick are not meaningful, only liveness).
 """
 from __future__ import annotations
 
@@ -19,12 +24,16 @@ import sys
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="smaller repeats / sizes (CI mode)")
+                    help="smaller repeats / sizes (local iteration)")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal smoke sizes for CI — liveness only")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig3,fig4,occ_engine,kernels,roofline")
+                         "fig3,fig4,occ_engine,validator,kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if args.quick:
+        args.fast = True
 
     def want(name):
         return only is None or name in only
@@ -34,20 +43,32 @@ def main(argv=None) -> None:
     if want("fig3"):
         from benchmarks import fig3_rejections
         rows += fig3_rejections.run(
-            repeats=5 if args.fast else 20,
-            ns=(256, 1024) if args.fast else (256, 1024, 2560))
+            repeats=1 if args.quick else (5 if args.fast else 20),
+            ns=(256,) if args.quick else
+               ((256, 1024) if args.fast else (256, 1024, 2560)),
+            pbs=(64,) if args.quick else (16, 64, 256))
     if want("fig4"):
         from benchmarks import fig4_scaling
         rows += fig4_scaling.run(
-            n=4096 if args.fast else 16384,
-            pb=512 if args.fast else 2048,
-            ps=(1, 2, 4) if args.fast else (1, 2, 4, 8))
+            n=1024 if args.quick else (4096 if args.fast else 16384),
+            pb=256 if args.quick else (512 if args.fast else 2048),
+            ps=(1, 2) if args.quick else
+               ((1, 2, 4) if args.fast else (1, 2, 4, 8)))
     if want("occ_engine"):
         from benchmarks import occ_engine
         rows += occ_engine.run(
-            n=2048 if args.fast else 8192,
+            n=512 if args.quick else (2048 if args.fast else 8192),
             pb=128 if args.fast else 256,
-            repeats=3 if args.fast else 5)
+            repeats=1 if args.quick else (3 if args.fast else 5))
+    if want("validator"):
+        from benchmarks import validator_scan
+        rows += validator_scan.run(
+            n=256 if args.quick else (1024 if args.fast else 2048),
+            d=64 if args.quick else (128 if args.fast else 256),
+            k_max=64 if args.quick else (256 if args.fast else 512),
+            pb=64 if args.quick else (256 if args.fast else 512),
+            cap=32 if args.quick else (128 if args.fast else 256),
+            repeats=1 if args.quick else 3)
     if want("kernels"):
         from benchmarks import kernels
         rows += kernels.run()

@@ -1,0 +1,97 @@
+"""Precomputed (D-free) validator vs legacy per-step recompute.
+
+The legacy serializing validator does O(cap · K_max · D) *sequential* work
+per epoch: every scan step recomputes distances against the full
+fixed-capacity pool and rewrites the (K_max, D) center carry.  The
+precomputed path (DESIGN.md §9) batches all D-dimensional work into one MXU
+precompute — payload→C^{t-1} distances reused from propose plus one
+(cap, cap) payload pairwise matrix — leaving an O(cap²) scalar scan and a
+single batched pool write.
+
+This benchmark times both paths of the SAME compiled engine pass on a
+validator-bound configuration (large cap, K_max >= 512, D >= 256), checks
+they produce bit-identical results, and records the trajectory in
+BENCH_validator.json.
+
+  PYTHONPATH=src python -m benchmarks.validator_scan
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPMeansTransaction, OCCEngine
+from repro.core.occ import block_epochs
+from repro.data import dp_stick_breaking_data
+
+
+def run(n: int = 2048, d: int = 256, k_max: int = 512, pb: int = 512,
+        cap: int = 256, lam: float = 16.0, repeats: int = 3,
+        out_path: str | None = None, quiet: bool = False):
+    x, _, _ = dp_stick_breaking_data(n, dim=d, seed=0)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(lam, k_max=k_max)
+    t_epochs = block_epochs(n, pb)
+
+    eng_fast = OCCEngine(txn, pb, validate_cap=cap,
+                         validate_mode="precomputed")
+    eng_legacy = OCCEngine(txn, pb, validate_cap=cap,
+                           validate_mode="legacy")
+
+    # warm both compilations and check the math is bit-identical
+    rf = jax.block_until_ready(eng_fast.run(x))
+    rl = jax.block_until_ready(eng_legacy.run(x))
+    assert np.array_equal(np.asarray(rf.assign), np.asarray(rl.assign))
+    assert np.array_equal(np.asarray(rf.pool.centers),
+                          np.asarray(rl.pool.centers))
+    assert np.array_equal(np.asarray(rf.stats.proposed),
+                          np.asarray(rl.stats.proposed))
+
+    t0 = time.time()
+    for _ in range(repeats):
+        jax.block_until_ready(eng_legacy.run(x))
+    legacy_s = (time.time() - t0) / repeats
+
+    t0 = time.time()
+    for _ in range(repeats):
+        jax.block_until_ready(eng_fast.run(x))
+    fast_s = (time.time() - t0) / repeats
+
+    record = {
+        "bench": "validator_scan",
+        "n": n, "d": d, "k_max": k_max, "pb": pb, "cap": cap,
+        "t_epochs": t_epochs, "repeats": repeats,
+        "legacy_wall_s": legacy_s,
+        "precomputed_wall_s": fast_s,
+        "speedup": legacy_s / fast_s,
+        "legacy_step_cost": "O(cap*K_max*D) sequential + (K_max,D) carry",
+        "precomputed_step_cost": "one MXU precompute + O(cap^2) scalar scan",
+        "proposed_total": int(np.asarray(rf.stats.proposed).sum()),
+        "accepted_total": int(np.asarray(rf.stats.accepted).sum()),
+    }
+    # Only persist when a path is given (the __main__ canonical run does);
+    # suite/CI fast-mode invocations must not clobber the tracked record.
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+
+    rows = [
+        (f"validator_legacy_n{n}_d{d}_k{k_max}_cap{cap}", legacy_s * 1e6,
+         "per_step=O(K_max*D)"),
+        (f"validator_precomputed_n{n}_d{d}_k{k_max}_cap{cap}", fast_s * 1e6,
+         f"per_step=O(cap);speedup={legacy_s / fast_s:.2f}x"),
+    ]
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(out_path=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_validator.json"))

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import OCCEngine
+from repro.core.engine import OCCEngine, accumulate_pass_stats
 from repro.core.objective import bp_means_objective
 from repro.core.occ import CenterPool, OCCStats, make_pool, serial_validate
 
@@ -111,6 +111,12 @@ class BPMeansTransaction:
         resid2 = jnp.sum(r * r, axis=-1)
         return resid2 > self._lam2(x_e.dtype), r, None, z_old
 
+    # No precompute_accept fast path: BPValidate APPENDS THE REFIT RESIDUAL,
+    # not the sent payload — the vector entering the pool depends on which
+    # features were accepted earlier in the scan, so a payload-pairwise
+    # distance matrix cannot cover the distances later steps need (the
+    # ValidatePre premise fails).  BP-means stays on the legacy per-step
+    # refit below; the engine resolves validate_mode="auto" to "legacy".
     def accept(self, pool, f_new, aux_j, count0):
         # BPValidate: fit f_new against features accepted *this epoch*
         # (slots >= count0), accept the residual if still badly represented.
@@ -217,23 +223,29 @@ def occ_bp_means(
     z = txn.make_state(x)
     send = jnp.zeros((n,), bool)
     epoch_of = jnp.zeros((n,), jnp.int32)
-    stats = OCCStats(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    stat_parts: list[OCCStats] = []
+    epoch_base = 0
     z_prev = None
     it_done = 0
     for it in range(1, max_iters + 1):
         it_done = it
         if it == 1:
             res = eng.run(x, pool=pool, state=z, n_bootstrap=nb)
-            z, send, epoch_of, stats = res.assign, res.send, res.epoch_of, res.stats
+            z, send, epoch_of = res.assign, res.send, res.epoch_of
         else:
             # Bootstrapped points keep their serial-prefix assignment; later
             # passes re-run only the bulk-synchronous epochs (seed semantics).
             res = eng.run(x[nb:], pool=pool, state=z[nb:])
             z = z.at[nb:].set(res.assign)
             send = send.at[nb:].set(res.send)
+            epoch_of = epoch_of.at[nb:].set(res.epoch_of + epoch_base)
+        # Every pass's validator load is recorded, with global epoch numbers.
+        stat_parts.append(res.stats)
+        epoch_base += res.stats.proposed.shape[0]
         pool = txn.refine(res.pool, x, z)
         if z_prev is not None and bool(jnp.all(z == z_prev)):
             break
         z_prev = z
+    stats = accumulate_pass_stats(stat_parts)
     obj = txn.objective(x, z, pool)
     return BPMeansResult(pool, z, stats, send, epoch_of, it_done, obj)

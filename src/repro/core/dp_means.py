@@ -19,10 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import OCCEngine, resolve_assignments
-from repro.core.objective import dp_means_objective
+from repro.core.engine import (
+    OCCEngine, accumulate_pass_stats, resolve_assignments,
+)
+from repro.core.objective import dp_means_objective, sq_dists
 from repro.core.occ import (
-    CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
+    CenterPool, OCCStats, ValidatePre, make_pool, nearest_center,
+    nearest_center_with_new, serial_validate,
 )
 
 __all__ = ["DPMeansResult", "DPMeansTransaction", "serial_dp_means_pass",
@@ -74,11 +77,28 @@ class DPMeansTransaction:
 
     def propose(self, pool, x_e, state_e):
         d2, idx = nearest_center(pool, x_e)
-        return d2 > self._lam2(x_e.dtype), x_e, None, idx
+        # Thread (d2, idx) to the validator: accept/precompute_accept reuse
+        # them instead of recomputing the C^{t-1} distances from scratch.
+        # Threshold in d2's dtype — f32 on the Pallas backend regardless of
+        # input dtype — so propose and both validator paths round λ² alike.
+        return d2 > self._lam2(d2.dtype), x_e, (d2, idx), idx
 
     def accept(self, pool, x_j, aux_j, count0):
-        d2, ref = nearest_center(pool, x_j)
-        return d2 > self._lam2(x_j.dtype), x_j, ref
+        # Legacy path: only this epoch's new slots (>= count0) are measured
+        # fresh; the C^{t-1} part comes threaded from propose.
+        d2s_j, idxs_j = aux_j
+        d2, ref = nearest_center_with_new(pool, x_j, d2s_j, idxs_j, count0)
+        return d2 > self._lam2(d2.dtype), x_j, ref
+
+    def precompute_accept(self, pool, payload_c, aux_c, count0):
+        # Fast path (DESIGN.md §9): the C^{t-1} distances were already found
+        # by propose (threaded in aux); the only fresh MXU work is the
+        # payload pairwise matrix — after which DPValidate is pure scalar.
+        d2s, idxs = aux_c
+        return ValidatePre(d2s, idxs, sq_dists(payload_c, payload_c), None)
+
+    def accept_pre(self, d2_cur, aux_j):
+        return d2_cur > self._lam2(d2_cur.dtype)
 
     def writeback(self, send, slots, outs, safe, valid):
         return resolve_assignments(send, slots, outs, safe, valid)
@@ -188,24 +208,31 @@ def occ_dp_means(
     z = jnp.full((n,), -1, jnp.int32)
     send = jnp.zeros((n,), bool)
     epoch_of = jnp.zeros((n,), jnp.int32)
-    stats = OCCStats(jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    stat_parts: list[OCCStats] = []
+    epoch_base = 0
     z_prev = None
     it_done = 0
     for it in range(1, max_iters + 1):
         it_done = it
         if it == 1:
             res = eng.run(x, pool=pool, n_bootstrap=nb)
-            z, send, epoch_of, stats = res.assign, res.send, res.epoch_of, res.stats
+            z, send, epoch_of = res.assign, res.send, res.epoch_of
         else:
             # Bootstrapped points keep their serial-prefix assignment; later
             # passes re-run only the bulk-synchronous epochs (seed semantics).
             res = eng.run(x[nb:], pool=pool)
             z = z.at[nb:].set(res.assign)
             send = send.at[nb:].set(res.send)
+            epoch_of = epoch_of.at[nb:].set(res.epoch_of + epoch_base)
+        # Every pass's validator load is recorded — epochs number globally
+        # across passes, so stats[t] lines up with epoch_of == t.
+        stat_parts.append(res.stats)
+        epoch_base += res.stats.proposed.shape[0]
         pool = txn.refine(res.pool, x, z)
         if z_prev is not None and bool(jnp.all(z == z_prev)):
             break
         z_prev = z
+    stats = accumulate_pass_stats(stat_parts)
     obj = txn.objective(x, z, pool)
     return DPMeansResult(pool, z, stats, send, epoch_of, it_done, obj)
 

@@ -44,9 +44,14 @@ from typing import Any, NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core.occ import CenterPool, OCCStats, block_epochs, gather_validate
+from repro.core.occ import (
+    CenterPool, OCCStats, block_epochs, gather_validate,
+    precomputed_gather_validate,
+)
 
-__all__ = ["OCCTransaction", "OCCEngine", "OCCPassResult", "resolve_assignments"]
+__all__ = ["OCCTransaction", "OCCEngine", "OCCPassResult",
+           "resolve_assignments", "resolve_validate_mode",
+           "accumulate_pass_stats"]
 
 
 @runtime_checkable
@@ -83,7 +88,26 @@ class OCCTransaction(Protocol):
                count0: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, Any]:
         """Serial validation of one proposal.  `count0` is the pool count at
         epoch start (BPValidate fits only against this epoch's accepts).
-        Returns (accept bool, vector to append, out_j for writeback)."""
+        Returns (accept bool, vector to append, out_j for writeback).
+
+        This is the legacy / reference path: one D-dimensional computation
+        per sequential scan step.  Transactions whose accepted append vector
+        IS the payload should ALSO implement the optional fast-path pair
+
+          precompute_accept(pool, payload_c, aux_c, count0) -> ValidatePre
+              batch-compute every D-dimensional quantity the validator can
+              need, ONCE on the MXU (see occ.ValidatePre) — reusing the
+              d2/idx the propose phase already found via `aux_c` rather than
+              recomputing them;
+          accept_pre(d2_cur, aux_j) -> bool
+              the scalar accept rule given the min squared distance to the
+              current pool,
+
+        which degrade the serializing scan to O(cap²) scalar work
+        (occ.precomputed_validate).  The engine picks the fast path whenever
+        `precompute_accept` is defined (see `resolve_validate_mode`);
+        BP-means cannot use it — its append vector is the validator-refit
+        residual, not the sent payload — and stays on this path."""
         ...
 
     def writeback(self, send, slots, outs, safe, valid) -> Any:
@@ -114,20 +138,57 @@ def resolve_assignments(send, slots, outs, safe, valid):
     return jnp.where(valid, z, -1).astype(jnp.int32)
 
 
+def accumulate_pass_stats(stat_parts: list[OCCStats]) -> OCCStats:
+    """Concatenate per-pass OCCStats into one globally-epoch-numbered pair
+    (empty input → empty stats).  Shared by the multi-pass wrappers so
+    every pass's validator load is recorded, not just pass 1's."""
+    if not stat_parts:
+        z = jnp.zeros((0,), jnp.int32)
+        return OCCStats(z, z)
+    return OCCStats(
+        jnp.concatenate([s.proposed for s in stat_parts]),
+        jnp.concatenate([s.accepted for s in stat_parts]))
+
+
 # Trace counter: incremented only when the pass is (re)compiled.  Lets tests
 # assert the epoch loop lives inside a single compilation unit.
 _PASS_TRACES = 0
 
 
-def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap):
+def resolve_validate_mode(txn, validate_mode: str = "auto") -> str:
+    """Which validator the engine runs for this transaction.
+
+    "auto" resolves to "precomputed" when the transaction defines the
+    `precompute_accept` / `accept_pre` fast-path pair (DP-means, OFL) and to
+    "legacy" otherwise (BP-means); "precomputed" / "legacy" force the path.
+    """
+    has_fast = (callable(getattr(txn, "precompute_accept", None))
+                and callable(getattr(txn, "accept_pre", None)))
+    if validate_mode == "auto":
+        return "precomputed" if has_fast else "legacy"
+    if validate_mode not in ("precomputed", "legacy"):
+        raise ValueError(f"unknown validate_mode {validate_mode!r}")
+    if validate_mode == "precomputed" and not has_fast:
+        raise ValueError(
+            f"{type(txn).__name__} defines no precompute_accept fast path")
+    return validate_mode
+
+
+def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap,
+                validate_mode: str = "auto", replicate=None):
     """One bulk-synchronous OCC epoch (any width, incl. the width-1 epochs
     of the serial bootstrap prefix)."""
     count0 = pool.count
     send, payload, aux, safe = txn.propose(pool, x_e, state_e)
     send = jnp.logical_and(send, valid_e)
-    accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
-    pool, slots, outs, sent_ovf = gather_validate(
-        pool, send, payload, accept, aux, cap=validate_cap)
+    if resolve_validate_mode(txn, validate_mode) == "precomputed":
+        pool, slots, outs, sent_ovf = precomputed_gather_validate(
+            pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
+            cap=validate_cap, replicate=replicate)
+    else:
+        accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
+        pool, slots, outs, sent_ovf = gather_validate(
+            pool, send, payload, accept, aux, cap=validate_cap)
     assign_e = txn.writeback(send, slots, outs, safe, valid_e)
     pool = pool._replace(overflow=jnp.logical_or(pool.overflow, sent_ovf))
     n_sent = jnp.sum(send.astype(jnp.int32))
@@ -136,7 +197,7 @@ def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap):
 
 
 def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
-                 mesh, data_axis):
+                 mesh, data_axis, validate_mode="auto"):
     """The whole pass: bootstrap prefix + T epochs, one `lax.scan` each,
     inside one jit.  All sizes static; no host round-trips."""
     global _PASS_TRACES
@@ -144,8 +205,18 @@ def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
     n, d = x.shape
     nb = n_bootstrap
 
+    replicate = None
+    if mesh is not None:
+        # The validator is the replicated master: pin its compacted (cap, …)
+        # buffers to the replicated spec so GSPMD gathers once at compaction
+        # instead of resharding mid-scan (shardings.occ_validate_sharding).
+        from repro.distributed.shardings import occ_validate_sharding
+        replicate = lambda a: jax.lax.with_sharding_constraint(
+            a, occ_validate_sharding(mesh, a.ndim))
+
     def epoch(pool, inp):
-        return _epoch_body(txn, pool, *inp, validate_cap)
+        return _epoch_body(txn, pool, *inp, validate_cap, validate_mode,
+                           replicate)
 
     # Serial bootstrap prefix (paper §4.2): width-1 epochs are exactly the
     # serial algorithm — each point proposes against the fully up-to-date
@@ -200,7 +271,8 @@ def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
 
 _engine_pass_jit = jax.jit(
     _engine_pass,
-    static_argnames=("pb", "validate_cap", "n_bootstrap", "mesh", "data_axis"))
+    static_argnames=("pb", "validate_cap", "n_bootstrap", "mesh", "data_axis",
+                     "validate_mode"))
 
 
 class OCCEngine:
@@ -212,6 +284,11 @@ class OCCEngine:
         matters algorithmically; `mesh` supplies the physical P).
       validate_cap: bounded-master compaction (see occ.gather_validate);
         overflow is surfaced on `pool.overflow`.
+      validate_mode: "auto" (default — precomputed fast path when the
+        transaction supports it, see `resolve_validate_mode`), or force
+        "precomputed" / "legacy".  The two paths are bit-identical
+        (tests/test_validator_equivalence.py); legacy is retained as the
+        full-recompute reference implementation.
       mesh / data_axis: optional device mesh; each epoch's points are
         sharded over `data_axis` while the validation scan is replicated.
     """
@@ -219,12 +296,14 @@ class OCCEngine:
     def __init__(self, transaction: OCCTransaction, pb: int,
                  validate_cap: int | None = None,
                  mesh: jax.sharding.Mesh | None = None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data",
+                 validate_mode: str = "auto"):
         self.txn = transaction
         self.pb = int(pb)
         self.validate_cap = validate_cap
         self.mesh = mesh
         self.data_axis = data_axis
+        self.validate_mode = resolve_validate_mode(transaction, validate_mode)
         self.n_dispatches = 0       # compiled-pass invocations (1 per pass)
         # streaming state
         self._pool: CenterPool | None = None
@@ -243,7 +322,8 @@ class OCCEngine:
             self.txn, pool, x, state, pb=self.pb,
             validate_cap=self.validate_cap,
             n_bootstrap=min(int(n_bootstrap), x.shape[0]),
-            mesh=self.mesh, data_axis=self.data_axis)
+            mesh=self.mesh, data_axis=self.data_axis,
+            validate_mode=self.validate_mode)
         self.n_dispatches += 1
         return res
 
@@ -300,7 +380,8 @@ class OCCEngine:
         res = _engine_pass_jit(
             self.txn, self._pool, xb, state, pb=self.pb,
             validate_cap=self.validate_cap, n_bootstrap=0,
-            mesh=self.mesh, data_axis=self.data_axis)
+            mesh=self.mesh, data_axis=self.data_axis,
+            validate_mode=self.validate_mode)
         self.n_dispatches += 1
         self._pool = res.pool
         self._n_seen += xb.shape[0]

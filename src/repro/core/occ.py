@@ -13,6 +13,12 @@ order of Thm 3.1); validation is a deterministic `lax.scan` in global index
 order, executed replicated on every device (SPMD re-execution of the
 "master") or gathered to a single device (classic mode).
 
+Two validator implementations share those serial semantics (DESIGN.md §9):
+`serial_validate` / `gather_validate` — the legacy reference, one
+D-dimensional recompute per sequential step — and `precomputed_validate` /
+`precomputed_gather_validate`, which batch every D-dimensional quantity
+into one MXU precompute (`ValidatePre`) and scan over pure scalars.
+
 The global center/feature set C grows over time; JAX needs static shapes, so
 C lives in a fixed-capacity masked buffer (`CenterPool`). Overflow is
 detected and surfaced — it is the analogue of the paper's master running out
@@ -27,10 +33,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.objective import sq_dists
+from repro.kernels import ops as _kops
 
 __all__ = [
     "CenterPool", "make_pool", "pool_append_serial", "block_epochs",
-    "serial_validate", "nearest_center", "OCCStats",
+    "serial_validate", "nearest_center", "nearest_center_with_new",
+    "OCCStats", "ValidatePre", "precomputed_validate",
+    "precomputed_gather_validate",
 ]
 
 
@@ -57,17 +66,48 @@ def make_pool(k_max: int, dim: int, dtype=jnp.float32) -> CenterPool:
     )
 
 
-def nearest_center(pool: CenterPool, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+def nearest_center(pool: CenterPool, x: jnp.ndarray,
+                   backend: str = "auto") -> tuple[jnp.ndarray, jnp.ndarray]:
     """Min squared distance and argmin over valid centers.
 
     x: (..., D).  Returns (d2min (...,), idx (...,)).  Empty pool -> +inf / -1.
+
+    Routed through the `kernels/ops.assign` backend dispatch (DESIGN.md §9):
+    MXU-tiled Pallas on TPU with the work restricted to a count-rounded
+    active prefix of the pool, jnp reference elsewhere.  Sub-tile batches
+    (single-point serial-scan steps) stay on the jnp path even on TPU —
+    a per-step pallas_call on an 8-row-padded point is pure overhead, and
+    keeping the serial references on one primitive preserves their
+    bit-exactness against the validator's jnp-computed distances.
     """
-    d2 = sq_dists(x.reshape(-1, x.shape[-1]), pool.centers)
-    d2 = jnp.where(pool.mask[None, :], d2, jnp.inf)
-    d2min = jnp.min(d2, axis=-1)
-    idx = jnp.where(jnp.isfinite(d2min), jnp.argmin(d2, axis=-1), -1)
+    xf = x.reshape(-1, x.shape[-1])
+    if backend == "auto" and xf.shape[0] < 8:
+        backend = "ref"
+    d2min, idx = _kops.assign(xf, pool.centers, pool.mask,
+                              count=pool.count, backend=backend)
     batch_shape = x.shape[:-1]
     return d2min.reshape(batch_shape), idx.reshape(batch_shape)
+
+
+def nearest_center_with_new(pool: CenterPool, x: jnp.ndarray,
+                            d2_start: jnp.ndarray, idx_start: jnp.ndarray,
+                            count0: jnp.ndarray):
+    """`nearest_center` over C^{t-1} ∪ this epoch's accepts, given the
+    distance to C^{t-1} already computed in the propose phase.
+
+    Only slots >= count0 (the epoch's new centers) are measured fresh; the
+    epoch-start part reuses (d2_start, idx_start) threaded through `aux`.
+    On a distance tie the new slot loses: its index is always higher, and a
+    full argmin picks the lowest index.  x: (D,) — one validator step.
+    """
+    k_max = pool.centers.shape[0]
+    new_mask = jnp.logical_and(pool.mask, jnp.arange(k_max) >= count0)
+    d2 = sq_dists(x[None, :], pool.centers)[0]
+    d2 = jnp.where(new_mask, d2, jnp.inf)
+    best_new = jnp.min(d2)
+    use_new = best_new < d2_start
+    idx = jnp.where(use_new, jnp.argmin(d2), idx_start)
+    return jnp.minimum(d2_start, best_new), idx
 
 
 def pool_append_serial(pool: CenterPool, x: jnp.ndarray, do: jnp.ndarray) -> tuple[CenterPool, jnp.ndarray]:
@@ -131,6 +171,27 @@ def serial_validate(
     return pool, slots, outs
 
 
+def _compact_sent(send: jnp.ndarray, cap: int):
+    """Bounded-master compaction: stable indices of the first `cap` sent
+    proposals (ascending global order) + the sent_overflow flag.  Shared by
+    both validator implementations so their windows are identical."""
+    b = send.shape[0]
+    n_sent = jnp.sum(send.astype(jnp.int32))
+    sent_overflow = n_sent > cap if cap < b else jnp.zeros((), bool)
+    order = jnp.argsort(jnp.where(send, jnp.arange(b), b), stable=True)[:cap]
+    return order, sent_overflow
+
+
+def _scatter_back(order: jnp.ndarray, b: int, slots_c: jnp.ndarray, outs_c):
+    """Scatter compacted validator verdicts back to the full index space."""
+    slots = jnp.full((b,), -1, jnp.int32).at[order].set(slots_c, mode="drop")
+    outs = jax.tree.map(
+        lambda o: jnp.zeros((b,) + o.shape[1:], o.dtype).at[order].set(o, mode="drop"),
+        outs_c,
+    )
+    return slots, outs
+
+
 def gather_validate(
     pool: CenterPool,
     send: jnp.ndarray,
@@ -152,18 +213,132 @@ def gather_validate(
         pool, slots, outs = serial_validate(pool, send, payload, accept_fn, aux)
         return pool, slots, outs, jnp.zeros((), bool)
 
-    n_sent = jnp.sum(send.astype(jnp.int32))
-    sent_overflow = n_sent > cap
-    # Stable compaction: indices of sent proposals in ascending order.
-    order = jnp.argsort(jnp.where(send, jnp.arange(b), b), stable=True)[:cap]
+    order, sent_overflow = _compact_sent(send, cap)
     send_c = send[order]
     payload_c = payload[order]
     aux_c = None if aux is None else jax.tree.map(lambda a: a[order], aux)
     pool, slots_c, outs_c = serial_validate(pool, send_c, payload_c, accept_fn, aux_c)
-    # Scatter results back to the full index space.
-    slots = jnp.full((b,), -1, jnp.int32).at[order].set(slots_c, mode="drop")
-    outs = jax.tree.map(
-        lambda o: jnp.zeros((b,) + o.shape[1:], o.dtype).at[order].set(o, mode="drop"),
-        outs_c,
-    )
+    slots, outs = _scatter_back(order, b, slots_c, outs_c)
+    return pool, slots, outs, sent_overflow
+
+
+# ---------------------------------------------------------------------------
+# Precomputed (D-free) validation — DESIGN.md §9
+# ---------------------------------------------------------------------------
+
+class ValidatePre(NamedTuple):
+    """Everything D-dimensional the fast validator needs, batched on the MXU.
+
+    Covers transactions whose accepted append vector IS the payload (DP-means,
+    OFL): a new center can only come from the sent set, so every distance the
+    serial scan will ever consult is either payload→C^{t-1} (computed once in
+    propose and threaded through `aux`) or payload→payload (`pair_d2`).
+
+    d2_start:  (cap,)  min squared distance to the epoch-start centers.
+    idx_start: (cap,)  int32 — that center's slot, -1 when the pool is empty.
+    pair_d2:   (cap, cap)  payload pairwise squared distances; row j is
+               consulted against proposals appended before j.
+    aux:       per-proposal decision scalars (leading dim cap; e.g. OFL's
+               uniforms), or None when the rule needs only d2.
+    """
+    d2_start: jnp.ndarray
+    idx_start: jnp.ndarray
+    pair_d2: jnp.ndarray
+    aux: Any
+
+
+def precomputed_validate(
+    pool: CenterPool,
+    send_c: jnp.ndarray,            # (cap,) bool — compacted proposal flags
+    payload_c: jnp.ndarray,         # (cap, D) — compacted payloads
+    pre: ValidatePre,
+    decide_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
+) -> tuple[CenterPool, jnp.ndarray, jnp.ndarray]:
+    """The serializing scan with ZERO D-dimensional work per step.
+
+    Same serial semantics as `serial_validate` (deterministic, compaction
+    order == global index order), but each step is O(cap) scalar mask/min/
+    compare logic over precomputed distances: the carry is (count, overflow,
+    per-proposal slots), never the (K_max, D) center buffer.  Accepted
+    payloads are written back to the pool in ONE batched scatter afterwards
+    — O(cap·D) total instead of O(cap·K_max·D) sequential.
+
+    `decide_fn(d2_cur, aux_j) -> bool` is the transaction's accept rule given
+    the min squared distance to the *current* pool (epoch-start ∪ this
+    epoch's appends).  Returns (pool', slots_c (cap,) int32, refs_c (cap,)
+    int32 — nearest-center reference for rejected proposals).
+    """
+    cap = send_c.shape[0]
+    k_max = pool.centers.shape[0]
+    count0 = pool.count
+
+    def step(carry, inp):
+        count, overflow, slots_c = carry
+        j, send_j, d2s_j, idxs_j, pair_j, aux_j = inp
+        # Distance to this epoch's previously appended proposals: a masked
+        # row of the precomputed pairwise matrix (slots_c >= 0 marks them).
+        d2_new = jnp.where(slots_c >= 0, pair_j, jnp.inf)
+        best_new = jnp.min(d2_new)
+        # Strict <: on a tie the full argmin picks the lower slot, which is
+        # always the epoch-start center (new slots sit at >= count0).
+        use_new = best_new < d2s_j
+        d2_cur = jnp.minimum(d2s_j, best_new)
+        ref = jnp.where(use_new, slots_c[jnp.argmin(d2_new)], idxs_j)
+        acc = jnp.logical_and(decide_fn(d2_cur, aux_j), send_j)
+        fits = count < k_max
+        app = jnp.logical_and(acc, fits)
+        slot = jnp.where(app, count, -1)
+        slots_c = jax.lax.dynamic_update_index_in_dim(slots_c, slot, j, 0)
+        count = count + app.astype(jnp.int32)
+        overflow = jnp.logical_or(overflow, jnp.logical_and(acc, ~fits))
+        return (count, overflow, slots_c), ref
+
+    aux = pre.aux
+    if aux is None:
+        aux = jnp.zeros((cap,), jnp.int32)
+    init = (count0, pool.overflow, jnp.full((cap,), -1, jnp.int32))
+    (count, overflow, slots_c), refs_c = jax.lax.scan(
+        step, init, (jnp.arange(cap), send_c, pre.d2_start, pre.idx_start,
+                     pre.pair_d2, aux))
+
+    # One batched pool write: appended slots are unique by construction.
+    widx = jnp.where(slots_c >= 0, slots_c, k_max)   # out-of-range rows drop
+    centers = pool.centers.at[widx].set(
+        payload_c.astype(pool.centers.dtype), mode="drop")
+    mask = pool.mask.at[widx].set(True, mode="drop")
+    return CenterPool(centers, mask, count, overflow), slots_c, refs_c
+
+
+def precomputed_gather_validate(
+    pool: CenterPool,
+    send: jnp.ndarray,
+    payload: jnp.ndarray,
+    aux: Any,
+    precompute_fn: Callable[..., ValidatePre],
+    decide_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
+    cap: int | None = None,
+    replicate: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+):
+    """Bounded-master validation on the precomputed fast path.
+
+    Compacts the sent proposals (stable order, as `gather_validate`), runs
+    `precompute_fn(pool, payload_c, aux_c, count0)` ONCE on the MXU, then the
+    D-free scalar scan, then scatters verdicts back to the full index space.
+    `replicate` (optional) constrains the compacted buffers to the master's
+    replicated sharding before the scan (see shardings.occ_validate_sharding).
+    """
+    b = send.shape[0]
+    count0 = pool.count
+    cap_c = b if cap is None or cap >= b else cap
+    order, sent_overflow = _compact_sent(send, cap_c)
+    send_c = send[order]
+    payload_c = payload[order]
+    aux_c = None if aux is None else jax.tree.map(lambda a: a[order], aux)
+    if replicate is not None:
+        send_c, payload_c = replicate(send_c), replicate(payload_c)
+        aux_c = None if aux_c is None else jax.tree.map(replicate, aux_c)
+    pre = precompute_fn(pool, payload_c, aux_c, count0)
+    pool, slots_c, refs_c = precomputed_validate(
+        pool, send_c, payload_c, pre, decide_fn)
+    slots, outs = _scatter_back(order, b, slots_c, refs_c)
     return pool, slots, outs, sent_overflow

@@ -36,9 +36,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import OCCEngine, resolve_assignments
-from repro.core.objective import dp_means_objective
+from repro.core.objective import dp_means_objective, sq_dists
 from repro.core.occ import (
-    CenterPool, OCCStats, make_pool, nearest_center, serial_validate,
+    CenterPool, OCCStats, ValidatePre, make_pool, nearest_center,
+    nearest_center_with_new, serial_validate,
 )
 
 __all__ = ["OFLResult", "OFLTransaction", "point_uniforms", "serial_ofl",
@@ -99,11 +100,30 @@ class OFLTransaction:
 
     def propose(self, pool, x_e, u_e):
         d2, idx = nearest_center(pool, x_e)
-        p_send = jnp.minimum(1.0, d2 / self._lam2(x_e.dtype))
-        return u_e < p_send, x_e, u_e, idx
+        # Threshold in d2's dtype — f32 on the Pallas backend regardless of
+        # input dtype — so propose and both validator paths round λ² alike.
+        p_send = jnp.minimum(1.0, d2 / self._lam2(d2.dtype))
+        # Thread (u, d2, idx): the validator needs the point's uniform AND
+        # can reuse the C^{t-1} distances instead of recomputing them.
+        return u_e < p_send, x_e, (u_e, d2, idx), idx
 
-    def accept(self, pool, x_j, u_j, count0):
-        return _ofl_accept(self._lam2(x_j.dtype))(pool, x_j, u_j)
+    def accept(self, pool, x_j, aux_j, count0):
+        # Legacy path: accept iff u < min(1, d*²/λ²) with d* over the
+        # current pool — only the new slots are measured fresh (App. B.3).
+        u_j, d2s_j, idxs_j = aux_j
+        d2, ref = nearest_center_with_new(pool, x_j, d2s_j, idxs_j, count0)
+        p = jnp.minimum(1.0, d2 / self._lam2(d2.dtype))
+        return u_j < p, x_j, ref
+
+    def precompute_accept(self, pool, payload_c, aux_c, count0):
+        # Fast path (DESIGN.md §9): one payload pairwise matrix on the MXU;
+        # the per-step rule then needs only the point's own uniform.
+        u, d2s, idxs = aux_c
+        return ValidatePre(d2s, idxs, sq_dists(payload_c, payload_c), u)
+
+    def accept_pre(self, d2_cur, u_j):
+        p = jnp.minimum(1.0, d2_cur / self._lam2(d2_cur.dtype))
+        return u_j < p
 
     def writeback(self, send, slots, outs, safe, valid):
         return resolve_assignments(send, slots, outs, safe, valid)

@@ -24,7 +24,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardCtx", "shard_ctx", "current_ctx", "constrain", "batch_spec",
            "param_specs", "input_shardings", "axes_that_divide",
-           "occ_epoch_sharding", "compat_shard_map"]
+           "occ_epoch_sharding", "occ_validate_sharding", "compat_shard_map"]
 
 
 def compat_shard_map(f, **kw):
@@ -142,6 +142,14 @@ def occ_epoch_sharding(mesh: Mesh, data_axis: str, pb: int,
     ctx = ShardCtx(mesh=mesh, data_axes=(data_axis,))
     elem = _norm_elem(pb, data_axis, ctx)
     return NamedSharding(mesh, P(None, elem, *([None] * (rank - 2))))
+
+
+def occ_validate_sharding(mesh: Mesh, rank: int) -> NamedSharding:
+    """Replicated sharding for the bounded master's compacted (cap, …)
+    validator buffers (DESIGN.md §2/§9): validation is SPMD re-execution of
+    the master on every device, so the compaction gather happens once and
+    the scalar scan runs on replicated operands — no mid-scan resharding."""
+    return NamedSharding(mesh, P(*([None] * rank)))
 
 
 def res_constrain(x: jax.Array, batch_axes) -> jax.Array:

@@ -1,6 +1,6 @@
 """Pallas TPU kernel for the OCC hot loop: pairwise sq-distance + argmin.
 
-TPU adaptation of the paper's `argmin_{mu in C} ||x - mu||` (DESIGN.md §6):
+TPU adaptation of the paper's `argmin_{mu in C} ||x - mu||` (DESIGN.md §6/§9):
 instead of a GPU-style point-per-thread gather, the distance matrix block is
 an MXU matmul (||x||^2 + ||mu||^2 - 2 x mu^T) with a *running* min/argmin
 carried across center tiles — the same streaming-reduction structure as
@@ -11,6 +11,13 @@ dimension so output tiles are revisited and accumulated in place.
 VMEM working set per step: bn*D (points) + bk*D (centers) + bn*bk (distances)
 — block defaults keep this well under a v5e core's ~16 MiB VMEM budget with
 D up to 8192.
+
+Active-prefix restriction: the pool's valid slots are a prefix (centers are
+appended serially), so `k_active` — the pool count, a *traced* scalar passed
+through SMEM — lets the kernel skip every center tile that starts at or
+beyond the count-rounded prefix.  The grid stays static (K_max tiles, JAX
+needs static shapes) but skipped tiles do no MXU/VPU work, so per-epoch
+propose cost tracks the *occupied* pool size rather than the K_max capacity.
 """
 from __future__ import annotations
 
@@ -19,11 +26,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["dpmeans_assign"]
 
 
-def _assign_kernel(x_ref, c_ref, mask_ref, d2_ref, idx_ref, *, bk: int):
+def _assign_kernel(k_active_ref, x_ref, c_ref, mask_ref, d2_ref, idx_ref, *,
+                   bk: int):
     kb = pl.program_id(1)
 
     @pl.when(kb == 0)
@@ -31,35 +40,44 @@ def _assign_kernel(x_ref, c_ref, mask_ref, d2_ref, idx_ref, *, bk: int):
         d2_ref[...] = jnp.full_like(d2_ref, jnp.inf)
         idx_ref[...] = jnp.full_like(idx_ref, -1)
 
-    x = x_ref[...].astype(jnp.float32)            # (bn, D)
-    c = c_ref[...].astype(jnp.float32)            # (bk, D)
-    m = mask_ref[...]                             # (bk,)
+    # Skip whole center tiles beyond the active prefix: every slot in the
+    # tile is masked out anyway, so the running min/argmin cannot change.
+    @pl.when(kb * bk < k_active_ref[0])
+    def _work():
+        x = x_ref[...].astype(jnp.float32)            # (bn, D)
+        c = c_ref[...].astype(jnp.float32)            # (bk, D)
+        m = mask_ref[...]                             # (bk,)
 
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)   # (bn, 1)
-    c2 = jnp.sum(c * c, axis=-1)[None, :]         # (1, bk)
-    # MXU: the only O(bn*bk*D) term is a single matmul.
-    d2 = jnp.maximum(x2 + c2 - 2.0 * jax.lax.dot_general(
-        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32), 0.0)
-    d2 = jnp.where(m[None, :], d2, jnp.inf)       # masked-out centers
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)   # (bn, 1)
+        c2 = jnp.sum(c * c, axis=-1)[None, :]         # (1, bk)
+        # MXU: the only O(bn*bk*D) term is a single matmul.
+        d2 = jnp.maximum(x2 + c2 - 2.0 * jax.lax.dot_general(
+            x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32), 0.0)
+        d2 = jnp.where(m[None, :], d2, jnp.inf)       # masked-out centers
 
-    loc_min = jnp.min(d2, axis=-1)                # (bn,)
-    loc_idx = jnp.argmin(d2, axis=-1).astype(jnp.int32) + kb * bk
+        loc_min = jnp.min(d2, axis=-1)                # (bn,)
+        loc_idx = jnp.argmin(d2, axis=-1).astype(jnp.int32) + kb * bk
 
-    run_min = d2_ref[...]
-    run_idx = idx_ref[...]
-    better = loc_min < run_min
-    d2_ref[...] = jnp.where(better, loc_min, run_min)
-    idx_ref[...] = jnp.where(better, loc_idx, run_idx)
+        run_min = d2_ref[...]
+        run_idx = idx_ref[...]
+        better = loc_min < run_min
+        d2_ref[...] = jnp.where(better, loc_min, run_min)
+        idx_ref[...] = jnp.where(better, loc_idx, run_idx)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
 def dpmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray,
+                   count: jnp.ndarray | None = None,
                    block_n: int = 256, block_k: int = 128,
                    interpret: bool = False):
     """Min squared distance and argmin over masked centers.
 
-    x: (N, D), centers: (K, D), mask: (K,) bool.  Returns (d2min (N,) f32,
-    idx (N,) int32).  N, K are padded to block multiples internally.
+    x: (N, D), centers: (K, D), mask: (K,) bool.  `count` (traced scalar,
+    optional) bounds the valid prefix — center tiles at index >= count are
+    skipped entirely (mask must already be False there; the pool invariant
+    guarantees it).  Returns (d2min (N,) f32, idx (N,) int32, -1 where no
+    valid center).  N, K are padded to block multiples internally.
     """
     n, d = x.shape
     k = centers.shape[0]
@@ -73,12 +91,14 @@ def dpmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray,
         centers = jnp.concatenate([centers, jnp.zeros((k_pad, d), centers.dtype)], 0)
         mask = jnp.concatenate([mask, jnp.zeros((k_pad,), bool)], 0)
     np_, kp = x.shape[0], centers.shape[0]
+    k_active = jnp.full((1,), k if count is None else count, jnp.int32)
 
     grid = (np_ // bn, kp // bk)
     d2, idx = pl.pallas_call(
         functools.partial(_assign_kernel, bk=bk),
         grid=grid,
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
@@ -92,5 +112,5 @@ def dpmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray,
             jax.ShapeDtypeStruct((np_,), jnp.int32),
         ],
         interpret=interpret,
-    )(x, centers, mask)
+    )(k_active, x, centers, mask)
     return d2[:n], idx[:n]

@@ -20,8 +20,8 @@ from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.swiglu import swiglu as _swiglu
 
-__all__ = ["pairwise_argmin", "flash_attention", "rmsnorm", "swiglu",
-           "on_tpu"]
+__all__ = ["assign", "pairwise_argmin", "flash_attention", "rmsnorm",
+           "swiglu", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -39,7 +39,39 @@ def _resolve(backend: str) -> tuple[bool, bool]:
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def assign(x, centers, mask=None, count=None, backend: str = "auto",
+           **blocks):
+    """Nearest-center assignment — THE OCC propose/validate primitive.
+
+    x (N, D), centers (K, D), mask (K,) bool, count optional traced scalar
+    bounding the valid prefix.  Returns (d2min (N,), idx (N,) int32) with
+    idx = -1 (and d2min = inf) where no valid center exists; d2min is f32
+    on the Pallas path (kernel accumulation dtype) and the input dtype on
+    the reference path (preserving nearest_center's precision contract).
+
+    Backend dispatch (DESIGN.md §9): pallas on TPU (MXU-tiled, count-rounded
+    active prefix — tiles beyond the pool count are skipped), pallas
+    interpret=True off-TPU for kernel validation, jnp reference elsewhere
+    (the reference cannot skip work — static shapes — so count folds into
+    the mask, which the pool invariant makes a no-op).
+    """
+    use_pallas, interp = _resolve(backend)
+    if mask is None:
+        mask = jnp.ones((centers.shape[0],), bool)
+    if count is not None:
+        mask = jnp.logical_and(mask, jnp.arange(centers.shape[0]) < count)
+    if use_pallas:
+        return _dpmeans_assign(x, centers, mask, count=count,
+                               interpret=interp, **blocks)
+    return _ref.assign_ref(x, centers, mask)
+
+
 def pairwise_argmin(x, centers, mask=None, backend: str = "auto", **blocks):
+    """Raw kernel/oracle pair for parity testing — NOT the production
+    primitive (that is `assign`).  Differences are deliberate: no count
+    restriction, no -1-on-empty contract, and the reference path computes
+    in f32 (the kernel's accumulation dtype) so sweeps compare the Pallas
+    body against a like-for-like oracle across input dtypes."""
     use_pallas, interp = _resolve(backend)
     if mask is None:
         mask = jnp.ones((centers.shape[0],), bool)

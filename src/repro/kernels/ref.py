@@ -8,13 +8,29 @@ from __future__ import annotations
 import jax.numpy as jnp
 import jax
 
-__all__ = ["pairwise_argmin_ref", "flash_attention_ref", "rmsnorm_ref",
-           "swiglu_ref"]
+__all__ = ["assign_ref", "pairwise_argmin_ref", "flash_attention_ref",
+           "rmsnorm_ref", "swiglu_ref"]
+
+
+def assign_ref(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray):
+    """`ops.assign` oracle: masked min sq-distance + argmin, idx = -1 where
+    no valid center.  Computes IN THE INPUT DTYPE (same expanded-matmul
+    algebra as core.objective.sq_dists) so routing `nearest_center` through
+    it preserves the propose phase's dtype/precision contract exactly."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(centers * centers, axis=-1)[None, :]
+    d2 = jnp.maximum(x2 + c2 - 2.0 * (x @ centers.T), 0.0)
+    d2 = jnp.where(mask[None, :], d2, jnp.inf)
+    d2min = jnp.min(d2, axis=-1)
+    idx = jnp.where(jnp.isfinite(d2min),
+                    jnp.argmin(d2, axis=-1), -1).astype(jnp.int32)
+    return d2min, idx
 
 
 def pairwise_argmin_ref(x: jnp.ndarray, centers: jnp.ndarray,
                         mask: jnp.ndarray | None = None):
-    """Min squared distance + argmin over centers.  x (N,D), centers (K,D)."""
+    """Min squared distance + argmin over centers.  x (N,D), centers (K,D).
+    Computes in float32 (matching the Pallas kernel's accumulation dtype)."""
     xf = x.astype(jnp.float32)
     cf = centers.astype(jnp.float32)
     x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)

@@ -27,6 +27,63 @@ def test_dpmeans_assign_empty_mask(rng):
     m = jnp.zeros((4,), bool)
     d2, idx = ops.pairwise_argmin(x, c, m, backend="pallas", block_n=8, block_k=4)
     assert np.all(np.isinf(np.asarray(d2)))
+    assert np.all(np.asarray(idx) == -1)    # kernel contract: -1 when empty
+
+
+@pytest.mark.parametrize("n,k,d", [
+    (5, 3, 2),        # n and k both below the minimum tile
+    (9, 5, 4),        # K < 8: bk clamps up, k-padding fills the tile
+    (7, 130, 8),      # ragged K across many tiles, ragged n
+    (130, 7, 16),     # ragged N across tiles, K < 8
+    (31, 33, 5),      # both non-multiples of the block sizes
+])
+def test_dpmeans_assign_interpret_ragged_parity(rng, n, k, d):
+    """Interpret-mode Pallas vs sq_dists reference on ragged N/K shapes
+    (non-multiples of block sizes, K < 8) — exactly the awkward pool sizes
+    the OCC engine produces."""
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    m = jnp.asarray(rng.uniform(size=k) > 0.3)
+    d2p, ip = ops.assign(x, c, m, backend="pallas", block_n=16, block_k=8)
+    d2r, ir = ops.assign(x, c, m, backend="ref")
+    np.testing.assert_allclose(np.asarray(d2p), np.asarray(d2r), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+
+
+@pytest.mark.parametrize("count", [0, 3, 7, 8, 37])
+def test_dpmeans_assign_count_prefix_parity(rng, count):
+    """The count-rounded active prefix: tiles beyond `count` are skipped on
+    the Pallas path; results must equal the reference with the prefix mask.
+    Covers count == 0 (empty pool) and count == K (all tiles active)."""
+    n, k, d = 20, 37, 6
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    # pool invariant: valid slots are a prefix of the buffer
+    m = jnp.asarray(np.arange(k) < count)
+    cnt = jnp.asarray(count, jnp.int32)
+    d2p, ip = ops.assign(x, c, m, count=cnt, backend="pallas",
+                         block_n=16, block_k=8)
+    d2r, ir = ops.assign(x, c, m, count=cnt, backend="ref")
+    np.testing.assert_allclose(np.asarray(d2p), np.asarray(d2r), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+    if count == 0:
+        assert np.all(np.asarray(ip) == -1)
+
+
+def test_assign_ref_matches_legacy_nearest_center_semantics(rng):
+    """ops.assign(ref) == masked sq_dists min/argmin with -1 on empty — the
+    exact contract core.occ.nearest_center is built on."""
+    from repro.core.objective import sq_dists
+    x = jnp.asarray(rng.normal(size=(12, 5)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(9, 5)).astype(np.float32))
+    m = jnp.asarray(np.arange(9) < 4)
+    d2, idx = ops.assign(x, c, m, count=jnp.asarray(4, jnp.int32),
+                         backend="ref")
+    d2_ref = jnp.where(m[None, :], sq_dists(x, c), jnp.inf)
+    np.testing.assert_array_equal(np.asarray(d2),
+                                  np.asarray(jnp.min(d2_ref, -1)))
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.asarray(jnp.argmin(d2_ref, -1)))
 
 
 @pytest.mark.parametrize("b,h,hkv,s,dh", [(1, 4, 4, 128, 32), (2, 8, 2, 128, 32),

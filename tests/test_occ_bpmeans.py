@@ -51,3 +51,18 @@ def test_matches_serial_quality():
     rs = serial_bp_means(x, LAM, k_max=64, max_iters=3)
     ro = occ_bp_means(x, LAM, pb=32, k_max=64, max_iters=3)
     assert float(ro.objective) <= 1.3 * float(rs.objective) + 1e-3
+
+
+def test_multipass_stats_accumulate():
+    """Every pass's validator stats are kept (one entry per epoch across
+    all passes), matching the DP-means wrapper semantics."""
+    x, _, _ = bp_stick_breaking_data(256, seed=4)
+    x = jnp.asarray(x)
+    t = 256 // 64
+    r1 = occ_bp_means(x, 2.0, pb=64, k_max=128, max_iters=1)
+    r3 = occ_bp_means(x, 2.0, pb=64, k_max=128, max_iters=3)
+    assert r3.stats.proposed.shape == (t * r3.n_iters,)
+    np.testing.assert_array_equal(np.asarray(r3.stats.proposed[:t]),
+                                  np.asarray(r1.stats.proposed))
+    if r3.n_iters > 1:
+        assert int(r3.epoch_of.max()) == t * r3.n_iters - 1

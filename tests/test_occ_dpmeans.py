@@ -64,6 +64,26 @@ def test_objective_improves_with_iters():
     assert float(r5.objective) <= float(r1.objective) + 1e-3
 
 
+def test_multipass_stats_accumulate():
+    """max_iters > 1 keeps EVERY pass's validator stats (one entry per
+    epoch, globally numbered), not just pass 1's."""
+    x, _, _ = dp_stick_breaking_data(512, seed=3)
+    x = jnp.asarray(x)
+    t = 512 // 64
+    r1 = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)
+    r5 = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=5)
+    assert r5.n_iters > 1
+    assert r5.stats.proposed.shape == (t * r5.n_iters,)
+    assert r5.stats.accepted.shape == (t * r5.n_iters,)
+    # pass 1 is bit-identical to the single-pass run
+    np.testing.assert_array_equal(np.asarray(r5.stats.proposed[:t]),
+                                  np.asarray(r1.stats.proposed))
+    # epoch_of numbers epochs globally: the last pass's epochs are labelled
+    # [t*(n_iters-1), t*n_iters) so stats[epoch_of[i]] is always meaningful
+    assert int(r5.epoch_of.max()) == t * r5.n_iters - 1
+    assert int(r5.epoch_of.min()) == t * (r5.n_iters - 1)
+
+
 def test_matches_serial_quality():
     x, _, _ = dp_stick_breaking_data(512, seed=4)
     x = jnp.asarray(x)

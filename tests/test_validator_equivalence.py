@@ -1,0 +1,226 @@
+"""The precomputed (D-free) validator is bit-identical to the legacy
+full-recompute validator — for DP-means, OFL, and BP-means, across random
+epochs, caps, pool occupancies, and the sent_overflow path (DESIGN.md §9).
+
+Two layers: a deterministic seeded sweep that always runs, and hypothesis
+property variants (skipped when hypothesis is absent) exploring the same
+space adversarially.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BPMeansTransaction, DPMeansTransaction, OCCEngine, OFLTransaction,
+    gather_validate, make_pool, nearest_center, precomputed_gather_validate,
+    resolve_validate_mode,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _seeded_pool(k_max, d, k0, rng):
+    """A pool with k0 occupied slots (random occupancy ≤ k_max)."""
+    pool = make_pool(k_max, d)
+    if k0:
+        centers = pool.centers.at[:k0].set(
+            jnp.asarray(rng.normal(size=(k0, d)).astype(np.float32) * 2.0))
+        pool = pool._replace(centers=centers,
+                             mask=pool.mask.at[:k0].set(True),
+                             count=jnp.asarray(k0, jnp.int32))
+    return pool
+
+
+def _problem(n, d, k_max, k0, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32) * 2.0)
+    return x, _seeded_pool(k_max, d, min(k0, k_max), rng)
+
+
+def _assert_runs_identical(txn, x, pool, pb, cap):
+    fast = OCCEngine(txn, pb, validate_cap=cap,
+                     validate_mode="precomputed").run(x, pool=pool)
+    legacy = OCCEngine(txn, pb, validate_cap=cap,
+                       validate_mode="legacy").run(x, pool=pool)
+    np.testing.assert_array_equal(np.asarray(fast.assign),
+                                  np.asarray(legacy.assign))
+    np.testing.assert_array_equal(np.asarray(fast.send),
+                                  np.asarray(legacy.send))
+    np.testing.assert_array_equal(np.asarray(fast.stats.proposed),
+                                  np.asarray(legacy.stats.proposed))
+    np.testing.assert_array_equal(np.asarray(fast.stats.accepted),
+                                  np.asarray(legacy.stats.accepted))
+    np.testing.assert_array_equal(np.asarray(fast.pool.centers),
+                                  np.asarray(legacy.pool.centers))
+    np.testing.assert_array_equal(np.asarray(fast.pool.mask),
+                                  np.asarray(legacy.pool.mask))
+    assert int(fast.pool.count) == int(legacy.pool.count)
+    assert bool(fast.pool.overflow) == bool(legacy.pool.overflow)
+    return fast
+
+
+# ------------------------------------------------- deterministic seeded sweep
+
+SWEEP = [
+    # (n, d, k_max, k0, pb, lam, cap)
+    (48, 3, 16, 0, 8, 2.0, None),       # cold pool, unbounded master
+    (48, 3, 16, 5, 8, 2.0, 16),         # warm pool, roomy cap
+    (96, 5, 64, 8, 16, 0.8, 4),         # small lam + tiny cap: sent_overflow
+    (24, 2, 16, 2, 32, 4.0, 4),         # epoch wider than data
+    (96, 5, 8, 0, 16, 0.5, None),       # pool-capacity overflow path
+]
+
+
+@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
+def test_dpmeans_fast_equals_legacy_sweep(n, d, k_max, k0, pb, lam, cap):
+    x, pool = _problem(n, d, k_max, k0, seed=n + k0)
+    _assert_runs_identical(DPMeansTransaction(lam, k_max), x, pool, pb, cap)
+
+
+@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
+def test_ofl_fast_equals_legacy_sweep(n, d, k_max, k0, pb, lam, cap):
+    x, pool = _problem(n, d, k_max, k0, seed=n + k0)
+    txn = OFLTransaction(lam, k_max, jax.random.key(n))
+    _assert_runs_identical(txn, x, pool, pb, cap)
+
+
+@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP[:3])
+def test_bpmeans_auto_matches_legacy_sweep(n, d, k_max, k0, pb, lam, cap):
+    """BP-means has no precomputed path (its append vector is the refit
+    residual, not the payload): auto must resolve to legacy, and the
+    auto-mode run must equal the forced-legacy run."""
+    x, pool = _problem(n, d, k_max, k0, seed=n + k0)
+    txn = BPMeansTransaction(lam, k_max, init_mean=False)
+    assert resolve_validate_mode(txn, "auto") == "legacy"
+    auto = OCCEngine(txn, pb, validate_cap=cap).run(x, pool=pool)
+    legacy = OCCEngine(txn, pb, validate_cap=cap,
+                       validate_mode="legacy").run(x, pool=pool)
+    np.testing.assert_array_equal(np.asarray(auto.assign),
+                                  np.asarray(legacy.assign))
+    np.testing.assert_array_equal(np.asarray(auto.pool.centers),
+                                  np.asarray(legacy.pool.centers))
+
+
+def test_auto_resolves_fast_for_dp_and_ofl():
+    assert resolve_validate_mode(DPMeansTransaction(1.0, 8)) == "precomputed"
+    assert resolve_validate_mode(
+        OFLTransaction(1.0, 8, jax.random.key(0))) == "precomputed"
+
+
+def test_forcing_precomputed_on_bp_raises():
+    txn = BPMeansTransaction(1.0, 8)
+    with pytest.raises(ValueError):
+        OCCEngine(txn, 8, validate_mode="precomputed")
+
+
+def test_unknown_validate_mode_raises():
+    with pytest.raises(ValueError):
+        OCCEngine(DPMeansTransaction(1.0, 8), 8, validate_mode="nope")
+
+
+def test_sent_overflow_bitidentical_slots():
+    """Direct occ-level check: slots / outs / overflow from the fast path
+    match the legacy path through the bounded master, cap exceeded."""
+    rng = np.random.default_rng(0)
+    d, k_max, cap = 3, 16, 3
+    pool = _seeded_pool(k_max, d, 2, rng)
+    x = jnp.asarray(rng.normal(size=(10, d)).astype(np.float32) * 10.0)
+    txn = DPMeansTransaction(1.0, k_max)
+    send, payload, aux, _ = txn.propose(pool, x, ())
+    count0 = pool.count
+
+    accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
+    pl_, sl_, ol_, ovf_l = gather_validate(pool, send, payload, accept, aux,
+                                           cap=cap)
+    pf_, sf_, of_, ovf_f = precomputed_gather_validate(
+        pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
+        cap=cap)
+    assert bool(ovf_l) and bool(ovf_f)
+    np.testing.assert_array_equal(np.asarray(sl_), np.asarray(sf_))
+    # outs only carry meaning for sent proposals (writeback masks the rest)
+    s = np.asarray(send)
+    np.testing.assert_array_equal(np.asarray(ol_)[s], np.asarray(of_)[s])
+    np.testing.assert_array_equal(np.asarray(pl_.centers), np.asarray(pf_.centers))
+    assert int(pl_.count) == int(pf_.count)
+
+
+def test_fast_path_equals_full_recompute_reference():
+    """Three-way: the precomputed path also matches the ORIGINAL
+    full-recompute accept rule (nearest_center over the whole pool each
+    scan step) — the pre-threading reference implementation."""
+    rng = np.random.default_rng(3)
+    d, k_max = 4, 32
+    pool = _seeded_pool(k_max, d, 5, rng)
+    x = jnp.asarray(rng.normal(size=(40, d)).astype(np.float32) * 2.0)
+    lam2 = jnp.float32(2.0) ** 2
+    txn = DPMeansTransaction(2.0, k_max)
+    send, payload, aux, _ = txn.propose(pool, x, ())
+
+    def full_recompute(p, x_j, a_j):
+        d2, ref = nearest_center(p, x_j)
+        return d2 > lam2, x_j, ref
+
+    pr, sr, orr, _ = gather_validate(pool, send, payload, full_recompute,
+                                     aux=None, cap=None)
+    pf, sf, off, _ = precomputed_gather_validate(
+        pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
+        cap=None)
+    np.testing.assert_array_equal(np.asarray(sr), np.asarray(sf))
+    s = np.asarray(send)
+    np.testing.assert_array_equal(np.asarray(orr)[s], np.asarray(off)[s])
+    np.testing.assert_array_equal(np.asarray(pr.centers), np.asarray(pf.centers))
+    assert int(pr.count) == int(pf.count)
+
+
+# ------------------------------------------------- hypothesis property layer
+
+if HAVE_HYPOTHESIS:
+    SET = dict(max_examples=10, deadline=None)
+
+    @st.composite
+    def validator_problem(draw):
+        n = draw(st.sampled_from([24, 48, 96]))
+        d = draw(st.sampled_from([2, 5]))
+        pb = draw(st.sampled_from([8, 16, 32]))
+        lam = draw(st.floats(0.5, 5.0))
+        k_max = draw(st.sampled_from([16, 64]))
+        k0 = draw(st.integers(0, 8))
+        # cap=4 routinely exercises sent_overflow; None = unbounded master
+        cap = draw(st.sampled_from([None, 4, 16]))
+        seed = draw(st.integers(0, 2 ** 16))
+        x, pool = _problem(n, d, k_max, k0, seed)
+        return x, pool, pb, float(lam), k_max, cap, seed
+
+    @given(validator_problem())
+    @settings(**SET)
+    def test_dpmeans_fast_equals_legacy_property(prob):
+        x, pool, pb, lam, k_max, cap, _ = prob
+        _assert_runs_identical(DPMeansTransaction(lam, k_max), x, pool, pb, cap)
+
+    @given(validator_problem())
+    @settings(**SET)
+    def test_ofl_fast_equals_legacy_property(prob):
+        x, pool, pb, lam, k_max, cap, seed = prob
+        txn = OFLTransaction(lam, k_max, jax.random.key(seed))
+        _assert_runs_identical(txn, x, pool, pb, cap)
+
+    @given(validator_problem())
+    @settings(max_examples=6, deadline=None)
+    def test_bpmeans_auto_matches_legacy_property(prob):
+        x, pool, pb, lam, k_max, cap, _ = prob
+        txn = BPMeansTransaction(lam, k_max, init_mean=False)
+        auto = OCCEngine(txn, pb, validate_cap=cap).run(x, pool=pool)
+        legacy = OCCEngine(txn, pb, validate_cap=cap,
+                           validate_mode="legacy").run(x, pool=pool)
+        np.testing.assert_array_equal(np.asarray(auto.assign),
+                                      np.asarray(legacy.assign))
+        np.testing.assert_array_equal(np.asarray(auto.pool.centers),
+                                      np.asarray(legacy.pool.centers))
+else:  # pragma: no cover - exercised only without hypothesis
+    def test_hypothesis_layer_skipped():
+        pytest.skip("hypothesis not installed; deterministic sweep still ran")
