@@ -1,0 +1,78 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Cluster-serving benchmark: the train→publish→serve pipeline under load.
+
+Two measurements:
+  * steady-state service latency per request bucket (warm jit caches,
+    single published version) — the pure serving-plane cost;
+  * the end-to-end train-while-serve demo (launch/serve_clusters.run_demo):
+    concurrent trainer + load generator with the full zero-stale-read /
+    bit-parity audit; p50/p99 + QPS land in BENCH_cluster_service.json.
+
+  PYTHONPATH=src python -m benchmarks.cluster_service
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPMeansTransaction, OCCEngine
+from repro.data import dp_stick_breaking_data
+from repro.launch.serve_clusters import ServeDemoConfig, run_demo
+from repro.serving import ClusterService, SnapshotStore
+
+
+def _steady_state_rows(n_train: int, dim: int, buckets, repeats: int):
+    """Per-bucket microbatch latency against one warm snapshot."""
+    x, _, _ = dp_stick_breaking_data(n_train, seed=0, dim=dim)
+    x = jnp.asarray(x)
+    store = SnapshotStore()
+    eng = OCCEngine(DPMeansTransaction(4.0, k_max=512), pb=128,
+                    publish=store.publish_pass)
+    eng.partial_fit(x)
+    eng.flush()
+    svc = ClusterService(store, max_bucket=max(buckets))
+    rows = []
+    for b in buckets:
+        q = x[:b]
+        svc.score(q)                       # warm the (bucket, cap) cache
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            svc.score(q)
+        us = (time.perf_counter() - t0) / repeats * 1e6
+        rows.append((f"cluster_service_assign_b{b}", us,
+                     f"qps={b / us * 1e6:.0f};k={store.latest().count}"))
+    return rows
+
+
+def run(n_train: int = 8192, dim: int = 16, buckets=(8, 64, 512, 4096),
+        repeats: int = 20, demo_queries: int = 2000,
+        out_path: str | None = None, quiet: bool = False):
+    rows = _steady_state_rows(n_train, dim, buckets, repeats)
+
+    # demo_queries=0 skips the train-while-serve demo — CI's --quick smoke
+    # does, because the workflow runs `repro.launch.serve_clusters --quick`
+    # as its own step; paying for the trainer+audit twice buys nothing.
+    if demo_queries > 0:
+        cfg = ServeDemoConfig(n=max(1024, n_train // 4), dim=dim, pb=128,
+                              train_batch=300, min_queries=demo_queries,
+                              quiet=True, out_path=out_path)
+        rec = run_demo(cfg)
+        rows.append((
+            "cluster_service_train_serve_p50",
+            rec["p50_latency_ms"] * 1e3,
+            f"qps={rec['qps']:.0f};versions={rec['n_versions_observed']};"
+            f"p99_ms={rec['p99_latency_ms']:.2f};"
+            f"stale_free={rec['zero_stale_reads']};"
+            f"parity={rec['serve_train_parity']}"))
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(out_path=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_cluster_service.json"))

@@ -8,6 +8,7 @@ Suites:
   fig4       — paper Fig 4: strong scaling (emulated hosts + workload model)
   occ_engine — single-jit epoch scan vs legacy Python epoch loop
   validator  — precomputed (D-free) validator vs legacy per-step recompute
+  serve      — cluster-serving plane: per-bucket latency + train-while-serve
   kernels    — Pallas kernel microbenches
   roofline   — §Roofline summary from the dry-run artifacts
 
@@ -29,7 +30,8 @@ def main(argv=None) -> None:
                     help="minimal smoke sizes for CI — liveness only")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig3,fig4,occ_engine,validator,kernels,roofline")
+                         "fig3,fig4,occ_engine,validator,serve,kernels,"
+                         "roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
@@ -69,6 +71,18 @@ def main(argv=None) -> None:
             pb=64 if args.quick else (256 if args.fast else 512),
             cap=32 if args.quick else (128 if args.fast else 256),
             repeats=1 if args.quick else 3)
+    if want("serve"):
+        from benchmarks import cluster_service
+        rows += cluster_service.run(
+            n_train=1024 if args.quick else (4096 if args.fast else 8192),
+            dim=8 if args.quick else 16,
+            buckets=(8, 64) if args.quick else
+                    ((8, 64, 512) if args.fast else (8, 64, 512, 4096)),
+            repeats=2 if args.quick else (5 if args.fast else 20),
+            # --quick: steady-state only; the CI workflow runs the
+            # train-while-serve demo as its own serve_clusters step
+            demo_queries=0 if args.quick else
+                         (1000 if args.fast else 2000))
     if want("kernels"):
         from benchmarks import kernels
         rows += kernels.run()

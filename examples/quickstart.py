@@ -48,7 +48,25 @@ def main():
     print(f"OCC BP-means:  K={int(bp.pool.count)} features "
           f"(true {zb.shape[1]}), cost={float(bp.objective):.1f}")
 
-    print("streaming: see examples/streaming_clusters.py (engine.partial_fit)")
+    # --- train/serve split: publish snapshots, serve queries --------------
+    # Training publishes immutable model versions into a SnapshotStore; a
+    # read-only ClusterService answers batched assign/score/topk queries
+    # against the newest version (pad-to-bucket microbatching, one jitted
+    # dispatch per microbatch, atomic hot-swap).  DESIGN.md §10.
+    from repro.serving import ClusterService, SnapshotStore
+    store = SnapshotStore()
+    eng = OCCEngine(txn, pb=256, publish=store.publish_pass)
+    for xs in jnp.split(x, [700, 1500]):      # ragged stream, carry engaged
+        eng.partial_fit(xs)
+    eng.flush()
+    svc = ClusterService(store)
+    resp = svc.score(x[:100])                 # one microbatch, one dispatch
+    top = svc.topk(x[:5], k=3)
+    print(f"serving:       v{resp.version} answered 100 queries in bucket "
+          f"{resp.bucket}, K={store.latest().count}, "
+          f"topk[0]={top.labels[0].tolist()}")
+    print("streaming: examples/streaming_clusters.py; full train-while-serve"
+          " demo: python -m repro.launch.serve_clusters")
 
 
 if __name__ == "__main__":

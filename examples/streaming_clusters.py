@@ -3,10 +3,10 @@
 The engine's streaming surface reuses the same OCC transactions for
 incremental epochs over arriving data — the online / heavy-traffic serving
 mode.  The pool, the global point counter, and the epoch statistics carry
-over between batches, so the stream is exactly the batch run chunked in
-time: with pb-aligned batches (as here) even the epoch boundaries agree,
-and for OFL the counter-based uniforms make the stream draw-for-draw
-identical to the one-shot run.
+over between batches, and the trailing `n mod pb` points of each call ride
+in an explicit partial-epoch carry, so the stream is *bit-identical* to the
+one-shot run for ANY batch lengths — even the deliberately ragged ones
+below.  `flush()` commits the stream's final short epoch.
 
   PYTHONPATH=src python examples/streaming_clusters.py
 """
@@ -19,31 +19,38 @@ from repro.data import dp_stick_breaking_data
 
 
 def main():
-    # --- a stream of arriving batches ------------------------------------
+    # --- a stream of RAGGED arriving batches ------------------------------
     x, z_true, _ = dp_stick_breaking_data(4096, seed=0)
     x = jnp.asarray(x)
-    batches = [x[i:i + 512] for i in range(0, 4096, 512)]
+    cuts = [353, 1000, 1024, 2500, 4070]          # nothing aligned to pb
+    batches = jnp.split(x, cuts)
 
     # --- DP-means over the stream ----------------------------------------
     eng = OCCEngine(DPMeansTransaction(lam=4.0, k_max=256), pb=128)
-    print("DP-means stream:")
+    print("DP-means stream (ragged batches, pb=128):")
     for i, xb in enumerate(batches):
         res = eng.partial_fit(xb)
-        print(f"  batch {i}: n_seen={eng.n_seen:5d}  K={int(res.pool.count):3d}"
-              f"  sent={int(res.stats.proposed.sum()):4d}"
-              f"  accepted={int(res.stats.accepted.sum()):3d}")
+        print(f"  batch {i}: len={xb.shape[0]:4d}  n_seen={eng.n_seen:5d}"
+              f"  carried={eng.n_pending:3d}  K={int(eng.pool.count):3d}"
+              f"  sent={int(res.stats.proposed.sum()):4d}")
+    eng.flush()                                   # final short epoch
     print(f"  true K = {z_true.max() + 1}; master load stays ~Pb per batch "
           f"after warmup (Thm 3.3)")
 
-    # --- OFL: the stream is bit-identical to the one-shot run -------------
+    # --- OFL: ragged stream is bit-identical to the one-shot run ----------
     key = jax.random.key(0)
     eng = OCCEngine(OFLTransaction(lam=8.0, k_max=512, key=key), pb=128)
     zs = [eng.partial_fit(xb).assign for xb in batches]
+    fl = eng.flush()
+    if fl is not None:
+        zs.append(fl.assign)
     one_shot = occ_ofl(x, 8.0, pb=128, key=key, k_max=512)
     same = np.array_equal(np.concatenate([np.asarray(z) for z in zs]),
                           np.asarray(one_shot.z))
     print(f"OFL stream:      K={int(eng.pool.count)}  "
-          f"bit-identical to one-shot run: {same}")
+          f"bit-identical to one-shot run (ANY batching): {same}")
+    print("train/serve split: see launch/serve_clusters.py "
+          "(publish snapshots + serve while training)")
 
 
 if __name__ == "__main__":

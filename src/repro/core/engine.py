@@ -36,10 +36,19 @@ module-level epoch jits did.
 Streaming: `OCCEngine.partial_fit(batch)` reuses the same transactions and
 the same compiled scan for incremental epochs over arriving data — the
 online/heavy-traffic serving mode (see examples/streaming_clusters.py).
+Batches of ANY length are bit-identical to the one-shot run: the engine
+holds back the trailing `n mod pb` points as an explicit partial-epoch
+carry so the stream's epoch partition matches the one-shot partition
+exactly; `flush()` processes the final short epoch at stream end.
+
+Train/serve split: the optional `publish=` hook is called with every
+committed pass result, so a `serving.SnapshotStore` can freeze immutable
+model versions for the read-only serving data plane (DESIGN.md §10) while
+the trainer keeps streaming — trainer and service share no mutable state.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Protocol, runtime_checkable
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -291,24 +300,33 @@ class OCCEngine:
         full-recompute reference implementation.
       mesh / data_axis: optional device mesh; each epoch's points are
         sharded over `data_axis` while the validation scan is replicated.
+      publish: optional hook `publish(result, n_seen=..., epochs=...)`
+        called after every committed pass (run / partial_fit / flush) —
+        the train→serve publication point (`SnapshotStore.publish_pass`).
     """
 
     def __init__(self, transaction: OCCTransaction, pb: int,
                  validate_cap: int | None = None,
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data",
-                 validate_mode: str = "auto"):
+                 validate_mode: str = "auto",
+                 publish: Callable[..., Any] | None = None):
         self.txn = transaction
         self.pb = int(pb)
         self.validate_cap = validate_cap
         self.mesh = mesh
         self.data_axis = data_axis
         self.validate_mode = resolve_validate_mode(transaction, validate_mode)
+        self.publish = publish
         self.n_dispatches = 0       # compiled-pass invocations (1 per pass)
         # streaming state
         self._pool: CenterPool | None = None
         self._n_seen = 0
         self._stat_chunks: list[OCCStats] = []
+        self._epoch_base = 0        # global epochs committed so far
+        self._carry_x: jnp.ndarray | None = None   # trailing partial epoch
+        self._carry_state: Any = None
+        self._empty_templates: dict[Any, OCCPassResult] = {}
 
     # ------------------------------------------------------------- batch
     def run(self, x: jnp.ndarray, *, pool: CenterPool | None = None,
@@ -325,6 +343,9 @@ class OCCEngine:
             mesh=self.mesh, data_axis=self.data_axis,
             validate_mode=self.validate_mode)
         self.n_dispatches += 1
+        if self.publish is not None:
+            self.publish(res, n_seen=x.shape[0],
+                         epochs=res.stats.proposed.shape[0])
         return res
 
     def refine(self, pool: CenterPool, x: jnp.ndarray, assign: Any) -> CenterPool:
@@ -338,7 +359,23 @@ class OCCEngine:
 
     @property
     def n_seen(self) -> int:
+        """Total points submitted to the stream (including carried ones)."""
         return self._n_seen
+
+    @property
+    def n_pending(self) -> int:
+        """Points held in the partial-epoch carry, not yet in the pool."""
+        return 0 if self._carry_x is None else int(self._carry_x.shape[0])
+
+    @property
+    def n_processed(self) -> int:
+        """Points whose epoch has been committed to the pool."""
+        return self._n_seen - self.n_pending
+
+    @property
+    def epochs_done(self) -> int:
+        """Global epochs committed so far (the stream's epoch counter)."""
+        return self._epoch_base
 
     @property
     def stats(self) -> OCCStats:
@@ -358,25 +395,48 @@ class OCCEngine:
 
     def reset_stream(self) -> None:
         self._pool, self._n_seen, self._stat_chunks = None, 0, []
+        self._epoch_base = 0
+        self._carry_x = self._carry_state = None
 
-    def partial_fit(self, xb: jnp.ndarray, *, state: Any = None) -> OCCPassResult:
-        """Incremental epochs over an arriving batch (online serving mode).
+    def _empty_stream_result(self, x1: jnp.ndarray, s1: Any) -> OCCPassResult:
+        """A zero-point OCCPassResult (pool unchanged, length-0 outputs).
 
-        The batch is processed against the pool accumulated so far; the
-        pool, the count of points seen, and the epoch statistics carry over
-        to the next call.  Per-point state is derived from the global point
-        index (`make_state(xb, n_seen)`), so e.g. OCC-OFL's counter-based
-        uniforms match a one-shot run over the concatenated stream.  When
-        every batch length is a multiple of pb the epoch boundaries line up
-        too and the stream is *identical* to the one-shot run; a short final
-        epoch inside a batch shifts later epoch boundaries, which is valid
-        OCC (Thm 3.1 still applies) but not the same epoch partition.
-        Returns this batch's OCCPassResult.
+        Returned when a whole batch lands in the partial-epoch carry.  The
+        output leaf shapes/dtypes are transaction-specific (DP/OFL: (N,)
+        int32; BP: (N, K_max) bool), so they are derived ONCE by shape-only
+        tracing of the pass on the carried points — no compute, no dispatch
+        — and cached per point shape/dtype: fine-grained streams (arrival
+        in sub-pb batches) must not pay a Python re-trace per carry-only
+        call.
         """
-        if self._pool is None:
-            self._pool = self.txn.init_pool(xb)
-        if state is None:
-            state = self.txn.make_state(xb, self._n_seen)
+        key = (x1.shape[1:], str(x1.dtype))
+        cached = self._empty_templates.get(key)
+        if cached is not None:
+            return cached._replace(pool=self._pool)
+        global _PASS_TRACES
+        traces = _PASS_TRACES          # eval_shape traces without compiling;
+        try:                           # don't count it as a compilation
+            sd = jax.eval_shape(
+                lambda p, x, s: _engine_pass(
+                    self.txn, p, x, s, pb=self.pb,
+                    validate_cap=self.validate_cap, n_bootstrap=0,
+                    mesh=None, data_axis=self.data_axis,
+                    validate_mode=self.validate_mode),
+                self._pool, x1, s1)
+        finally:
+            _PASS_TRACES = traces
+        empty = lambda s: jnp.zeros((0,) + s.shape[1:], s.dtype)
+        res = OCCPassResult(
+            self._pool, jax.tree.map(empty, sd.assign), empty(sd.send),
+            empty(sd.epoch_of),
+            OCCStats(empty(sd.stats.proposed), empty(sd.stats.accepted)))
+        self._empty_templates[key] = res
+        return res
+
+    def _commit_stream_pass(self, xb: jnp.ndarray, state: Any) -> OCCPassResult:
+        """Run one compiled pass over pb-aligned (or final-flush) points and
+        fold it into the stream: pool, stats, global epoch numbering,
+        publication."""
         res = _engine_pass_jit(
             self.txn, self._pool, xb, state, pb=self.pb,
             validate_cap=self.validate_cap, n_bootstrap=0,
@@ -384,8 +444,77 @@ class OCCEngine:
             validate_mode=self.validate_mode)
         self.n_dispatches += 1
         self._pool = res.pool
-        self._n_seen += xb.shape[0]
         self._stat_chunks.append(res.stats)
         if len(self._stat_chunks) >= 64:
             _ = self.stats          # consolidate chunks on long streams
+        res = res._replace(epoch_of=res.epoch_of + self._epoch_base)
+        self._epoch_base += res.stats.proposed.shape[0]
+        if self.publish is not None:
+            self.publish(res, n_seen=self.n_processed,
+                         epochs=self._epoch_base)
         return res
+
+    def partial_fit(self, xb: jnp.ndarray, *, state: Any = None,
+                    pool: CenterPool | None = None) -> OCCPassResult:
+        """Incremental epochs over an arriving batch (online serving mode).
+
+        The batch is processed against the pool accumulated so far; the
+        pool, the count of points seen, and the epoch statistics carry over
+        to the next call.  Per-point state is derived from the global point
+        index (`make_state(xb, n_seen)`), so e.g. OCC-OFL's counter-based
+        uniforms match a one-shot run over the concatenated stream.
+
+        Epoch boundaries are bit-identical to the one-shot run for ANY
+        batch length: the trailing `n mod pb` points are held in an
+        explicit partial-epoch carry (`n_pending`) and processed when the
+        epoch fills in a later call — or by `flush()` at stream end, which
+        commits them as the one-shot run's final short epoch.  The returned
+        OCCPassResult therefore covers the points *committed* by this call
+        (carried points first, then the aligned prefix of this batch);
+        concatenating every call's `assign` plus `flush()`'s reproduces the
+        one-shot assignment exactly.  `epoch_of` is globally numbered
+        across the stream.  A call that only grows the carry returns a
+        zero-point result with the pool unchanged.
+
+        `pool` (first call only) seeds the stream with an explicit initial
+        pool — e.g. BP-means' mean-initialized pool computed over data the
+        stream's first batch hasn't seen.  Without it the pool initializes
+        from the first batch, which for transactions whose `init_pool` uses
+        data statistics is the one (documented) way a stream can differ
+        from the one-shot run.
+        """
+        if pool is not None:
+            if self._pool is not None:
+                raise ValueError("pool= only seeds the FIRST partial_fit")
+            self._pool = pool
+        if self._pool is None:
+            self._pool = self.txn.init_pool(xb)
+        if state is None:
+            state = self.txn.make_state(xb, self._n_seen)
+        self._n_seen += xb.shape[0]
+        if self._carry_x is not None:
+            xb = jnp.concatenate([self._carry_x, xb], 0)
+            state = jax.tree.map(lambda c, s: jnp.concatenate([c, s], 0),
+                                 self._carry_state, state)
+        n = xb.shape[0]
+        n_full = (n // self.pb) * self.pb
+        if n_full < n:
+            self._carry_x = xb[n_full:]
+            self._carry_state = jax.tree.map(lambda s: s[n_full:], state)
+        else:
+            self._carry_x = self._carry_state = None
+        if n_full == 0:
+            return self._empty_stream_result(xb, state)
+        xb = xb[:n_full]
+        state = jax.tree.map(lambda s: s[:n_full], state)
+        return self._commit_stream_pass(xb, state)
+
+    def flush(self) -> OCCPassResult | None:
+        """Commit the carried partial epoch as the stream's final short
+        epoch (exactly the one-shot run's last epoch).  Returns that
+        result, or None when nothing is pending."""
+        if self._carry_x is None:
+            return None
+        xb, state = self._carry_x, self._carry_state
+        self._carry_x = self._carry_state = None
+        return self._commit_stream_pass(xb, state)

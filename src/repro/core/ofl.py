@@ -18,9 +18,9 @@ testable exactly rather than only in distribution.
 
 The uniforms are counter-based in the *global* point index, so the
 streaming surface (`OCCEngine.partial_fit`) reproduces a one-shot run over
-the concatenated stream draw-for-draw as well — exactly so when batch
-lengths are multiples of pb (otherwise the epoch partition shifts; still
-serializable, just a different epoch layout).
+the concatenated stream draw-for-draw as well — for ANY batch lengths: the
+engine's partial-epoch carry keeps the stream's epoch partition identical
+to the one-shot partition (tests/test_stream_carry.py).
 
 The OCC version is a declarative `OFLTransaction` run by the unified
 `OCCEngine` (core/engine.py); `occ_ofl` remains as the backward-compatible

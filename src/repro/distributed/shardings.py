@@ -24,7 +24,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardCtx", "shard_ctx", "current_ctx", "constrain", "batch_spec",
            "param_specs", "input_shardings", "axes_that_divide",
-           "occ_epoch_sharding", "occ_validate_sharding", "compat_shard_map"]
+           "occ_epoch_sharding", "occ_validate_sharding",
+           "serve_snapshot_sharding", "serve_query_sharding",
+           "compat_shard_map"]
 
 
 def compat_shard_map(f, **kw):
@@ -150,6 +152,28 @@ def occ_validate_sharding(mesh: Mesh, rank: int) -> NamedSharding:
     the master on every device, so the compaction gather happens once and
     the scalar scan runs on replicated operands — no mid-scan resharding."""
     return NamedSharding(mesh, P(*([None] * rank)))
+
+
+def serve_snapshot_sharding(mesh: Mesh, rank: int) -> NamedSharding:
+    """Replicated placement for published snapshot buffers (DESIGN.md §10):
+    the serving data plane is read-only data parallelism — every device
+    answers queries against its own full copy of the (capacity, D) model
+    version, so query fan-out needs no center-side collectives at all.
+    Same placement as the validator's replicated master; delegated so the
+    two stay in lockstep by construction."""
+    return occ_validate_sharding(mesh, rank)
+
+
+def serve_query_sharding(mesh: Mesh, data_axis: str, bucket: int,
+                         rank: int) -> NamedSharding:
+    """Sharding for a bucket-padded query microbatch: rows split over
+    `data_axis` (divisibility fallback to replication — buckets are powers
+    of two, so any power-of-two axis divides), trailing dims unsharded.
+    With the snapshot replicated, each device scores bucket/|data| queries
+    and results concatenate with zero cross-device traffic."""
+    ctx = ShardCtx(mesh=mesh, data_axes=(data_axis,))
+    elem = _norm_elem(bucket, data_axis, ctx)
+    return NamedSharding(mesh, P(elem, *([None] * (rank - 1))))
 
 
 def res_constrain(x: jax.Array, batch_axes) -> jax.Array:

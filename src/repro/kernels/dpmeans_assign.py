@@ -14,10 +14,26 @@ D up to 8192.
 
 Active-prefix restriction: the pool's valid slots are a prefix (centers are
 appended serially), so `k_active` — the pool count, a *traced* scalar passed
-through SMEM — lets the kernel skip every center tile that starts at or
-beyond the count-rounded prefix.  The grid stays static (K_max tiles, JAX
-needs static shapes) but skipped tiles do no MXU/VPU work, so per-epoch
-propose cost tracks the *occupied* pool size rather than the K_max capacity.
+as a scalar-prefetch operand — restricts the work to the count-rounded
+prefix twice over:
+
+  * compute: `pl.when` skips the kernel body for tiles at or beyond the
+    prefix, so skipped tiles do no MXU/VPU work;
+  * HBM traffic: the center/mask BlockSpec index maps (which receive the
+    prefetched scalar *before* the kernel body runs) clamp the block index
+    at the last active tile, so the pipeline re-addresses an
+    already-resident block instead of DMAing a dead one — Pallas elides the
+    copy when consecutive grid steps map to the same block.
+
+The grid stays static (K_max tiles, JAX needs static shapes) but both the
+compute AND the HBM transfer per epoch track the *occupied* pool size
+rather than the K_max capacity.
+
+`dpmeans_assign_emulate` is a vmapped jnp re-implementation of the exact
+kernel schedule (same tiles, same f32 accumulation, same running-argmin
+tie-breaking, same prefix skipping) — the fast stand-in for interpret mode,
+whose per-grid-step Python loop is too slow to parity-check production
+shapes (serving buckets) in CI.
 """
 from __future__ import annotations
 
@@ -28,7 +44,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["dpmeans_assign"]
+__all__ = ["dpmeans_assign", "dpmeans_assign_emulate"]
 
 
 def _assign_kernel(k_active_ref, x_ref, c_ref, mask_ref, d2_ref, idx_ref, *,
@@ -93,20 +109,34 @@ def dpmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray,
     np_, kp = x.shape[0], centers.shape[0]
     k_active = jnp.full((1,), k if count is None else count, jnp.int32)
 
+    # Scalar-prefetch index map: clamp the center-tile index at the last
+    # active tile.  The prefetched count is known before the kernel body,
+    # so the pipeline addresses tile min(j, last_active) — a block already
+    # in VMEM for every skipped step — and the dead tiles' HBM DMA is
+    # elided along with their compute (the `pl.when` in the body).
+    def _center_tile(i, j, k_ref):
+        last = jnp.maximum((k_ref[0] + bk - 1) // bk, 1) - 1
+        return jnp.minimum(j, last), 0
+
+    def _mask_tile(i, j, k_ref):
+        return _center_tile(i, j, k_ref)[0]
+
     grid = (np_ // bn, kp // bk)
     d2, idx = pl.pallas_call(
         functools.partial(_assign_kernel, bk=bk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((bk,), lambda i, j: (j,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn,), lambda i, j: (i,)),
-            pl.BlockSpec((bn,), lambda i, j: (i,)),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bn, d), lambda i, j, k_ref: (i, 0)),
+                pl.BlockSpec((bk, d), _center_tile),
+                pl.BlockSpec((bk,), _mask_tile),
+            ],
+            out_specs=[
+                pl.BlockSpec((bn,), lambda i, j, k_ref: (i,)),
+                pl.BlockSpec((bn,), lambda i, j, k_ref: (i,)),
+            ],
+        ),
         out_shape=[
             jax.ShapeDtypeStruct((np_,), jnp.float32),
             jax.ShapeDtypeStruct((np_,), jnp.int32),
@@ -114,3 +144,66 @@ def dpmeans_assign(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray,
         interpret=interpret,
     )(k_active, x, centers, mask)
     return d2[:n], idx[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def dpmeans_assign_emulate(x: jnp.ndarray, centers: jnp.ndarray,
+                           mask: jnp.ndarray,
+                           count: jnp.ndarray | None = None,
+                           block_n: int = 256, block_k: int = 128):
+    """Vmapped emulation of the Pallas kernel's exact schedule.
+
+    Same contract as `dpmeans_assign`, computed as vmap-over-n-blocks of a
+    scan-over-k-tiles that mirrors the kernel body op for op: identical
+    padding/clamping, the same f32 `dot_general` per tile, per-tile argmin
+    + running strict-< merge (so cross-tile ties resolve to the lower tile
+    exactly as the kernel does), and count-based tile skipping.  Runs as
+    ONE compiled XLA computation — no per-grid-step Python — so production
+    shapes (serving buckets, large K_max) can be parity-checked in CI where
+    interpret mode would take minutes.
+    """
+    n, d = x.shape
+    k = centers.shape[0]
+    bn = min(block_n, max(8, n))
+    bk = min(block_k, max(8, k))
+    n_pad = (-n) % bn
+    k_pad = (-k) % bk
+    if n_pad:
+        x = jnp.concatenate([x, jnp.zeros((n_pad, d), x.dtype)], 0)
+    if k_pad:
+        centers = jnp.concatenate(
+            [centers, jnp.zeros((k_pad, d), centers.dtype)], 0)
+        mask = jnp.concatenate([mask, jnp.zeros((k_pad,), bool)], 0)
+    k_active = jnp.asarray(k if count is None else count, jnp.int32)
+
+    xb = x.reshape(-1, bn, d)
+    cb = centers.reshape(-1, bk, d)
+    mb = mask.reshape(-1, bk)
+    kbs = jnp.arange(cb.shape[0], dtype=jnp.int32)
+
+    def one_block(xblk):
+        xf = xblk.astype(jnp.float32)
+        x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)
+
+        def tile(carry, inp):
+            run_min, run_idx = carry
+            kb, c, m = inp
+            cf = c.astype(jnp.float32)
+            c2 = jnp.sum(cf * cf, axis=-1)[None, :]
+            d2 = jnp.maximum(x2 + c2 - 2.0 * jax.lax.dot_general(
+                xf, cf, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32), 0.0)
+            d2 = jnp.where(m[None, :], d2, jnp.inf)
+            loc_min = jnp.min(d2, axis=-1)
+            loc_idx = jnp.argmin(d2, axis=-1).astype(jnp.int32) + kb * bk
+            better = jnp.logical_and(loc_min < run_min, kb * bk < k_active)
+            return (jnp.where(better, loc_min, run_min),
+                    jnp.where(better, loc_idx, run_idx)), None
+
+        init = (jnp.full((bn,), jnp.inf, jnp.float32),
+                jnp.full((bn,), -1, jnp.int32))
+        (d2m, idxm), _ = jax.lax.scan(tile, init, (kbs, cb, mb))
+        return d2m, idxm
+
+    d2, idx = jax.vmap(one_block)(xb)
+    return d2.reshape(-1)[:n], idx.reshape(-1)[:n]

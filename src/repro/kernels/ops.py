@@ -8,6 +8,10 @@ correctness, and callers default to the jnp reference for speed.  The
   backend="auto"      -> pallas on TPU, ref elsewhere (production default)
   backend="pallas"    -> pallas, interpret=True off-TPU (kernel validation)
   backend="ref"       -> pure-jnp oracle
+  backend="emulate"   -> vmapped emulation of the kernel's exact schedule
+                         (assign/pairwise_argmin only) — interpret-mode
+                         semantics at compiled speed, for parity-checking
+                         production shapes (serving buckets) in CI
 """
 from __future__ import annotations
 
@@ -15,13 +19,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.dpmeans_assign import dpmeans_assign as _dpmeans_assign
+from repro.kernels.dpmeans_assign import (
+    dpmeans_assign as _dpmeans_assign,
+    dpmeans_assign_emulate as _dpmeans_assign_emulate,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.swiglu import swiglu as _swiglu
 
-__all__ = ["assign", "pairwise_argmin", "flash_attention", "rmsnorm",
-           "swiglu", "on_tpu"]
+__all__ = ["assign", "pairwise_argmin", "serve_assign", "serve_topk",
+           "flash_attention", "rmsnorm", "swiglu", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -55,11 +62,13 @@ def assign(x, centers, mask=None, count=None, backend: str = "auto",
     (the reference cannot skip work — static shapes — so count folds into
     the mask, which the pool invariant makes a no-op).
     """
-    use_pallas, interp = _resolve(backend)
     if mask is None:
         mask = jnp.ones((centers.shape[0],), bool)
     if count is not None:
         mask = jnp.logical_and(mask, jnp.arange(centers.shape[0]) < count)
+    if backend == "emulate":
+        return _dpmeans_assign_emulate(x, centers, mask, count=count, **blocks)
+    use_pallas, interp = _resolve(backend)
     if use_pallas:
         return _dpmeans_assign(x, centers, mask, count=count,
                                interpret=interp, **blocks)
@@ -72,12 +81,57 @@ def pairwise_argmin(x, centers, mask=None, backend: str = "auto", **blocks):
     restriction, no -1-on-empty contract, and the reference path computes
     in f32 (the kernel's accumulation dtype) so sweeps compare the Pallas
     body against a like-for-like oracle across input dtypes."""
-    use_pallas, interp = _resolve(backend)
     if mask is None:
         mask = jnp.ones((centers.shape[0],), bool)
+    if backend == "emulate":
+        return _dpmeans_assign_emulate(x, centers, mask, **blocks)
+    use_pallas, interp = _resolve(backend)
     if use_pallas:
         return _dpmeans_assign(x, centers, mask, interpret=interp, **blocks)
     return _ref.pairwise_argmin_ref(x, centers, mask)
+
+
+def serve_assign(x, centers, mask=None, count=None, n_valid=None,
+                 backend: str = "auto", **blocks):
+    """Bucket-padded assignment — the serving-plane query primitive.
+
+    Same contract as `assign` plus *query*-prefix masking: the service pads
+    ragged request batches up to a power-of-two bucket (so jit caches stay
+    warm across request sizes) and passes `n_valid`, the count of real
+    rows; padding rows come back as (inf, -1) and can never alias a real
+    response.  The center-side count prefix (`count`) works exactly as in
+    `assign` — one kernel dispatch covers both maskings.
+    """
+    d2, idx = assign(x, centers, mask, count=count, backend=backend, **blocks)
+    if n_valid is not None:
+        ok = jnp.arange(x.shape[0]) < n_valid
+        d2 = jnp.where(ok, d2, jnp.inf)
+        idx = jnp.where(ok, idx, -1)
+    return d2, idx
+
+
+def serve_topk(x, centers, k: int, mask=None, count=None, n_valid=None,
+               backend: str = "auto"):
+    """k nearest centers per query: (d2 (N, k) ascending, idx (N, k)).
+
+    Serving-plane ranking query with the same bucket/count-prefix masking
+    as `serve_assign`; invalid (masked / padded / beyond-count) slots are
+    (inf, -1).  All backends run the jnp algebra (`ref.topk_ref`): top-k
+    needs the full distance row, so there is no streamed running-min kernel
+    to dispatch to — the O(N·K) matrix is one MXU matmul and `lax.top_k`
+    lowers natively on TPU.  `topk[..., :1]` equals `serve_assign` on the
+    ref backend bit-exactly (same algebra, same tie-breaking).
+    """
+    if mask is None:
+        mask = jnp.ones((centers.shape[0],), bool)
+    if count is not None:
+        mask = jnp.logical_and(mask, jnp.arange(centers.shape[0]) < count)
+    d2, idx = _ref.topk_ref(x, centers, k, mask)
+    if n_valid is not None:
+        ok = (jnp.arange(x.shape[0]) < n_valid)[:, None]
+        d2 = jnp.where(ok, d2, jnp.inf)
+        idx = jnp.where(ok, idx, -1)
+    return d2, idx
 
 
 def flash_attention(q, k, v, causal=True, scale=None, backend: str = "auto",

@@ -8,8 +8,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import jax
 
-__all__ = ["assign_ref", "pairwise_argmin_ref", "flash_attention_ref",
-           "rmsnorm_ref", "swiglu_ref"]
+__all__ = ["assign_ref", "pairwise_argmin_ref", "topk_ref",
+           "flash_attention_ref", "rmsnorm_ref", "swiglu_ref"]
 
 
 def assign_ref(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray):
@@ -39,6 +39,26 @@ def pairwise_argmin_ref(x: jnp.ndarray, centers: jnp.ndarray,
     if mask is not None:
         d2 = jnp.where(mask[None, :], d2, jnp.inf)
     return jnp.min(d2, axis=-1), jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def topk_ref(x: jnp.ndarray, centers: jnp.ndarray, k: int,
+             mask: jnp.ndarray | None = None):
+    """k nearest centers per query: (d2 (N, k) ascending, idx (N, k) int32).
+
+    Same input-dtype expanded-matmul algebra as `assign_ref` (so the top-1
+    column is bit-identical to `assign_ref`'s verdict); slots beyond the
+    valid set come back as (inf, -1).  `lax.top_k` breaks distance ties by
+    lower index — matching `argmin`, so topk[...,:1] == assign exactly.
+    """
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(centers * centers, axis=-1)[None, :]
+    d2 = jnp.maximum(x2 + c2 - 2.0 * (x @ centers.T), 0.0)
+    if mask is not None:
+        d2 = jnp.where(mask[None, :], d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k)
+    d2k = -neg
+    idx = jnp.where(jnp.isfinite(d2k), idx, -1).astype(jnp.int32)
+    return d2k, idx
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,0 +1,227 @@
+"""Train-on-stream, serve-while-training: the first full train→publish→serve
+pipeline (DESIGN.md §10).
+
+A trainer thread streams batches through `OCCEngine.partial_fit` (arbitrary
+batch lengths — the partial-epoch carry keeps the stream bit-identical to a
+one-shot run) and publishes an immutable `ModelSnapshot` per committed
+pass.  Concurrently, the main thread runs a load generator against a
+`ClusterService`: ragged request sizes, pad-to-bucket microbatching, one
+jitted dispatch per microbatch, atomic hot-swap to newer versions between
+requests.
+
+After the run, every response is audited:
+  * zero stale reads — replaying the tagged version's snapshot through the
+    service's own jitted step reproduces each response bit-exactly, and
+    observed versions are monotone;
+  * serve == train — response labels are bit-identical to engine labels
+    (`core.occ.nearest_center` on the tagged snapshot's pool);
+  * ≥ 3 versions hot-swapped through, ≥ 10k queries (full mode).
+
+p50/p99 latency and QPS land in BENCH_cluster_service.json.
+
+  PYTHONPATH=src python -m repro.launch.serve_clusters [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DPMeansTransaction, OCCEngine
+from repro.core.occ import nearest_center
+from repro.data import dp_stick_breaking_data
+from repro.serving import ClusterService, SnapshotStore, next_bucket
+from repro.serving.cluster_service import _assign_step
+
+__all__ = ["ServeDemoConfig", "run_demo"]
+
+
+@dataclass
+class ServeDemoConfig:
+    n: int = 8192              # stream length
+    dim: int = 16
+    lam: float = 4.0
+    k_max: int = 512
+    pb: int = 128              # points per OCC epoch
+    train_batch: int = 384     # NOT a multiple of pb: exercises the carry
+    min_queries: int = 10_000  # load-generator floor
+    max_request: int = 100     # ragged request sizes in [1, max_request]
+    backend: str = "auto"      # service kernel backend
+    min_versions: int = 3      # hot-swap floor the service must observe
+    seed: int = 0
+    out_path: str | None = None
+    quiet: bool = False
+
+
+@dataclass
+class _Trace:
+    """One served request, as recorded by the load generator."""
+    version: int
+    q_lo: int
+    q_hi: int
+    labels: np.ndarray
+    scores: np.ndarray
+    bucket: int
+    latency_s: float = 0.0
+    order: int = 0
+    extra: dict = field(default_factory=dict)
+
+
+def _trainer(eng: OCCEngine, batches, svc: ClusterService,
+             pace_microbatches: int = 2, timeout_s: float = 5.0):
+    """Stream batches through partial_fit; between publishes, wait until the
+    service has answered a couple more microbatches so every version is
+    actually *observed* under load (deterministic interleaving, no sleeps
+    tuned to machine speed)."""
+    for xb in batches:
+        seen = svc.n_microbatches
+        eng.partial_fit(xb)
+        deadline = time.perf_counter() + timeout_s
+        while (svc.n_microbatches < seen + pace_microbatches
+               and time.perf_counter() < deadline):
+            time.sleep(0.001)
+    eng.flush()
+
+
+def run_demo(cfg: ServeDemoConfig) -> dict:
+    x, _, _ = dp_stick_breaking_data(cfg.n, seed=cfg.seed, dim=cfg.dim)
+    x = jnp.asarray(x)
+    rng = np.random.default_rng(cfg.seed + 1)
+
+    store = SnapshotStore(capacity=256)   # retain all versions for the audit
+    eng = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max), pb=cfg.pb,
+                    publish=store.publish_pass)
+    svc = ClusterService(store, backend=cfg.backend,
+                         max_bucket=next_bucket(cfg.max_request, lo=128))
+
+    batches = [x[i:i + cfg.train_batch]
+               for i in range(0, cfg.n, cfg.train_batch)]
+    # First batch before starting the thread so the service has a version
+    # (and the jit caches warm under measurement, as in production).
+    eng.partial_fit(batches[0])
+    trainer = threading.Thread(
+        target=_trainer, args=(eng, batches[1:], svc), daemon=True)
+
+    # ---------------------------------------------------------------- serve
+    traces: list[_Trace] = []
+    t_serve0 = time.perf_counter()
+    trainer.start()
+    while (trainer.is_alive() or len(traces) == 0
+           or sum(t.q_hi - t.q_lo for t in traces) < cfg.min_queries
+           or len({t.version for t in traces}) < cfg.min_versions):
+        size = int(rng.integers(1, cfg.max_request + 1))
+        lo = int(rng.integers(0, cfg.n - size))
+        q = x[lo:lo + size]
+        t0 = time.perf_counter()
+        resp = svc.score(q)
+        dt = time.perf_counter() - t0
+        traces.append(_Trace(resp.version, lo, lo + size, resp.labels,
+                             resp.scores, resp.bucket, dt, len(traces)))
+        if time.perf_counter() - t_serve0 > 120:
+            break    # safety valve; the audit below still decides pass/fail
+    serve_wall = time.perf_counter() - t_serve0
+    trainer.join()
+
+    # ---------------------------------------------------------------- audit
+    versions = [t.version for t in traces]
+    assert versions == sorted(versions), "stale read: version went backwards"
+    n_versions = len(set(versions))
+    assert n_versions >= cfg.min_versions, (
+        f"only {n_versions} versions observed under load")
+
+    stale = parity = 0
+    for t in traces:
+        snap = store.get(t.version)
+        assert snap is not None, "audited version evicted — grow the ring"
+        # zero stale reads: replaying the *tagged* snapshot through the
+        # service's own jitted step must reproduce the response bit-exactly.
+        nq = t.q_hi - t.q_lo
+        qp = jnp.concatenate([x[t.q_lo:t.q_hi],
+                              jnp.zeros((t.bucket - nq, cfg.dim), x.dtype)], 0)
+        d2, idx = _assign_step(snap.centers, snap.mask, np.int32(snap.count),
+                               qp, np.int32(nq), backend=cfg.backend)
+        if not (np.array_equal(t.labels, np.asarray(idx[:nq]))
+                and np.array_equal(t.scores, np.asarray(d2[:nq]))):
+            stale += 1
+        # serve == train: labels bit-identical to engine labels on the
+        # same version (nearest_center on the snapshot's pool).
+        _, ide = nearest_center(snap.as_pool(), x[t.q_lo:t.q_hi],
+                                backend="ref")
+        if not np.array_equal(t.labels, np.asarray(ide)):
+            parity += 1
+    assert stale == 0, f"{stale} responses not reproducible from their tag"
+    assert parity == 0, f"{parity} responses diverge from engine labels"
+
+    # stream == one-shot (the carry satellite, end to end)
+    one = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max),
+                    pb=cfg.pb).run(x)
+    assert int(one.pool.count) == int(eng.pool.count)
+    np.testing.assert_array_equal(np.asarray(one.pool.centers),
+                                  np.asarray(eng.pool.centers))
+
+    lat = np.asarray([t.latency_s for t in traces])
+    m = svc.metrics()
+    record = {
+        "bench": "cluster_service",
+        "n_train": cfg.n, "pb": cfg.pb, "train_batch": cfg.train_batch,
+        "k_final": int(eng.pool.count),
+        "n_queries": m["n_queries"],
+        "n_microbatches": m["n_microbatches"],
+        "dispatches_per_microbatch": m["dispatches_per_microbatch"],
+        "query_step_compiles": m["query_step_compiles"],
+        "n_versions_published": len(store),
+        "n_versions_observed": n_versions,
+        "n_hot_swaps": m["n_swaps"],
+        "zero_stale_reads": stale == 0,
+        "serve_train_parity": parity == 0,
+        "qps": m["n_queries"] / serve_wall,
+        "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+        "bucket_hist": m["bucket_hist"],
+    }
+    if cfg.out_path is not None:
+        with open(cfg.out_path, "w") as f:
+            json.dump(record, f, indent=2)
+    if not cfg.quiet:
+        print(f"trained K={record['k_final']} over {cfg.n} streamed points "
+              f"({len(store)} versions published)")
+        print(f"served {record['n_queries']} queries in "
+              f"{record['n_microbatches']} microbatches "
+              f"({record['dispatches_per_microbatch']:.2f} dispatches each) "
+              f"across {n_versions} hot-swapped versions")
+        print(f"QPS={record['qps']:.0f}  p50={record['p50_latency_ms']:.2f}ms"
+              f"  p99={record['p99_latency_ms']:.2f}ms")
+        print("zero stale reads: True   serve==train bit-parity: True")
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--pb", type=int, default=128)
+    ap.add_argument("--train-batch", type=int, default=384)
+    ap.add_argument("--queries", type=int, default=10_000)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (numbers not meaningful)")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_cluster_service.json here")
+    args = ap.parse_args(argv)
+    cfg = ServeDemoConfig(n=args.n, pb=args.pb, train_batch=args.train_batch,
+                          min_queries=args.queries, backend=args.backend,
+                          out_path=args.out)
+    if args.quick:
+        cfg = ServeDemoConfig(n=1024, pb=64, train_batch=200, dim=8,
+                              min_queries=400, max_request=50, k_max=256,
+                              backend=args.backend, out_path=args.out)
+    run_demo(cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,16 @@
+"""Serving data plane: LM slot engine + the cluster train/serve split.
+
+`SnapshotStore` + `ClusterService` are the paper-side serving stack
+(DESIGN.md §10): OCC training publishes immutable `ModelSnapshot` versions;
+the read-only service answers batched assign/score/topk queries against
+them with pad-to-bucket microbatching and atomic hot-swap.
+"""
 from repro.serving.engine import ServeEngine
+from repro.serving.snapshot import (
+    ModelSnapshot, SnapshotStore, freeze_snapshot, next_bucket,
+)
+from repro.serving.cluster_service import ClusterService, ServeResponse
+
+__all__ = ["ServeEngine", "ModelSnapshot", "SnapshotStore",
+           "freeze_snapshot", "next_bucket", "ClusterService",
+           "ServeResponse"]

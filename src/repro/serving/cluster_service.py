@@ -1,0 +1,236 @@
+"""Batched cluster-assignment service over published snapshots (DESIGN.md §10).
+
+The read-only data plane of the train/serve split: a `ClusterService`
+answers `assign` / `score` / `topk` queries against the newest
+`ModelSnapshot` in a `SnapshotStore`, while the OCC trainer keeps
+publishing new versions.
+
+Microbatching & jit-cache policy:
+  * Each public call is ONE microbatch and ONE jitted dispatch.  Ragged
+    request sizes are padded up to a power-of-two bucket
+    (`min_bucket..max_bucket`), so the jit cache is keyed on a handful of
+    (request bucket, snapshot capacity bucket) pairs and stays warm under
+    arbitrary traffic — a new model *version* never retraces (same shapes),
+    only a new capacity bucket does.
+  * Padding rows are masked with the query-prefix count (`n_valid`) inside
+    the kernel dispatch (`kernels/ops.serve_assign`) — they return (inf,
+    -1) and are sliced off before the response, so they can never alias a
+    real answer.
+
+Hot-swap semantics: the service re-reads `store.latest()` exactly once per
+microbatch; the whole microbatch is computed against that one immutable
+snapshot and the response is tagged with its version.  Swapping is a single
+reference read — no locks on the query path, no torn reads (immutability
+contract, serving/snapshot.py), and versions observed by any single client
+are monotone because the store's versions are.
+
+Sharding (optional `mesh`): snapshots are placed replicated
+(`shardings.serve_snapshot_sharding`) and query rows are sharded over the
+data axis (`serve_query_sharding`) — read-only data parallelism with zero
+center-side collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as _kops
+from repro.serving.snapshot import ModelSnapshot, SnapshotStore, next_bucket
+
+__all__ = ["ClusterService", "ServeResponse"]
+
+
+class ServeResponse(NamedTuple):
+    """One microbatch's answer, tagged with the version that produced it."""
+    version: int            # ModelSnapshot.version used for every row
+    labels: np.ndarray      # (B,) int32 — assigned center / (B, k) for topk
+    scores: np.ndarray | None   # (B,) squared distance / (B, k) for topk
+    bucket: int             # padded microbatch size actually dispatched
+
+
+# Trace counter: incremented only when a query step is (re)compiled.  Lets
+# tests assert hot-swapping versions does NOT retrace (warm-cache contract).
+_QUERY_TRACES = 0
+
+
+def _constrained(centers, mask, xq, mesh, data_axis):
+    if mesh is None:
+        return centers, mask, xq
+    from repro.distributed.shardings import (
+        serve_query_sharding, serve_snapshot_sharding,
+    )
+    cons = jax.lax.with_sharding_constraint
+    centers = cons(centers, serve_snapshot_sharding(mesh, centers.ndim))
+    mask = cons(mask, serve_snapshot_sharding(mesh, mask.ndim))
+    xq = cons(xq, serve_query_sharding(mesh, data_axis, xq.shape[0], xq.ndim))
+    return centers, mask, xq
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "mesh", "data_axis"))
+def _assign_step(centers, mask, count, xq, n_valid, *, backend,
+                 mesh=None, data_axis="data"):
+    """THE jitted query step: one dispatch per microbatch, cache-keyed on
+    (bucket, capacity, backend) — never on the version."""
+    global _QUERY_TRACES
+    _QUERY_TRACES += 1
+    centers, mask, xq = _constrained(centers, mask, xq, mesh, data_axis)
+    return _kops.serve_assign(xq, centers, mask, count=count,
+                              n_valid=n_valid, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend", "mesh",
+                                             "data_axis"))
+def _topk_step(centers, mask, count, xq, n_valid, *, k, backend,
+               mesh=None, data_axis="data"):
+    global _QUERY_TRACES
+    _QUERY_TRACES += 1
+    centers, mask, xq = _constrained(centers, mask, xq, mesh, data_axis)
+    return _kops.serve_topk(xq, centers, k, mask=mask, count=count,
+                            n_valid=n_valid, backend=backend)
+
+
+class ClusterService:
+    """Serves batched assignment queries from a SnapshotStore.
+
+    Args:
+      store: the `SnapshotStore` the trainer publishes into.
+      backend: `kernels/ops` backend for the assignment kernel ("auto":
+        Pallas on TPU, jnp reference elsewhere — the same dispatch, and
+        hence the same numerics, as the engine's propose phase, which is
+        what makes serve-vs-train bit-parity hold).
+      min_bucket / max_bucket: power-of-two request bucket bounds; requests
+        larger than max_bucket are split into max_bucket microbatches.
+      mesh / data_axis: optional device mesh for replicated-snapshot /
+        sharded-query serving.
+    """
+
+    def __init__(self, store: SnapshotStore, backend: str = "auto",
+                 min_bucket: int = 8, max_bucket: int = 4096,
+                 mesh: jax.sharding.Mesh | None = None,
+                 data_axis: str = "data"):
+        assert min_bucket & (min_bucket - 1) == 0, "min_bucket: power of two"
+        assert max_bucket & (max_bucket - 1) == 0, "max_bucket: power of two"
+        self.store = store
+        self.backend = backend
+        self.min_bucket = min_bucket
+        self.max_bucket = max_bucket
+        self.mesh = mesh
+        self.data_axis = data_axis
+        # observability: one dispatch per microbatch is the contract.
+        # n_dispatches is incremented at every jitted-step CALL SITE (not
+        # alongside n_microbatches) so the ratio actually measures the
+        # contract; _traces0 anchors the process-wide compile counter.
+        self.n_queries = 0
+        self.n_microbatches = 0
+        self.n_dispatches = 0
+        self.n_swaps = 0
+        self._traces0 = _QUERY_TRACES
+        self.bucket_hist: dict[int, int] = {}
+        self.version_hist: dict[int, int] = {}
+        self._cur_version: int | None = None
+
+    # ------------------------------------------------------------ internals
+    def _take_snapshot(self) -> ModelSnapshot:
+        """The hot-swap point: one atomic ref read per microbatch."""
+        snap = self.store.latest()
+        if snap is None:
+            raise RuntimeError("no model version published yet")
+        if snap.version != self._cur_version:
+            if self._cur_version is not None:
+                self.n_swaps += 1
+            self._cur_version = snap.version
+        return snap
+
+    def _pad(self, x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+        n = x.shape[0]
+        bucket = next_bucket(n, self.min_bucket, self.max_bucket)
+        if n < bucket:
+            x = jnp.concatenate(
+                [x, jnp.zeros((bucket - n,) + x.shape[1:], x.dtype)], 0)
+        return x, bucket
+
+    def _account(self, snap: ModelSnapshot, n: int, bucket: int) -> None:
+        self.n_queries += n
+        self.n_microbatches += 1
+        self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+        self.version_hist[snap.version] = (
+            self.version_hist.get(snap.version, 0) + n)
+
+    def _split(self, x) -> list[jnp.ndarray]:
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.shape[0] <= self.max_bucket:
+            return [x]
+        return [x[i:i + self.max_bucket]
+                for i in range(0, x.shape[0], self.max_bucket)]
+
+    # -------------------------------------------------------------- queries
+    def score(self, x) -> ServeResponse:
+        """Nearest-center label AND squared distance per query row.
+
+        The snapshot is pinned ONCE for the whole request — even when a
+        giant request splits into several max_bucket microbatches, every
+        row is answered by the same version (the one in the tag); the
+        hot-swap point is between requests.
+        """
+        snap = self._take_snapshot()
+        parts_l, parts_s, bucket = [], [], 0
+        for xc in self._split(x):
+            n = xc.shape[0]
+            xp, bucket = self._pad(xc)
+            d2, idx = _assign_step(
+                snap.centers, snap.mask, np.int32(snap.count), xp,
+                np.int32(n), backend=self.backend, mesh=self.mesh,
+                data_axis=self.data_axis)
+            self.n_dispatches += 1
+            self._account(snap, n, bucket)
+            parts_l.append(np.asarray(idx[:n]))
+            parts_s.append(np.asarray(d2[:n]))
+        return ServeResponse(snap.version, np.concatenate(parts_l),
+                             np.concatenate(parts_s), bucket)
+
+    def assign(self, x) -> ServeResponse:
+        """Nearest-center label per query row (scores omitted)."""
+        return self.score(x)._replace(scores=None)
+
+    def topk(self, x, k: int = 4) -> ServeResponse:
+        """k nearest centers per query row, distances ascending."""
+        snap = self._take_snapshot()
+        parts_l, parts_s, bucket = [], [], 0
+        for xc in self._split(x):
+            n = xc.shape[0]
+            xp, bucket = self._pad(xc)
+            kk = min(k, snap.capacity)
+            d2, idx = _topk_step(
+                snap.centers, snap.mask, np.int32(snap.count), xp,
+                np.int32(n), k=kk, backend=self.backend, mesh=self.mesh,
+                data_axis=self.data_axis)
+            self.n_dispatches += 1
+            self._account(snap, n, bucket)
+            parts_l.append(np.asarray(idx[:n]))
+            parts_s.append(np.asarray(d2[:n]))
+        return ServeResponse(snap.version, np.concatenate(parts_l),
+                             np.concatenate(parts_s), bucket)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> dict[str, Any]:
+        return {
+            "n_queries": self.n_queries,
+            "n_microbatches": self.n_microbatches,
+            "n_dispatches": self.n_dispatches,
+            "dispatches_per_microbatch":
+                self.n_dispatches / max(1, self.n_microbatches),
+            "n_swaps": self.n_swaps,
+            # query-step compilations since this service was built
+            # (process-wide counter: exact when one service is live).
+            # Bounded by the distinct (bucket, capacity) pairs — hot swaps
+            # and steady traffic must not grow it.
+            "query_step_compiles": _QUERY_TRACES - self._traces0,
+            "versions_served": sorted(self.version_hist),
+            "bucket_hist": dict(sorted(self.bucket_hist.items())),
+        }

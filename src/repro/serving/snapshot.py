@@ -1,0 +1,159 @@
+"""Immutable model snapshots: the train→serve publication point (DESIGN.md §10).
+
+The serving-side dual of the paper's optimistic write-side protocol,
+following the versioned-parameter-store idea of *Parameter Database* (Goel
+et al., 2015): OCC training *publishes* immutable model versions; a
+read-only data plane serves assignment/score queries against them
+concurrently.  Trainer and service share no mutable state — the only
+channel is `SnapshotStore.publish_pass`, handed to `OCCEngine(publish=...)`.
+
+Immutability contract:
+  * A `ModelSnapshot` is frozen at publish time: its arrays are sliced
+    copies of the pool buffers and are never written again.  Readers may
+    hold a snapshot across any number of queries; nothing the trainer does
+    can change what they see (zero stale/torn reads by construction).
+  * `version` is assigned monotonically under the store lock; a response
+    tagged with version v was computed entirely from snapshot v.
+
+Capacity bucketing: the pool's valid slots are a prefix, so a snapshot
+compacts `(K_max, D)` down to the next power-of-two capacity >= count
+(min 8, the TPU sublane tile).  Capacities move through a handful of
+buckets as the model grows, so the service's jitted query steps recompile
+once per (request bucket, capacity bucket) and then stay warm across
+versions — publishing a new version never causes a serve-path recompile
+unless the model actually outgrew its capacity bucket.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.engine import OCCPassResult
+from repro.core.occ import CenterPool
+
+__all__ = ["ModelSnapshot", "SnapshotStore", "next_bucket", "freeze_snapshot"]
+
+_MIN_CAPACITY = 8   # TPU sublane tile: the smallest useful center buffer
+
+
+def next_bucket(n: int, lo: int = _MIN_CAPACITY, hi: int | None = None) -> int:
+    """Smallest power of two >= n, clamped to [lo, hi]."""
+    b = lo
+    while b < n:
+        b <<= 1
+    return b if hi is None else min(b, hi)
+
+
+@dataclass(frozen=True)
+class ModelSnapshot:
+    """One immutable published model version.
+
+    Array fields are device arrays frozen at publish time; scalar metadata
+    is host Python (synced once per publish, never on the query path).
+    """
+    version: int            # monotone id assigned by the store
+    centers: jnp.ndarray    # (capacity, D) — capacity-bucketed prefix copy
+    mask: jnp.ndarray       # (capacity,) bool — prefix mask (arange < count)
+    count: int              # valid centers (== K of this version)
+    capacity: int           # power-of-two buffer size (jit-cache key)
+    n_seen: int = 0         # training points folded in when frozen
+    epochs: int = 0         # global OCC epochs committed when frozen
+    overflow: bool = False  # pool/validator overflow was raised in training
+    objective: float | None = None   # optional objective metadata
+
+    @property
+    def k(self) -> int:
+        return self.count
+
+    def as_pool(self) -> CenterPool:
+        """View this snapshot as a (read-only) CenterPool — lets serving
+        results be parity-checked against `core.occ.nearest_center` on the
+        exact buffers the service used."""
+        return CenterPool(self.centers, self.mask,
+                          jnp.asarray(self.count, jnp.int32),
+                          jnp.asarray(self.overflow, bool))
+
+
+def freeze_snapshot(pool: CenterPool, version: int, *, n_seen: int = 0,
+                    epochs: int = 0, objective: float | None = None,
+                    max_capacity: int | None = None) -> ModelSnapshot:
+    """Freeze a CenterPool into an immutable, capacity-bucketed snapshot.
+
+    One host sync (count/overflow scalars) per publish; the center slice is
+    a fresh device array the trainer never touches again.
+    """
+    count = int(pool.count)
+    k_max = pool.centers.shape[0]
+    cap = next_bucket(count, hi=min(k_max, max_capacity or k_max))
+    if cap < count:
+        # Silent truncation would drop live centers and break the
+        # serve==train parity contract; refuse loudly instead.
+        raise ValueError(
+            f"max_capacity={max_capacity} cannot hold {count} live centers")
+    centers = jnp.asarray(pool.centers[:cap])
+    mask = jnp.arange(cap) < count
+    return ModelSnapshot(version=version, centers=centers, mask=mask,
+                         count=count, capacity=cap, n_seen=n_seen,
+                         epochs=epochs, overflow=bool(pool.overflow),
+                         objective=objective)
+
+
+@dataclass
+class SnapshotStore:
+    """Thread-safe ring of published model versions.
+
+    The trainer publishes (`publish_pass` as the engine's `publish=` hook,
+    or `publish_pool` directly); services read `latest()` / `get(version)`.
+    Old versions are evicted FIFO beyond `capacity` — in-flight readers
+    holding an evicted snapshot are unaffected (immutability), the store
+    just stops handing it out.
+    """
+    capacity: int = 16
+    max_model_capacity: int | None = None
+    _ring: "OrderedDict[int, ModelSnapshot]" = field(default_factory=OrderedDict)
+    _next_version: int = 1
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def publish_pool(self, pool: CenterPool, *, n_seen: int = 0,
+                     epochs: int = 0,
+                     objective: float | None = None) -> ModelSnapshot:
+        """Freeze and publish; returns the new snapshot with its version."""
+        # Freeze outside the lock would race the version order; the slice
+        # is cheap (device-side copy), so publish holds the lock throughout.
+        with self._lock:
+            snap = freeze_snapshot(pool, self._next_version, n_seen=n_seen,
+                                   epochs=epochs, objective=objective,
+                                   max_capacity=self.max_model_capacity)
+            self._next_version += 1
+            self._ring[snap.version] = snap
+            while len(self._ring) > self.capacity:
+                self._ring.popitem(last=False)
+            return snap
+
+    def publish_pass(self, result: OCCPassResult, *, n_seen: int = 0,
+                     epochs: int = 0) -> ModelSnapshot:
+        """`OCCEngine(publish=store.publish_pass)` — one version per
+        committed pass."""
+        return self.publish_pool(result.pool, n_seen=n_seen, epochs=epochs)
+
+    def latest(self) -> ModelSnapshot | None:
+        with self._lock:
+            if not self._ring:
+                return None
+            return next(reversed(self._ring.values()))
+
+    def get(self, version: int) -> ModelSnapshot | None:
+        with self._lock:
+            return self._ring.get(version)
+
+    def versions(self) -> list[int]:
+        with self._lock:
+            return list(self._ring)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)

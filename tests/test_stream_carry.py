@@ -1,0 +1,190 @@
+"""Streaming epoch-boundary carry: partial_fit is bit-identical to the
+one-shot run for ANY batch length (ROADMAP item closed by the train/serve
+PR — published snapshots must be batching-independent).
+
+The engine holds the trailing `n mod pb` points in an explicit
+partial-epoch carry; `flush()` commits them as the one-shot run's final
+short epoch.  Concatenating every call's outputs + flush reproduces the
+one-shot pass exactly: assignments, epoch partition, stats, pool bits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BPMeansTransaction, DPMeansTransaction, OCCEngine, OFLTransaction,
+)
+from repro.data import bp_stick_breaking_data, dp_stick_breaking_data
+
+LAM = 4.0
+
+
+def _x(n=512, seed=4, dim=8):
+    x, _, _ = dp_stick_breaking_data(n, seed=seed, dim=dim)
+    return jnp.asarray(x)
+
+
+def _stream_all(eng, x, cuts):
+    """Feed x split at `cuts`, return concatenated outputs incl. flush."""
+    parts = [eng.partial_fit(xb) for xb in jnp.split(x, cuts)]
+    fl = eng.flush()
+    if fl is not None:
+        parts.append(fl)
+    cat = lambda get: np.concatenate([np.asarray(get(p)) for p in parts])
+    return cat(lambda p: p.assign), cat(lambda p: p.epoch_of), \
+        cat(lambda p: p.send)
+
+
+CUTS = [
+    [100, 137, 412],          # nothing aligned to pb=64
+    [1],                      # single point first (carry-only call)
+    [63, 64, 65],             # straddling one epoch boundary repeatedly
+    [511],                    # all but the last point
+    [128, 256, 384],          # perfectly aligned (carry never engages)
+]
+
+
+@pytest.mark.parametrize("cuts", CUTS)
+def test_dp_stream_any_batching_bit_identical(cuts):
+    x = _x()
+    txn = DPMeansTransaction(LAM, k_max=128)
+    one = OCCEngine(txn, pb=64).run(x)
+    eng = OCCEngine(txn, pb=64)
+    z, eo, send = _stream_all(eng, x, cuts)
+    assert np.array_equal(z, np.asarray(one.assign))
+    assert np.array_equal(eo, np.asarray(one.epoch_of))
+    assert np.array_equal(send, np.asarray(one.send))
+    assert np.array_equal(np.asarray(eng.stats.proposed),
+                          np.asarray(one.stats.proposed))
+    assert np.array_equal(np.asarray(eng.stats.accepted),
+                          np.asarray(one.stats.accepted))
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers),
+                                  np.asarray(one.pool.centers))
+    assert int(eng.pool.count) == int(one.pool.count)
+    assert eng.n_pending == 0 and eng.n_processed == 512
+    assert eng.epochs_done == one.stats.proposed.shape[0]
+
+
+@pytest.mark.parametrize("cuts", [[100, 137, 412], [63, 64, 65]])
+def test_ofl_stream_any_batching_bit_identical(cuts):
+    """OFL is the sharp case: counter-based uniforms + probabilistic sends
+    mean ANY epoch-partition drift changes draws — bit-identity here proves
+    the carry restores the exact one-shot partition."""
+    x = _x(seed=5)
+    key = jax.random.key(9)
+    txn = OFLTransaction(LAM, 256, key)
+    one = OCCEngine(txn, pb=64).run(x)
+    eng = OCCEngine(txn, pb=64)
+    z, eo, _ = _stream_all(eng, x, cuts)
+    assert np.array_equal(z, np.asarray(one.assign))
+    assert np.array_equal(eo, np.asarray(one.epoch_of))
+    k = int(one.pool.count)
+    assert int(eng.pool.count) == k
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers[:k]),
+                                  np.asarray(one.pool.centers[:k]))
+
+
+def test_bp_stream_any_batching_bit_identical():
+    """BP-means carries per-point STATE (the (N, K_max) assignment rows)
+    through the partial epoch, not just the points.  init_mean=False keeps
+    init_pool data-independent — with init_mean the pool seeds from
+    mean(first batch) vs mean(all x), the one documented way a stream can
+    differ from one-shot (see the seeded-pool variant below)."""
+    xb, _, _ = bp_stick_breaking_data(256, seed=2)
+    xb = jnp.asarray(xb)
+    txn = BPMeansTransaction(LAM, k_max=32, init_mean=False)
+    one = OCCEngine(txn, pb=32).run(xb)
+    eng = OCCEngine(txn, pb=32)
+    z, eo, _ = _stream_all(eng, xb, [50, 81, 200])
+    assert np.array_equal(z, np.asarray(one.assign))
+    assert np.array_equal(eo, np.asarray(one.epoch_of))
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers),
+                                  np.asarray(one.pool.centers))
+
+
+def test_bp_stream_with_seeded_pool_matches_mean_init():
+    """partial_fit(pool=...) seeds the stream with the one-shot run's
+    mean-initialized pool, restoring bit-identity for init_mean=True."""
+    xb, _, _ = bp_stick_breaking_data(256, seed=2)
+    xb = jnp.asarray(xb)
+    txn = BPMeansTransaction(LAM, k_max=32)
+    one = OCCEngine(txn, pb=32).run(xb)
+    eng = OCCEngine(txn, pb=32)
+    parts = [eng.partial_fit(xb[:50], pool=txn.init_pool(xb)),
+             eng.partial_fit(xb[50:200]), eng.partial_fit(xb[200:])]
+    fl = eng.flush()
+    parts += [fl] if fl is not None else []
+    z = np.concatenate([np.asarray(p.assign) for p in parts])
+    assert np.array_equal(z, np.asarray(one.assign))
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers),
+                                  np.asarray(one.pool.centers))
+    with pytest.raises(ValueError):
+        eng.partial_fit(xb[:32], pool=txn.init_pool(xb))
+
+
+def test_carry_only_call_returns_zero_point_result():
+    x = _x()
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64)
+    res = eng.partial_fit(x[:10])
+    assert res.assign.shape == (0,) and res.assign.dtype == jnp.int32
+    assert res.send.shape == (0,) and res.epoch_of.shape == (0,)
+    assert res.stats.proposed.shape == (0,)
+    assert eng.n_pending == 10 and eng.n_processed == 0
+    assert eng.n_seen == 10 and eng.epochs_done == 0
+    # the zero-point result did not touch the pool
+    assert int(res.pool.count) == 0
+    # carried points commit (with correct global epoch ids) once it fills
+    res2 = eng.partial_fit(x[10:74])
+    assert res2.assign.shape == (64,)
+    assert (np.asarray(res2.epoch_of) == 0).all()
+    assert eng.n_pending == 10
+
+
+def test_flush_empty_and_reset_stream():
+    x = _x()
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64)
+    assert eng.flush() is None               # nothing pending
+    eng.partial_fit(x[:100])
+    assert eng.n_pending == 36
+    fl = eng.flush()
+    assert fl is not None and fl.assign.shape == (36,)
+    assert eng.flush() is None               # idempotent
+    eng.reset_stream()
+    assert (eng.n_seen, eng.n_pending, eng.epochs_done) == (0, 0, 0)
+    assert eng.pool is None
+
+
+def test_epoch_of_is_globally_numbered_across_calls():
+    x = _x()
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64)
+    r1 = eng.partial_fit(x[:128])
+    r2 = eng.partial_fit(x[128:256])
+    assert np.array_equal(np.unique(np.asarray(r1.epoch_of)), [0, 1])
+    assert np.array_equal(np.unique(np.asarray(r2.epoch_of)), [2, 3])
+
+
+# -------------------------------------------------------- hypothesis layer
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(cuts=st.lists(st.integers(min_value=1, max_value=255),
+                         min_size=1, max_size=5, unique=True).map(sorted))
+    def test_hypothesis_any_partition_matches_one_shot(cuts):
+        x = _x(256, seed=13)
+        txn = DPMeansTransaction(LAM, k_max=64)
+        one = OCCEngine(txn, pb=32).run(x)
+        eng = OCCEngine(txn, pb=32)
+        z, eo, _ = _stream_all(eng, x, cuts)
+        assert np.array_equal(z, np.asarray(one.assign))
+        assert np.array_equal(eo, np.asarray(one.epoch_of))
+        assert int(eng.pool.count) == int(one.pool.count)
+else:  # pragma: no cover - exercised only without hypothesis
+    def test_hypothesis_layer_skipped():
+        pytest.skip("hypothesis not installed; deterministic sweep still ran")
