@@ -29,7 +29,9 @@ from repro.data import dp_stick_breaking_data
 
 @partial(jax.jit, static_argnames=("cap",))
 def _legacy_epoch(txn, pool, xe, ve, cap):
-    return _epoch_body(txn, pool, xe, ve, (), cap)
+    pool, (ze, se, n_sent, n_acc, _cap) = _epoch_body(
+        txn, pool, xe, ve, (), cap, "serial")
+    return pool, (ze, se, n_sent, n_acc)
 
 
 def _legacy_pass(txn, x, pb):

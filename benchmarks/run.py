@@ -64,12 +64,18 @@ def main(argv=None) -> None:
             repeats=1 if args.quick else (3 if args.fast else 5))
     if want("validator"):
         from benchmarks import validator_scan
+        d = 64 if args.quick else (128 if args.fast else 256)
+        # thresholds scale with the data diameter so the smoke sizes drive
+        # a comparable send/accept mix through every variant (DP + BP +
+        # adaptive + logdepth)
         rows += validator_scan.run(
             n=256 if args.quick else (1024 if args.fast else 2048),
-            d=64 if args.quick else (128 if args.fast else 256),
+            d=d,
             k_max=64 if args.quick else (256 if args.fast else 512),
             pb=64 if args.quick else (256 if args.fast else 512),
             cap=32 if args.quick else (128 if args.fast else 256),
+            lam=16.0 * (d / 256.0) ** 0.5,
+            bp_lam=14.0 * (d / 256.0) ** 0.5,
             repeats=1 if args.quick else 3)
     if want("serve"):
         from benchmarks import cluster_service

@@ -9,12 +9,12 @@ convenience wrappers over the engine.
 """
 from repro.core.occ import (
     CenterPool, OCCStats, ValidatePre, make_pool, nearest_center,
-    nearest_center_with_new, serial_validate, gather_validate,
-    precomputed_validate, precomputed_gather_validate,
+    nearest_center_with_new, serial_validate, precomputed_validate,
+    precomputed_validate_gram, logdepth_validate,
+    precomputed_gather_validate,
 )
 from repro.core.engine import (
     OCCEngine, OCCTransaction, OCCPassResult, resolve_assignments,
-    resolve_validate_mode,
 )
 from repro.core.objective import sq_dists, dp_means_objective, bp_means_objective
 from repro.core.dp_means import (

@@ -1,0 +1,107 @@
+"""Reference validators — tests and benchmark baselines ONLY.
+
+The engine's single validation pipeline is `occ.precomputed_gather_validate`
+(DESIGN.md §11).  This module preserves the pre-refactor legacy path — one
+full D-dimensional recompute per sequential scan step through each
+transaction's `accept` method — as the independent oracle that the fast
+paths are checked against (`tests/test_validator_equivalence.py`) and timed
+against (`benchmarks/validator_scan.py`).  Nothing under `repro.core`
+imports this module; it must never re-enter the engine.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.occ import (
+    CenterPool, OCCStats, _compact_sent, _scatter_back, block_epochs,
+    serial_validate,
+)
+
+__all__ = ["_reference_validate", "reference_pass"]
+
+
+def _reference_validate(
+    pool: CenterPool,
+    send: jnp.ndarray,
+    payload: jnp.ndarray,
+    accept_fn,
+    aux: Any = None,
+    cap: int | None = None,
+):
+    """Legacy bounded-master validation (the pre-§11 `gather_validate`):
+    compact the sent proposals (stable order) to `cap` slots, then run the
+    serial scan with `accept_fn` recomputing every D-dimensional quantity
+    per step.  Same compaction window as the fast path (`_compact_sent` is
+    shared), so verdicts are directly comparable."""
+    b = send.shape[0]
+    if cap is None or cap >= b:
+        pool, slots, outs = serial_validate(pool, send, payload, accept_fn, aux)
+        return pool, slots, outs, jnp.zeros((), bool)
+
+    order, sent_overflow = _compact_sent(send, cap)
+    send_c = send[order]
+    payload_c = payload[order]
+    aux_c = None if aux is None else jax.tree.map(lambda a: a[order], aux)
+    pool, slots_c, outs_c = serial_validate(pool, send_c, payload_c,
+                                            accept_fn, aux_c)
+    slots, outs = _scatter_back(order, b, slots_c, outs_c)
+    return pool, slots, outs, sent_overflow
+
+
+def _reference_epoch(txn, pool, x_e, valid_e, state_e, cap):
+    """One OCC epoch on the legacy path — mirrors `engine._epoch_body` with
+    the validator swapped for the per-step D-dimensional reference."""
+    count0 = pool.count
+    send, payload, aux, safe = txn.propose(pool, x_e, state_e)
+    send = jnp.logical_and(send, valid_e)
+    accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
+    pool, slots, outs, sent_ovf = _reference_validate(
+        pool, send, payload, accept, aux, cap=cap)
+    assign_e = txn.writeback(send, slots, outs, safe, valid_e)
+    pool = pool._replace(overflow=jnp.logical_or(pool.overflow, sent_ovf))
+    n_sent = jnp.sum(send.astype(jnp.int32))
+    n_acc = jnp.sum((slots >= 0).astype(jnp.int32))
+    return pool, assign_e, send, n_sent, n_acc
+
+
+_reference_epoch_jit = jax.jit(_reference_epoch, static_argnames=("cap",))
+
+
+def reference_pass(txn, pool: CenterPool, x: jnp.ndarray, state: Any = None,
+                   *, pb: int, cap: int | None = None):
+    """A whole bulk-synchronous pass on the legacy validator: the Python
+    epoch loop the engine replaced, kept as the end-to-end oracle.  Returns
+    an (pool, assign, send, stats) tuple comparable to `OCCEngine.run`
+    outputs (no bootstrap prefix; epoch partition identical to the
+    engine's)."""
+    if state is None:
+        state = txn.make_state(x, 0)
+    n = x.shape[0]
+    t_epochs = block_epochs(n, pb)
+    assigns, sends, n_sents, n_accs = [], [], [], []
+    for t in range(t_epochs):
+        lo, hi = t * pb, min((t + 1) * pb, n)
+        width = hi - lo
+        x_e = x[lo:hi]
+        state_e = jax.tree.map(lambda s: s[lo:hi], state)
+        if width < pb:     # pad the final short epoch like the engine does
+            padf = lambda a: jnp.concatenate(
+                [a, jnp.zeros((pb - width,) + a.shape[1:], a.dtype)], 0)
+            x_e = padf(x_e)
+            state_e = jax.tree.map(padf, state_e)
+        valid_e = jnp.arange(pb) < width
+        pool, assign_e, send_e, n_sent, n_acc = _reference_epoch_jit(
+            txn, pool, x_e, valid_e, state_e, cap)
+        assigns.append(jax.tree.map(lambda a: a[:width], assign_e))
+        sends.append(send_e[:width])
+        n_sents.append(n_sent)
+        n_accs.append(n_acc)
+    assign = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *assigns)
+    send = jnp.concatenate(sends, 0)
+    cap_eff = pb if cap is None or cap >= pb else cap
+    stats = OCCStats(jnp.stack(n_sents), jnp.stack(n_accs),
+                     jnp.full((t_epochs,), cap_eff, jnp.int32))
+    return pool, assign, send, stats

@@ -27,7 +27,9 @@ import numpy as np
 
 from repro.core.engine import OCCEngine, accumulate_pass_stats
 from repro.core.objective import bp_means_objective
-from repro.core.occ import CenterPool, OCCStats, make_pool, serial_validate
+from repro.core.occ import (
+    CenterPool, OCCStats, ValidatePre, make_pool, serial_validate,
+)
 
 __all__ = ["BPMeansResult", "BPMeansTransaction", "coordinate_pass",
            "serial_bp_means_pass", "serial_bp_means", "occ_bp_means"]
@@ -97,7 +99,9 @@ class BPMeansTransaction:
         pool = make_pool(self.k_max, x.shape[-1], x.dtype)
         if not self.init_mean:
             return pool
-        # Alg. 7 initialization: f_1 = mean(x) (one psum), z_i1 = 1.
+        # Alg. 7 initialization: f_1 = mean(x) (one psum), z_i1 = 1.  The
+        # engine hands this the pass's first Pb block, so batch and
+        # streaming runs seed the same feature (§11 / test_stream_carry).
         centers = pool.centers.at[0].set(jnp.mean(x, axis=0))
         return pool._replace(centers=centers, mask=pool.mask.at[0].set(True),
                              count=jnp.ones((), jnp.int32))
@@ -111,15 +115,26 @@ class BPMeansTransaction:
         resid2 = jnp.sum(r * r, axis=-1)
         return resid2 > self._lam2(x_e.dtype), r, None, z_old
 
-    # No precompute_accept fast path: BPValidate APPENDS THE REFIT RESIDUAL,
-    # not the sent payload — the vector entering the pool depends on which
-    # features were accepted earlier in the scan, so a payload-pairwise
-    # distance matrix cannot cover the distances later steps need (the
-    # ValidatePre premise fails).  BP-means stays on the legacy per-step
-    # refit below; the engine resolves validate_mode="auto" to "legacy".
+    def precompute_accept(self, pool, payload_c, aux_c, count0):
+        # Gram-carry fast path (DESIGN.md §11): BPValidate appends the REFIT
+        # RESIDUAL, not the sent payload — but every feature the refit can
+        # touch is a signed combination of sent payloads, so the payload
+        # Gram matrix G = R Rᵀ covers every dot product the scan needs.
+        # The engine routes this to `occ.precomputed_validate_gram`.
+        return ValidatePre(None, None, None, aux_c,
+                           gram=payload_c @ payload_c.T)
+
+    def accept_pre(self, resid2, aux_j):
+        # Alg. 8 acceptance on the carried refit residual norm².
+        return resid2 > self._lam2(resid2.dtype)
+
     def accept(self, pool, f_new, aux_j, count0):
-        # BPValidate: fit f_new against features accepted *this epoch*
-        # (slots >= count0), accept the residual if still badly represented.
+        # REFERENCE ONLY (core/_reference.py): BPValidate by explicit
+        # D-dimensional refit — fit f_new against features accepted *this
+        # epoch* (slots >= count0), accept the residual if still badly
+        # represented.  The Gram scan is decision-identical to this rule
+        # (tests/test_validator_equivalence.py); its appended residuals
+        # differ only by float reassociation of the same exact algebra.
         k_max = pool.centers.shape[0]
         epoch_mask = jnp.logical_and(pool.mask, jnp.arange(k_max) >= count0)
         zref, r = coordinate_pass(f_new[None, :], jnp.zeros((1, k_max), bool),
@@ -209,17 +224,22 @@ def occ_bp_means(
     max_iters: int = 1,
     init_mean: bool = True,
     bootstrap: bool = False,
+    validate_cap: int | None | str = None,
     mesh: jax.sharding.Mesh | None = None,
     data_axis: str = "data",
 ) -> BPMeansResult:
     """OCC BP-means (Alg. 6) with bulk-synchronous epochs of Pb points —
-    convenience wrapper running `BPMeansTransaction` under `OCCEngine`."""
+    convenience wrapper running `BPMeansTransaction` under `OCCEngine`
+    (Gram-carry validation; `validate_cap` accepts "adaptive" like the
+    other transactions).  `init_mean` seeds f₁ from the first Pb block's
+    mean (the engine's initializer scope), so batch and streaming runs
+    agree."""
     n = x.shape[0]
     txn = BPMeansTransaction(lam, k_max, init_mean)
-    eng = OCCEngine(txn, pb, mesh=mesh, data_axis=data_axis)
+    eng = OCCEngine(txn, pb, validate_cap=validate_cap, mesh=mesh,
+                    data_axis=data_axis)
     nb = min(n, max(1, pb // 16)) if bootstrap else 0
 
-    pool = txn.init_pool(x)
     z = txn.make_state(x)
     send = jnp.zeros((n,), bool)
     epoch_of = jnp.zeros((n,), jnp.int32)
@@ -227,10 +247,11 @@ def occ_bp_means(
     epoch_base = 0
     z_prev = None
     it_done = 0
+    pool = None
     for it in range(1, max_iters + 1):
         it_done = it
         if it == 1:
-            res = eng.run(x, pool=pool, state=z, n_bootstrap=nb)
+            res = eng.run(x, state=z, n_bootstrap=nb)
             z, send, epoch_of = res.assign, res.send, res.epoch_of
         else:
             # Bootstrapped points keep their serial-prefix assignment; later

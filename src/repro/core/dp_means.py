@@ -83,22 +83,25 @@ class DPMeansTransaction:
         # input dtype — so propose and both validator paths round λ² alike.
         return d2 > self._lam2(d2.dtype), x_e, (d2, idx), idx
 
-    def accept(self, pool, x_j, aux_j, count0):
-        # Legacy path: only this epoch's new slots (>= count0) are measured
-        # fresh; the C^{t-1} part comes threaded from propose.
-        d2s_j, idxs_j = aux_j
-        d2, ref = nearest_center_with_new(pool, x_j, d2s_j, idxs_j, count0)
-        return d2 > self._lam2(d2.dtype), x_j, ref
-
     def precompute_accept(self, pool, payload_c, aux_c, count0):
-        # Fast path (DESIGN.md §9): the C^{t-1} distances were already found
-        # by propose (threaded in aux); the only fresh MXU work is the
-        # payload pairwise matrix — after which DPValidate is pure scalar.
+        # Unified validator contract (DESIGN.md §11): the C^{t-1} distances
+        # were already found by propose (threaded in aux); the only fresh
+        # MXU work is the payload pairwise matrix — after which DPValidate
+        # is pure scalar (and, being a monotone threshold rule, eligible
+        # for the log-depth resolution).
         d2s, idxs = aux_c
         return ValidatePre(d2s, idxs, sq_dists(payload_c, payload_c), None)
 
     def accept_pre(self, d2_cur, aux_j):
         return d2_cur > self._lam2(d2_cur.dtype)
+
+    def accept(self, pool, x_j, aux_j, count0):
+        # REFERENCE ONLY (core/_reference.py): per-step recompute in which
+        # only this epoch's new slots (>= count0) are measured fresh; the
+        # C^{t-1} part comes threaded from propose.
+        d2s_j, idxs_j = aux_j
+        d2, ref = nearest_center_with_new(pool, x_j, d2s_j, idxs_j, count0)
+        return d2 > self._lam2(d2.dtype), x_j, ref
 
     def writeback(self, send, slots, outs, safe, valid):
         return resolve_assignments(send, slots, outs, safe, valid)
@@ -181,9 +184,10 @@ def occ_dp_means(
     k_max: int = 256,
     max_iters: int = 1,
     bootstrap: bool = False,
-    validate_cap: int | None = None,
+    validate_cap: int | None | str = None,
     mesh: jax.sharding.Mesh | None = None,
     data_axis: str = "data",
+    scan_mode: str = "serial",
 ) -> DPMeansResult:
     """OCC DP-means (Alg. 3) — convenience wrapper running
     `DPMeansTransaction` under `OCCEngine`.
@@ -193,7 +197,9 @@ def occ_dp_means(
       the product matters algorithmically; the mesh supplies the physical P).
       max_iters: outer while-loop passes (1 = the paper's Fig-3 setting).
       bootstrap: serially pre-process the first pb/16 points (paper §4.2).
-      validate_cap: bounded-master compaction (see occ.gather_validate).
+      validate_cap: bounded-master compaction — an int, None, or "adaptive"
+      for the Thm-3.3-sized window (see OCCEngine; bit-identical results).
+      scan_mode: "serial" | "logdepth" accept resolution (bit-identical).
       mesh: optional device mesh; epoch inputs are sharded over `data_axis`
       and the optimistic phase parallelizes under GSPMD while the validation
       scan executes replicated (SPMD re-execution of the master).
@@ -201,10 +207,9 @@ def occ_dp_means(
     n = x.shape[0]
     txn = DPMeansTransaction(lam, k_max)
     eng = OCCEngine(txn, pb, validate_cap=validate_cap, mesh=mesh,
-                    data_axis=data_axis)
+                    data_axis=data_axis, scan_mode=scan_mode)
     nb = min(n, max(1, pb // 16)) if bootstrap else 0
 
-    pool = txn.init_pool(x)
     z = jnp.full((n,), -1, jnp.int32)
     send = jnp.zeros((n,), bool)
     epoch_of = jnp.zeros((n,), jnp.int32)
@@ -212,10 +217,11 @@ def occ_dp_means(
     epoch_base = 0
     z_prev = None
     it_done = 0
+    pool = None
     for it in range(1, max_iters + 1):
         it_done = it
         if it == 1:
-            res = eng.run(x, pool=pool, n_bootstrap=nb)
+            res = eng.run(x, n_bootstrap=nb)
             z, send, epoch_of = res.assign, res.send, res.epoch_of
         else:
             # Bootstrapped points keep their serial-prefix assignment; later

@@ -5,13 +5,16 @@ BP-means are *one* pattern — optimistic per-point transactions against the
 replicated stale state C^{t-1}, plus a serializing validator.  The
 `OCCTransaction` protocol captures exactly the algorithm-specific pieces:
 
-  init_pool  — allocate the fixed-capacity global state (may use data stats)
+  init_pool  — allocate the fixed-capacity global state (may use data stats;
+               the engine passes the FIRST EPOCH's points, so batch and
+               streaming runs derive identical initializers)
   make_state — per-point auxiliary state for a span of points (e.g. OFL's
                counter-based uniforms, BP-means' previous-pass assignments)
   propose    — the optimistic phase: one batched computation over an epoch's
                points deciding which are sent to the validator
-  accept     — the serial validation rule for one proposal, given the pool
-               *including this epoch's previously accepted proposals*
+  precompute_accept / accept_pre
+             — the validation rule, split into one batched MXU precompute
+               (`occ.ValidatePre`) and a D-free scalar decision (§9/§11)
   writeback  — resolve per-point outputs from the validator's verdicts
   refine     — the bulk-synchronous refinement between passes (mean /
                least-squares re-estimation)
@@ -19,13 +22,25 @@ replicated stale state C^{t-1}, plus a serializing validator.  The
 
 `OCCEngine` owns everything the three hand-rolled drivers used to copy:
 epoch padding and valid-masking, the serial bootstrap prefix (paper §4.2),
-bounded-master validation (`gather_validate`), mesh sharding of epoch
-inputs, and per-epoch statistics.  An entire pass — bootstrap prefix plus
-all T bulk-synchronous epochs — runs as a single `jax.lax.scan` inside ONE
-jit: the legacy drivers dispatched T compiled epochs from Python and forced
-a device→host sync per epoch via `int(n_sent)`; the engine accumulates
+bounded-master validation (`occ.precomputed_gather_validate` — the ONLY
+validator; the legacy per-step D-dimensional path lives on solely as the
+reference oracle in `core/_reference.py`), mesh sharding of epoch inputs,
+and per-epoch statistics.  An entire pass — bootstrap prefix plus all T
+bulk-synchronous epochs — runs as a single `jax.lax.scan` inside ONE jit:
+the legacy drivers dispatched T compiled epochs from Python and forced a
+device→host sync per epoch via `int(n_sent)`; the engine accumulates
 `OCCStats` on device and returns them as arrays from the one compiled call
 (zero per-epoch host transfers, zero per-epoch dispatch overhead).
+
+Adaptive bounded master (DESIGN.md §11): `validate_cap="adaptive"` sizes the
+compaction window from Thm 3.3 — after the bootstrap regime E[#sent per
+epoch] ≈ Pb·ε + ΔK, both observable — instead of paying the full (cap, cap)
+MXU precompute and O(cap²) scan every epoch.  Caps are power-of-two
+bucketed so the jit cache sees a handful of shapes; a pass whose observed
+sends exceed its cap (`stats.proposed > stats.cap`) is deterministically
+re-dispatched at full width before being committed, so adaptive results are
+ALWAYS bit-identical to full-cap results.  The chosen cap is surfaced per
+epoch in `OCCStats.cap`.
 
 Transactions are registered as jax pytrees (scalar hyperparameters and rng
 keys are leaves; shape-determining fields are static aux data), so the
@@ -39,7 +54,10 @@ online/heavy-traffic serving mode (see examples/streaming_clusters.py).
 Batches of ANY length are bit-identical to the one-shot run: the engine
 holds back the trailing `n mod pb` points as an explicit partial-epoch
 carry so the stream's epoch partition matches the one-shot partition
-exactly; `flush()` processes the final short epoch at stream end.
+exactly; `flush()` processes the final short epoch at stream end.  Pool
+initialization is deferred to the first committed epoch and computed from
+its points, so even data-statistic initializers (BP-means `init_mean`) are
+batching-independent.
 
 Train/serve split: the optional `publish=` hook is called with every
 committed pass result, so a `serving.SnapshotStore` can freeze immutable
@@ -52,15 +70,15 @@ from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.occ import (
-    CenterPool, OCCStats, block_epochs, gather_validate,
-    precomputed_gather_validate,
+    CenterPool, OCCStats, ValidatePre, block_epochs, effective_cap,
+    next_pow2, precomputed_gather_validate,
 )
 
 __all__ = ["OCCTransaction", "OCCEngine", "OCCPassResult",
-           "resolve_assignments", "resolve_validate_mode",
-           "accumulate_pass_stats"]
+           "resolve_assignments", "accumulate_pass_stats"]
 
 
 @runtime_checkable
@@ -73,7 +91,11 @@ class OCCTransaction(Protocol):
     """
 
     def init_pool(self, x: jnp.ndarray) -> CenterPool:
-        """Allocate the global state; may use data statistics (BP init_mean)."""
+        """Allocate the global state.  The engine calls this with the pass's
+        first `pb` points (or everything committed when fewer) — the first
+        Pb block, which with a bootstrap prefix spans the prefix plus the
+        start of epoch 0 — so data-statistic initializers (BP-means
+        `init_mean`) see the same points in one-shot and streaming runs."""
         ...
 
     def make_state(self, x: jnp.ndarray, offset: int = 0) -> Any:
@@ -87,36 +109,37 @@ class OCCTransaction(Protocol):
 
         Returns (send (B,) bool, payload (B, D), aux, safe) where `payload`
         is what a sent point proposes (DP/OFL: the point; BP: its residual),
-        `aux` is the per-proposal pytree forwarded to `accept` (or None),
-        and `safe` is the resolved output for points not sent (e.g. the
-        nearest-center index, or BP's fitted assignment row).
+        `aux` is the per-proposal pytree forwarded to the validator (or
+        None), and `safe` is the resolved output for points not sent (e.g.
+        the nearest-center index, or BP's fitted assignment row).
         """
+        ...
+
+    def precompute_accept(self, pool: CenterPool, payload_c: jnp.ndarray,
+                          aux_c: Any, count0: jnp.ndarray) -> ValidatePre:
+        """Batch-compute every D-dimensional quantity validation can need,
+        ONCE on the MXU (REQUIRED — the unified validator contract, §11).
+
+        Payload-append transactions (DP-means, OFL) fill d2_start / idx /
+        pair_d2 — reusing the d2/idx the propose phase already found via
+        `aux_c` rather than recomputing them; Gram-append transactions
+        (BP-means) fill `gram`, the payload inner-product matrix that makes
+        the validator refit pure coefficient algebra."""
+        ...
+
+    def accept_pre(self, d2_cur: jnp.ndarray, aux_j: Any) -> jnp.ndarray:
+        """The D-free accept rule (REQUIRED): given the min squared distance
+        to the current pool (payload scan) or the refit residual norm²
+        (Gram scan), decide acceptance.  Must be an elementwise monotone
+        threshold rule for `scan_mode="logdepth"` to apply (§11)."""
         ...
 
     def accept(self, pool: CenterPool, payload_j: jnp.ndarray, aux_j: Any,
                count0: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, Any]:
-        """Serial validation of one proposal.  `count0` is the pool count at
-        epoch start (BPValidate fits only against this epoch's accepts).
-        Returns (accept bool, vector to append, out_j for writeback).
-
-        This is the legacy / reference path: one D-dimensional computation
-        per sequential scan step.  Transactions whose accepted append vector
-        IS the payload should ALSO implement the optional fast-path pair
-
-          precompute_accept(pool, payload_c, aux_c, count0) -> ValidatePre
-              batch-compute every D-dimensional quantity the validator can
-              need, ONCE on the MXU (see occ.ValidatePre) — reusing the
-              d2/idx the propose phase already found via `aux_c` rather than
-              recomputing them;
-          accept_pre(d2_cur, aux_j) -> bool
-              the scalar accept rule given the min squared distance to the
-              current pool,
-
-        which degrade the serializing scan to O(cap²) scalar work
-        (occ.precomputed_validate).  The engine picks the fast path whenever
-        `precompute_accept` is defined (see `resolve_validate_mode`);
-        BP-means cannot use it — its append vector is the validator-refit
-        residual, not the sent payload — and stays on this path."""
+        """REFERENCE ONLY — the legacy one-proposal-per-step validation rule
+        with full D-dimensional recompute.  The engine never calls it; it
+        defines the oracle semantics for `core/_reference.py` and the
+        serial algorithms."""
         ...
 
     def writeback(self, send, slots, outs, safe, valid) -> Any:
@@ -137,7 +160,7 @@ class OCCPassResult(NamedTuple):
     assign: Any             # (N,) int32 or (N, K_max) bool
     send: jnp.ndarray       # (N,) bool — point hit the validator
     epoch_of: jnp.ndarray   # (N,) int32 — epoch each point was processed in
-    stats: OCCStats         # (T,) proposed / accepted, on device
+    stats: OCCStats         # (T,) proposed / accepted / cap, on device
 
 
 def resolve_assignments(send, slots, outs, safe, valid):
@@ -148,67 +171,61 @@ def resolve_assignments(send, slots, outs, safe, valid):
 
 
 def accumulate_pass_stats(stat_parts: list[OCCStats]) -> OCCStats:
-    """Concatenate per-pass OCCStats into one globally-epoch-numbered pair
+    """Concatenate per-pass OCCStats into one globally-epoch-numbered tuple
     (empty input → empty stats).  Shared by the multi-pass wrappers so
-    every pass's validator load is recorded, not just pass 1's."""
+    every pass's validator load is recorded, not just pass 1's.  `cap`
+    concatenates when every part carries it (engine-produced stats always
+    do) and stays None when any part is a serial placeholder."""
     if not stat_parts:
         z = jnp.zeros((0,), jnp.int32)
-        return OCCStats(z, z)
+        return OCCStats(z, z, z)
+    caps = [s.cap for s in stat_parts]
     return OCCStats(
         jnp.concatenate([s.proposed for s in stat_parts]),
-        jnp.concatenate([s.accepted for s in stat_parts]))
+        jnp.concatenate([s.accepted for s in stat_parts]),
+        None if any(c is None for c in caps) else jnp.concatenate(caps))
 
 
 # Trace counter: incremented only when the pass is (re)compiled.  Lets tests
 # assert the epoch loop lives inside a single compilation unit.
 _PASS_TRACES = 0
 
-
-def resolve_validate_mode(txn, validate_mode: str = "auto") -> str:
-    """Which validator the engine runs for this transaction.
-
-    "auto" resolves to "precomputed" when the transaction defines the
-    `precompute_accept` / `accept_pre` fast-path pair (DP-means, OFL) and to
-    "legacy" otherwise (BP-means); "precomputed" / "legacy" force the path.
-    """
-    has_fast = (callable(getattr(txn, "precompute_accept", None))
-                and callable(getattr(txn, "accept_pre", None)))
-    if validate_mode == "auto":
-        return "precomputed" if has_fast else "legacy"
-    if validate_mode not in ("precomputed", "legacy"):
-        raise ValueError(f"unknown validate_mode {validate_mode!r}")
-    if validate_mode == "precomputed" and not has_fast:
-        raise ValueError(
-            f"{type(txn).__name__} defines no precompute_accept fast path")
-    return validate_mode
+# Adaptive-cap policy constants (DESIGN.md §11): smallest cap ever chosen,
+# safety margin on the Thm-3.3 estimate, and the decay floor that keeps one
+# quiet pass from collapsing the estimate (a retry costs a full re-dispatch).
+ADAPTIVE_CAP_MIN = 8
+ADAPTIVE_CAP_MARGIN = 2
 
 
-def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap,
-                validate_mode: str = "auto", replicate=None):
+def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap, scan_mode,
+                replicate=None):
     """One bulk-synchronous OCC epoch (any width, incl. the width-1 epochs
-    of the serial bootstrap prefix)."""
-    count0 = pool.count
+    of the serial bootstrap prefix) — always on the precomputed validator."""
+    b = valid_e.shape[0]
     send, payload, aux, safe = txn.propose(pool, x_e, state_e)
     send = jnp.logical_and(send, valid_e)
-    if resolve_validate_mode(txn, validate_mode) == "precomputed":
-        pool, slots, outs, sent_ovf = precomputed_gather_validate(
-            pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
-            cap=validate_cap, replicate=replicate)
-    else:
-        accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
-        pool, slots, outs, sent_ovf = gather_validate(
-            pool, send, payload, accept, aux, cap=validate_cap)
+    pool, slots, outs, sent_ovf = precomputed_gather_validate(
+        pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
+        cap=validate_cap, replicate=replicate, scan_mode=scan_mode)
     assign_e = txn.writeback(send, slots, outs, safe, valid_e)
     pool = pool._replace(overflow=jnp.logical_or(pool.overflow, sent_ovf))
     n_sent = jnp.sum(send.astype(jnp.int32))
     n_acc = jnp.sum((slots >= 0).astype(jnp.int32))
-    return pool, (assign_e, send, n_sent, n_acc)
+    return pool, (assign_e, send, n_sent, n_acc,
+                  jnp.asarray(effective_cap(validate_cap, b), jnp.int32))
 
 
-def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
-                 mesh, data_axis, validate_mode="auto"):
+def _engine_pass(txn, pool, x, state, *, pb, cap_warm, cap_rest, n_warm,
+                 n_bootstrap, mesh, data_axis, scan_mode="serial"):
     """The whole pass: bootstrap prefix + T epochs, one `lax.scan` each,
-    inside one jit.  All sizes static; no host round-trips."""
+    inside one jit.  All sizes static; no host round-trips.
+
+    The main epochs split into up to two statically-shaped segments: the
+    first `n_warm` run at `cap_warm` (the bootstrap-regime width — epoch 1
+    of a cold pool sends everything, Thm 3.3's burn-in) and the rest at
+    `cap_rest` (the adaptive Thm-3.3 bound).  Non-adaptive runs pass
+    cap_warm == cap_rest and get the single-segment scan unchanged.
+    """
     global _PASS_TRACES
     _PASS_TRACES += 1
     n, d = x.shape
@@ -223,9 +240,10 @@ def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
         replicate = lambda a: jax.lax.with_sharding_constraint(
             a, occ_validate_sharding(mesh, a.ndim))
 
-    def epoch(pool, inp):
-        return _epoch_body(txn, pool, *inp, validate_cap, validate_mode,
-                           replicate)
+    def epoch_at(cap):
+        def epoch(pool, inp):
+            return _epoch_body(txn, pool, *inp, cap, scan_mode, replicate)
+        return epoch
 
     # Serial bootstrap prefix (paper §4.2): width-1 epochs are exactly the
     # serial algorithm — each point proposes against the fully up-to-date
@@ -235,10 +253,11 @@ def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
         xb = x[:nb][:, None, :]
         vb = jnp.ones((nb, 1), bool)
         sb = jax.tree.map(lambda s: s[:nb][:, None], state)
-        pool, (ab, _, _, _) = jax.lax.scan(epoch, pool, (xb, vb, sb))
+        pool, (ab, _, _, _, _) = jax.lax.scan(epoch_at(cap_warm), pool,
+                                              (xb, vb, sb))
         assign_b = jax.tree.map(lambda a: a.reshape((nb,) + a.shape[2:]), ab)
 
-    # Main epochs: pad to T*pb, reshape to (T, pb, ...), scan.
+    # Main epochs: pad to T*pb, reshape to (T, pb, ...), scan per segment.
     n_rest = n - nb
     t_epochs = block_epochs(n_rest, pb)
     pad = t_epochs * pb - n_rest
@@ -261,7 +280,18 @@ def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
         xs, valid = put(xs), put(valid)
         ss = jax.tree.map(put, ss)
 
-    pool, (am, sm, n_sent, n_acc) = jax.lax.scan(epoch, pool, (xs, valid, ss))
+    t_warm = min(n_warm, t_epochs) if cap_warm != cap_rest else 0
+    seg_parts = []
+    for cap, lo, hi in ((cap_warm, 0, t_warm), (cap_rest, t_warm, t_epochs)):
+        if hi <= lo:
+            continue
+        cut = lambda a: a[lo:hi]
+        pool, part = jax.lax.scan(
+            epoch_at(cap), pool,
+            (cut(xs), cut(valid), jax.tree.map(cut, ss)))
+        seg_parts.append(part)
+    am, sm, n_sent, n_acc, caps = jax.tree.map(
+        lambda *p: jnp.concatenate(p, 0), *seg_parts)
 
     unstack = lambda a: a.reshape((t_epochs * pb,) + a.shape[2:])[:n_rest]
     assign = jax.tree.map(unstack, am)
@@ -275,13 +305,13 @@ def _engine_pass(txn, pool, x, state, *, pb, validate_cap, n_bootstrap,
         jnp.zeros((nb,), jnp.int32),
         jnp.repeat(jnp.arange(t_epochs, dtype=jnp.int32), pb)[:n_rest]])
     return OCCPassResult(pool, assign, send, epoch_of,
-                         OCCStats(proposed=n_sent, accepted=n_acc))
+                         OCCStats(proposed=n_sent, accepted=n_acc, cap=caps))
 
 
 _engine_pass_jit = jax.jit(
     _engine_pass,
-    static_argnames=("pb", "validate_cap", "n_bootstrap", "mesh", "data_axis",
-                     "validate_mode"))
+    static_argnames=("pb", "cap_warm", "cap_rest", "n_warm", "n_bootstrap",
+                     "mesh", "data_axis", "scan_mode"))
 
 
 class OCCEngine:
@@ -291,13 +321,19 @@ class OCCEngine:
       transaction: an `OCCTransaction` (pytree-registered).
       pb: points per epoch (the paper's P*b product — only the product
         matters algorithmically; `mesh` supplies the physical P).
-      validate_cap: bounded-master compaction (see occ.gather_validate);
-        overflow is surfaced on `pool.overflow`.
-      validate_mode: "auto" (default — precomputed fast path when the
-        transaction supports it, see `resolve_validate_mode`), or force
-        "precomputed" / "legacy".  The two paths are bit-identical
-        (tests/test_validator_equivalence.py); legacy is retained as the
-        full-recompute reference implementation.
+      validate_cap: bounded-master compaction (occ.precomputed_gather_
+        validate).  An int fixes the window; None leaves the master
+        unbounded; "adaptive" sizes it per pass from the Thm-3.3 bound
+        (observed Pb·ε + K growth, ×2 margin, power-of-two bucketed) with a
+        full-width first epoch on cold pools and a deterministic full-width
+        retry whenever a pass overflows its window — adaptive results are
+        bit-identical to full-cap results by construction.  Overflow of an
+        int cap is surfaced on `pool.overflow`.
+      scan_mode: "serial" (default) runs the payload accept chain as the
+        sequential scalar scan; "logdepth" resolves it as the parallel
+        fixed point over the precomputed conflict matrix
+        (occ.logdepth_validate) — bit-identical, lower depth.  Gram-append
+        transactions (BP-means) always use the Gram-carry scan.
       mesh / data_axis: optional device mesh; each epoch's points are
         sharded over `data_axis` while the validation scan is replicated.
       publish: optional hook `publish(result, n_seen=..., epochs=...)`
@@ -306,19 +342,28 @@ class OCCEngine:
     """
 
     def __init__(self, transaction: OCCTransaction, pb: int,
-                 validate_cap: int | None = None,
+                 validate_cap: int | None | str = None,
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data",
-                 validate_mode: str = "auto",
+                 scan_mode: str = "serial",
                  publish: Callable[..., Any] | None = None):
         self.txn = transaction
         self.pb = int(pb)
-        self.validate_cap = validate_cap
+        if isinstance(validate_cap, str) and validate_cap != "adaptive":
+            raise ValueError(f"unknown validate_cap {validate_cap!r}")
+        if scan_mode not in ("serial", "logdepth"):
+            raise ValueError(f"unknown scan_mode {scan_mode!r}")
+        self.adaptive = validate_cap == "adaptive"
+        self.validate_cap = None if self.adaptive else validate_cap
         self.mesh = mesh
         self.data_axis = data_axis
-        self.validate_mode = resolve_validate_mode(transaction, validate_mode)
+        self.scan_mode = scan_mode
         self.publish = publish
         self.n_dispatches = 0       # compiled-pass invocations (1 per pass)
+        # adaptive-cap observability
+        self._cap_est: int | None = None    # None → full width
+        self.cap_history: list[int | None] = []   # cap chosen per pass
+        self.n_cap_retries = 0
         # streaming state
         self._pool: CenterPool | None = None
         self._n_seen = 0
@@ -328,21 +373,78 @@ class OCCEngine:
         self._carry_state: Any = None
         self._empty_templates: dict[Any, OCCPassResult] = {}
 
+    # ---------------------------------------------------------- adaptive cap
+    def _plan_caps(self, cold: bool) -> tuple[int | None, int | None, int]:
+        """(cap_warm, cap_rest, n_warm) for the next dispatched pass."""
+        if not self.adaptive:
+            return self.validate_cap, self.validate_cap, 0
+        rest = self._cap_est
+        if rest is None or rest >= self.pb:
+            return None, None, 0
+        # Cold pool → the first main epoch sends ~everything (Thm 3.3
+        # burn-in): keep it full-width, shrink from epoch 2 on.
+        return (None, rest, 1) if cold else (rest, rest, 0)
+
+    def _observe_stats(self, stats: OCCStats, cold: bool) -> None:
+        """Fold a committed pass's observed load into the Thm-3.3 estimate:
+        cap ≈ pow2(2 · (Pb·ε̂ + ΔK̂)) with ε̂, ΔK̂ the post-burn-in per-epoch
+        sent rate / pool growth."""
+        if not self.adaptive:
+            return
+        sent = np.asarray(stats.proposed)
+        acc = np.asarray(stats.accepted)
+        if cold:                       # drop the burn-in epoch's full flood
+            sent, acc = sent[1:], acc[1:]
+        if sent.size == 0:
+            return
+        bound = ADAPTIVE_CAP_MARGIN * (int(sent.max()) + int(acc.max()))
+        est = next_pow2(max(ADAPTIVE_CAP_MIN, bound))
+        if self._cap_est is not None:      # decay floor: halve at most
+            est = max(est, self._cap_est // 2)
+        self._cap_est = None if est >= self.pb else est
+
+    def _dispatch(self, pool, x, state, *, n_bootstrap: int, cold: bool,
+                  mesh) -> OCCPassResult:
+        """One compiled pass, with the adaptive overflow retry: a pass whose
+        observed sends exceed its window is re-dispatched at full width
+        (deterministic — same inputs), so committed adaptive results are
+        always bit-identical to full-cap results."""
+        cap_warm, cap_rest, n_warm = self._plan_caps(cold)
+        res = _engine_pass_jit(
+            self.txn, pool, x, state, pb=self.pb, cap_warm=cap_warm,
+            cap_rest=cap_rest, n_warm=n_warm, n_bootstrap=n_bootstrap,
+            mesh=mesh, data_axis=self.data_axis, scan_mode=self.scan_mode)
+        self.n_dispatches += 1
+        self.cap_history.append(cap_rest)
+        if self.adaptive and cap_rest is not None:
+            if np.any(np.asarray(res.stats.proposed)
+                      > np.asarray(res.stats.cap)):
+                self.n_cap_retries += 1
+                self._cap_est = None       # estimate was wrong: reset wide
+                self.cap_history[-1] = None   # committed pass ran full-width
+                res = _engine_pass_jit(
+                    self.txn, pool, x, state, pb=self.pb, cap_warm=None,
+                    cap_rest=None, n_warm=0, n_bootstrap=n_bootstrap,
+                    mesh=mesh, data_axis=self.data_axis,
+                    scan_mode=self.scan_mode)
+                self.n_dispatches += 1
+        self._observe_stats(res.stats, cold)
+        return res
+
     # ------------------------------------------------------------- batch
     def run(self, x: jnp.ndarray, *, pool: CenterPool | None = None,
             state: Any = None, n_bootstrap: int = 0) -> OCCPassResult:
         """One full pass over x as a single compiled call."""
+        cold = pool is None
         if pool is None:
-            pool = self.txn.init_pool(x)
+            # Initializer scope = the first Pb block: identical for one-shot
+            # and streaming runs (and permutation-free: the data prefix).
+            pool = self.txn.init_pool(x[:min(self.pb, x.shape[0])])
         if state is None:
             state = self.txn.make_state(x, 0)
-        res = _engine_pass_jit(
-            self.txn, pool, x, state, pb=self.pb,
-            validate_cap=self.validate_cap,
-            n_bootstrap=min(int(n_bootstrap), x.shape[0]),
-            mesh=self.mesh, data_axis=self.data_axis,
-            validate_mode=self.validate_mode)
-        self.n_dispatches += 1
+        res = self._dispatch(pool, x, state,
+                             n_bootstrap=min(int(n_bootstrap), x.shape[0]),
+                             cold=cold, mesh=self.mesh)
         if self.publish is not None:
             self.publish(res, n_seen=x.shape[0],
                          epochs=res.stats.proposed.shape[0])
@@ -354,7 +456,9 @@ class OCCEngine:
     # --------------------------------------------------------- streaming
     @property
     def pool(self) -> CenterPool | None:
-        """Current streaming pool (None before the first partial_fit)."""
+        """Current streaming pool (None before the first committed epoch —
+        initialization is deferred so data-statistic initializers see the
+        first EPOCH, not the first arriving batch)."""
         return self._pool
 
     @property
@@ -385,12 +489,9 @@ class OCCEngine:
         reads stay O(1) and the retained list never grows unboundedly."""
         if not self._stat_chunks:
             z = jnp.zeros((0,), jnp.int32)
-            return OCCStats(z, z)
+            return OCCStats(z, z, z)
         if len(self._stat_chunks) > 1:
-            merged = OCCStats(
-                jnp.concatenate([s.proposed for s in self._stat_chunks]),
-                jnp.concatenate([s.accepted for s in self._stat_chunks]))
-            self._stat_chunks = [merged]
+            self._stat_chunks = [accumulate_pass_stats(self._stat_chunks)]
         return self._stat_chunks[0]
 
     def reset_stream(self) -> None:
@@ -407,42 +508,56 @@ class OCCEngine:
         tracing of the pass on the carried points — no compute, no dispatch
         — and cached per point shape/dtype: fine-grained streams (arrival
         in sub-pb batches) must not pay a Python re-trace per carry-only
-        call.
+        call.  Before the first commit (no pool yet) the result carries an
+        all-zeros pool of the right shape: nothing is in the pool, and the
+        initializer must not run until its epoch's points are known.
         """
         key = (x1.shape[1:], str(x1.dtype))
         cached = self._empty_templates.get(key)
         if cached is not None:
-            return cached._replace(pool=self._pool)
+            pool = self._pool if self._pool is not None else cached.pool
+            return cached._replace(pool=pool)
         global _PASS_TRACES
         traces = _PASS_TRACES          # eval_shape traces without compiling;
         try:                           # don't count it as a compilation
+            pool_sd = jax.eval_shape(self.txn.init_pool, x1)
+            zero_pool = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                     pool_sd)
             sd = jax.eval_shape(
                 lambda p, x, s: _engine_pass(
                     self.txn, p, x, s, pb=self.pb,
-                    validate_cap=self.validate_cap, n_bootstrap=0,
-                    mesh=None, data_axis=self.data_axis,
-                    validate_mode=self.validate_mode),
-                self._pool, x1, s1)
+                    cap_warm=self.validate_cap, cap_rest=self.validate_cap,
+                    n_warm=0, n_bootstrap=0, mesh=None,
+                    data_axis=self.data_axis, scan_mode=self.scan_mode),
+                zero_pool, x1, s1)
         finally:
             _PASS_TRACES = traces
         empty = lambda s: jnp.zeros((0,) + s.shape[1:], s.dtype)
+        # Cache with the NEUTRAL zero pool (a template must not capture the
+        # live stream's state — reset_stream would otherwise leak the old
+        # pool into a fresh stream's pre-commit results); the caller's
+        # current pool is substituted at return time above.
         res = OCCPassResult(
-            self._pool, jax.tree.map(empty, sd.assign), empty(sd.send),
+            zero_pool, jax.tree.map(empty, sd.assign), empty(sd.send),
             empty(sd.epoch_of),
-            OCCStats(empty(sd.stats.proposed), empty(sd.stats.accepted)))
+            OCCStats(empty(sd.stats.proposed), empty(sd.stats.accepted),
+                     empty(sd.stats.cap)))
         self._empty_templates[key] = res
+        if self._pool is not None:
+            return res._replace(pool=self._pool)
         return res
 
     def _commit_stream_pass(self, xb: jnp.ndarray, state: Any) -> OCCPassResult:
         """Run one compiled pass over pb-aligned (or final-flush) points and
         fold it into the stream: pool, stats, global epoch numbering,
-        publication."""
-        res = _engine_pass_jit(
-            self.txn, self._pool, xb, state, pb=self.pb,
-            validate_cap=self.validate_cap, n_bootstrap=0,
-            mesh=self.mesh, data_axis=self.data_axis,
-            validate_mode=self.validate_mode)
-        self.n_dispatches += 1
+        publication.  The first commit initializes the pool from ITS first
+        epoch's points — the same points the one-shot run's initializer
+        sees, so streams are bit-identical even for data-statistic inits."""
+        cold = self._pool is None
+        if cold:
+            self._pool = self.txn.init_pool(xb[:min(self.pb, xb.shape[0])])
+        res = self._dispatch(self._pool, xb, state, n_bootstrap=0,
+                             cold=cold, mesh=self.mesh)
         self._pool = res.pool
         self._stat_chunks.append(res.stats)
         if len(self._stat_chunks) >= 64:
@@ -476,19 +591,17 @@ class OCCEngine:
         across the stream.  A call that only grows the carry returns a
         zero-point result with the pool unchanged.
 
-        `pool` (first call only) seeds the stream with an explicit initial
-        pool — e.g. BP-means' mean-initialized pool computed over data the
-        stream's first batch hasn't seen.  Without it the pool initializes
-        from the first batch, which for transactions whose `init_pool` uses
-        data statistics is the one (documented) way a stream can differ
-        from the one-shot run.
+        Pool initialization is deferred to the first committed epoch and
+        computed from its points — exactly the points the one-shot run's
+        initializer sees — so even data-statistic initializers (BP-means
+        `init_mean`) are batching-independent.  `pool` (first call only)
+        still seeds the stream with an explicit initial pool, e.g. a warm
+        model restored from a snapshot.
         """
         if pool is not None:
             if self._pool is not None:
                 raise ValueError("pool= only seeds the FIRST partial_fit")
             self._pool = pool
-        if self._pool is None:
-            self._pool = self.txn.init_pool(xb)
         if state is None:
             state = self.txn.make_state(xb, self._n_seen)
         self._n_seen += xb.shape[0]

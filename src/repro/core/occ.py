@@ -13,11 +13,17 @@ order of Thm 3.1); validation is a deterministic `lax.scan` in global index
 order, executed replicated on every device (SPMD re-execution of the
 "master") or gathered to a single device (classic mode).
 
-Two validator implementations share those serial semantics (DESIGN.md §9):
-`serial_validate` / `gather_validate` — the legacy reference, one
-D-dimensional recompute per sequential step — and `precomputed_validate` /
-`precomputed_gather_validate`, which batch every D-dimensional quantity
-into one MXU precompute (`ValidatePre`) and scan over pure scalars.
+The precomputed fast path is the ONLY engine validator (DESIGN.md §9/§11):
+`precomputed_gather_validate` batches every D-dimensional quantity into one
+MXU precompute (`ValidatePre`) and then runs a D-free serializing scan —
+the payload scan (`precomputed_validate`, DP-means/OFL), its log-depth
+formulation (`logdepth_validate`, `scan_mode="logdepth"`), or the
+Gram-carry scan (`precomputed_validate_gram`, BP-means).  The legacy
+per-step D-dimensional recompute survives only as a reference
+implementation in `core/_reference.py` (tests + benchmark baselines);
+`serial_validate` below remains as the vehicle for the paper's *serial*
+algorithms (Alg. 1/7 and Meyerson's OFL), which are definitions, not an
+engine path.
 
 The global center/feature set C grows over time; JAX needs static shapes, so
 C lives in a fixed-capacity masked buffer (`CenterPool`). Overflow is
@@ -37,10 +43,22 @@ from repro.kernels import ops as _kops
 
 __all__ = [
     "CenterPool", "make_pool", "pool_append_serial", "block_epochs",
-    "serial_validate", "nearest_center", "nearest_center_with_new",
-    "OCCStats", "ValidatePre", "precomputed_validate",
-    "precomputed_gather_validate",
+    "next_pow2", "serial_validate", "nearest_center",
+    "nearest_center_with_new", "OCCStats", "ValidatePre",
+    "precomputed_validate", "precomputed_validate_gram",
+    "logdepth_validate", "precomputed_gather_validate",
 ]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1).  The shared bucketing
+    primitive: the engine's adaptive validator cap and the serving plane's
+    capacity/request buckets (serving/snapshot.next_bucket) both quantize
+    through this, so jit caches key on a handful of shapes."""
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
 
 
 class CenterPool(NamedTuple):
@@ -52,9 +70,18 @@ class CenterPool(NamedTuple):
 
 
 class OCCStats(NamedTuple):
-    """Per-epoch bookkeeping used by the Fig-3 / Thm-3.3 experiments."""
+    """Per-epoch bookkeeping used by the Fig-3 / Thm-3.3 experiments.
+
+    `cap` records the bounded-master compaction width each epoch actually
+    ran with (the epoch width when the master was unbounded) — the
+    observability surface for the Thm-3.3 adaptive cap (DESIGN.md §11):
+    `proposed[t] > cap[t]` is exactly the sent-overflow condition the
+    engine's adaptive mode retries on.  Serial algorithms construct their
+    placeholder stats with `cap=None`.
+    """
     proposed: jnp.ndarray  # (T,) number of points sent to the validator
     accepted: jnp.ndarray  # (T,) number of proposals accepted as new centers
+    cap: jnp.ndarray | None = None  # (T,) int32 validator cap per epoch
 
 
 def make_pool(k_max: int, dim: int, dtype=jnp.float32) -> CenterPool:
@@ -171,6 +198,14 @@ def serial_validate(
     return pool, slots, outs
 
 
+def effective_cap(cap: int | None, b: int) -> int:
+    """The bounded master's actual compaction width for a width-b epoch —
+    THE single definition: `precomputed_gather_validate` compacts to it and
+    the engine records it in `OCCStats.cap`, so the adaptive overflow check
+    (`proposed > cap`) is exact by construction, not by parallel copies."""
+    return b if cap is None or cap >= b else cap
+
+
 def _compact_sent(send: jnp.ndarray, cap: int):
     """Bounded-master compaction: stable indices of the first `cap` sent
     proposals (ascending global order) + the sent_overflow flag.  Shared by
@@ -192,47 +227,25 @@ def _scatter_back(order: jnp.ndarray, b: int, slots_c: jnp.ndarray, outs_c):
     return slots, outs
 
 
-def gather_validate(
-    pool: CenterPool,
-    send: jnp.ndarray,
-    payload: jnp.ndarray,
-    accept_fn,
-    aux: Any = None,
-    cap: int | None = None,
-):
-    """Bounded-master variant: compact the sent proposals (stable order) to a
-    fixed-size buffer of `cap` slots before the serial scan.
-
-    This keeps the sequential scan O(cap) instead of O(Pb) — the production
-    analogue of the paper's master only *seeing* the sent points.  Thm 3.3
-    bounds E[#sent] by Pb + K_N so cap ~ Pb is safe after epoch 1; overflow
-    is surfaced via the returned flag.
-    """
-    b = send.shape[0]
-    if cap is None or cap >= b:
-        pool, slots, outs = serial_validate(pool, send, payload, accept_fn, aux)
-        return pool, slots, outs, jnp.zeros((), bool)
-
-    order, sent_overflow = _compact_sent(send, cap)
-    send_c = send[order]
-    payload_c = payload[order]
-    aux_c = None if aux is None else jax.tree.map(lambda a: a[order], aux)
-    pool, slots_c, outs_c = serial_validate(pool, send_c, payload_c, accept_fn, aux_c)
-    slots, outs = _scatter_back(order, b, slots_c, outs_c)
-    return pool, slots, outs, sent_overflow
-
-
 # ---------------------------------------------------------------------------
-# Precomputed (D-free) validation — DESIGN.md §9
+# Precomputed (D-free) validation — DESIGN.md §9/§11
 # ---------------------------------------------------------------------------
 
 class ValidatePre(NamedTuple):
     """Everything D-dimensional the fast validator needs, batched on the MXU.
 
-    Covers transactions whose accepted append vector IS the payload (DP-means,
-    OFL): a new center can only come from the sent set, so every distance the
-    serial scan will ever consult is either payload→C^{t-1} (computed once in
-    propose and threaded through `aux`) or payload→payload (`pair_d2`).
+    Payload-append transactions (DP-means, OFL — the accepted append vector
+    IS the payload): a new center can only come from the sent set, so every
+    distance the serial scan will ever consult is either payload→C^{t-1}
+    (computed once in propose and threaded through `aux`) or
+    payload→payload (`pair_d2`); `gram` stays None.
+
+    Gram-append transactions (BP-means — the accepted append vector is the
+    validator-refit *residual*): every vector the refit can ever touch is a
+    signed combination of sent payloads, so all refit dot products reduce
+    to the payload Gram matrix `gram[i, j] = r_i · r_j` and validation
+    becomes pure coefficient algebra (`precomputed_validate_gram`);
+    d2_start / idx_start / pair_d2 stay None.
 
     d2_start:  (cap,)  min squared distance to the epoch-start centers.
     idx_start: (cap,)  int32 — that center's slot, -1 when the pool is empty.
@@ -240,11 +253,14 @@ class ValidatePre(NamedTuple):
                consulted against proposals appended before j.
     aux:       per-proposal decision scalars (leading dim cap; e.g. OFL's
                uniforms), or None when the rule needs only d2.
+    gram:      (cap, cap)  payload inner products r_i · r_j (BP-means), or
+               None for payload-append transactions.
     """
-    d2_start: jnp.ndarray
-    idx_start: jnp.ndarray
-    pair_d2: jnp.ndarray
+    d2_start: jnp.ndarray | None
+    idx_start: jnp.ndarray | None
+    pair_d2: jnp.ndarray | None
     aux: Any
+    gram: jnp.ndarray | None = None
 
 
 def precomputed_validate(
@@ -309,6 +325,190 @@ def precomputed_validate(
     return CenterPool(centers, mask, count, overflow), slots_c, refs_c
 
 
+def logdepth_validate(
+    pool: CenterPool,
+    send_c: jnp.ndarray,
+    payload_c: jnp.ndarray,
+    pre: ValidatePre,
+    decide_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
+) -> tuple[CenterPool, jnp.ndarray, jnp.ndarray]:
+    """`precomputed_validate` with the sequential accept chain replaced by a
+    log-depth parallel resolution (DESIGN.md §11) — bit-identical verdicts.
+
+    Key algebra: for a monotone threshold rule, accepting is intersective —
+    decide(min(a, b), aux) == decide(a, aux) AND decide(b, aux) holds
+    *exactly* in floats (min never rounds; DP's `d2 > λ²` and OFL's
+    `u < min(1, d2/λ²)` are both monotone, and x ↦ min(1, x/λ²) commutes
+    with min elementwise).  The serial recurrence therefore collapses to
+
+        accept_j = base_j ∧ ∀ accepted i<j : surv[i, j]
+
+    with base = decide(d2_start) ∧ send and surv[i, j] = decide(pair_d2[i,
+    j], aux_j) — the lexicographically-first independent set of the `¬surv`
+    conflict digraph.  It is resolved as a Kleene fixed point of
+    boolean-semiring matvecs: each round accepts every still-alive proposal
+    with no alive earlier killer and retires its victims, so the round
+    count is the conflict graph's greedy chain depth — O(log cap) in the
+    paper's low-conflict regime (Thm 3.3), never more than cap — while
+    every round is parallel O(cap²) bit work on the precomputed matrix.
+    Slots then come from one `associative_scan` prefix sum and refs from
+    one masked column-min, both exact.
+
+    Pool-capacity overflow makes acceptance rank-dependent (an accepted
+    proposal that does not fit is appended nowhere and kills nobody), so
+    that rare epoch falls back to the serial scan under `lax.cond` —
+    verdicts stay bit-identical there too.
+    """
+    cap = send_c.shape[0]
+    k_max = pool.centers.shape[0]
+    count0 = pool.count
+    aux = pre.aux
+    if aux is None:
+        aux = jnp.zeros((cap,), jnp.int32)
+    aux_row = jax.tree.map(lambda a: a[None, ...], aux)   # broadcast over i
+
+    base = jnp.logical_and(decide_fn(pre.d2_start, aux), send_c)
+    # surv[i, j]: would j still accept with i's payload in the pool?
+    surv = decide_fn(pre.pair_d2, aux_row)
+    tri = jnp.arange(cap)[:, None] < jnp.arange(cap)[None, :]
+    kill = jnp.logical_and(~surv, tri)
+
+    def round_(state):
+        alive, accepted = state
+        blocked = jnp.any(jnp.logical_and(kill, alive[:, None]), axis=0)
+        newly = jnp.logical_and(alive, ~blocked)
+        accepted = jnp.logical_or(accepted, newly)
+        victims = jnp.any(jnp.logical_and(kill, newly[:, None]), axis=0)
+        alive = jnp.logical_and(alive, ~jnp.logical_or(newly, victims))
+        return alive, accepted
+
+    _, accepted = jax.lax.while_loop(
+        lambda s: jnp.any(s[0]), round_,
+        (base, jnp.zeros((cap,), bool)))
+
+    def finish():
+        rank = jax.lax.associative_scan(jnp.add, accepted.astype(jnp.int32))
+        slots_c = jnp.where(accepted, count0 + rank - 1, -1)
+        # refs: min over the FINAL accepted prefix — same value set (and the
+        # same lowest-index tie-break) the serial chain of minimums sees.
+        d2_new = jnp.where(jnp.logical_and(accepted[:, None], tri),
+                           pre.pair_d2, jnp.inf)
+        best_new = jnp.min(d2_new, axis=0)
+        arg_new = jnp.argmin(d2_new, axis=0)
+        use_new = best_new < pre.d2_start
+        refs_c = jnp.where(use_new, slots_c[arg_new], pre.idx_start)
+        widx = jnp.where(slots_c >= 0, slots_c, k_max)
+        centers = pool.centers.at[widx].set(
+            payload_c.astype(pool.centers.dtype), mode="drop")
+        mask = pool.mask.at[widx].set(True, mode="drop")
+        new_pool = CenterPool(centers, mask, count0 + rank[-1], pool.overflow)
+        return new_pool, slots_c, refs_c
+
+    n_acc = jnp.sum(accepted.astype(jnp.int32))
+    return jax.lax.cond(
+        count0 + n_acc > k_max,
+        lambda: precomputed_validate(pool, send_c, payload_c, pre, decide_fn),
+        finish)
+
+
+def precomputed_validate_gram(
+    pool: CenterPool,
+    send_c: jnp.ndarray,            # (cap,) bool — compacted proposal flags
+    payload_c: jnp.ndarray,         # (cap, D) — compacted payload residuals
+    pre: ValidatePre,
+    decide_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
+) -> tuple[CenterPool, jnp.ndarray, jnp.ndarray]:
+    """The BP-means serializing scan with ZERO D-dimensional work per step
+    (DESIGN.md §11) — the Gram-carry fast path.
+
+    BPValidate (Alg. 8) re-fits each proposed residual r_j against the
+    features accepted *earlier this epoch* and appends what remains.  Every
+    such feature is a signed combination of sent payloads (by induction:
+    f_m = r_{k_m} - Σ z f_l), so the scan carries each accepted feature's
+    coefficient row c_m over payloads and derives every refit dot product
+    from the precomputed payload Gram matrix G = R Rᵀ (`pre.gram`):
+
+        r · f_m   = (G a) · c_m      with a the running residual's coeffs,
+        ‖f_m‖²    = the residual norm² carried from m's own acceptance,
+        ‖r - f‖²  = ‖r‖² - 2 r·f + ‖f‖².
+
+    Each inner refit step is O(cap) vector algebra (one dot, two subtracts)
+    and runs only `n_acc` times per proposal (`fori_loop` to the number of
+    features accepted so far — sequential work tracks the Thm-3.3 conflict
+    rate, not the cap), vs the reference's O(K_max · D) coordinate pass per
+    step with a (K_max, D) pool carry.  Accepted residuals are materialised
+    afterwards in ONE (cap, cap) @ (cap, D) MXU matmul.
+
+    Returns (pool', slots_c (cap,) int32, z_c (cap, K_max) bool — each
+    proposal's fit against this epoch's accepted features, scattered to
+    pool slots; epoch-new slots are contiguous from count0 by construction).
+    The coefficient algebra is exact in real arithmetic but reassociates
+    float sums, so vs the D-dimensional reference the contract is
+    bit-identical *decisions* (tests/test_validator_equivalence.py) and
+    ulp-level centers.
+    """
+    cap = send_c.shape[0]
+    k_max = pool.centers.shape[0]
+    count0 = pool.count
+    gram = pre.gram
+    aux = pre.aux
+    if aux is None:
+        aux = jnp.zeros((cap,), jnp.int32)
+
+    def step(carry, inp):
+        # The pool count is count0 + nacc invariantly (only this scan
+        # appends within the epoch), so nacc is the one counter carried.
+        coef, gcoef, fnorm2, nacc, overflow = carry
+        j, send_j, g_row, aux_j = inp
+
+        def fit(m, st):
+            a, u, rn2, z = st
+            c_m = coef[m]
+            dot = jnp.dot(u, c_m)
+            z_m = 2.0 * dot > fnorm2[m]
+            a = jnp.where(z_m, a - c_m, a)
+            u = jnp.where(z_m, u - gcoef[m], u)
+            rn2 = jnp.where(z_m, rn2 - 2.0 * dot + fnorm2[m], rn2)
+            return a, u, rn2, z.at[m].set(z_m)
+
+        a0 = (jnp.arange(cap) == j).astype(gram.dtype)
+        a, u, rn2, z_j = jax.lax.fori_loop(
+            0, nacc, fit, (a0, g_row, g_row[j], jnp.zeros((cap,), bool)))
+
+        acc = jnp.logical_and(decide_fn(rn2, aux_j), send_j)
+        fits = count0 + nacc < k_max
+        app = jnp.logical_and(acc, fits)
+        slot = jnp.where(app, count0 + nacc, -1)
+        # Row writes go to an out-of-range index when not appending, so the
+        # scatter drops instead of selecting between two full (cap, cap)
+        # buffers — keeps the carry update O(cap) per step, not O(cap²).
+        row = jnp.where(app, nacc, cap)
+        coef = coef.at[row].set(a, mode="drop")
+        gcoef = gcoef.at[row].set(u, mode="drop")  # u == G a: new G-row
+        fnorm2 = fnorm2.at[row].set(rn2, mode="drop")
+        nacc = nacc + app.astype(jnp.int32)
+        overflow = jnp.logical_or(overflow, jnp.logical_and(acc, ~fits))
+        return (coef, gcoef, fnorm2, nacc, overflow), (slot, z_j)
+
+    z0 = jnp.zeros((cap, cap), gram.dtype)
+    init = (z0, z0, jnp.zeros((cap,), gram.dtype),
+            jnp.zeros((), jnp.int32), pool.overflow)
+    (coef, _, _, nacc, overflow), (slots_c, z_mat) = jax.lax.scan(
+        step, init, (jnp.arange(cap), send_c, gram, aux))
+
+    # Epoch-new features occupy contiguous slots [count0, count0 + nacc):
+    # scatter the acceptance-ordered fit bits / residual rows to pool slots.
+    new_slots = count0 + jnp.arange(cap)
+    z_c = jnp.zeros((cap, k_max), bool).at[:, new_slots].set(
+        z_mat, mode="drop")
+    feats = coef @ payload_c                    # ONE MXU materialisation
+    widx = jnp.where(jnp.arange(cap) < nacc, new_slots, k_max)
+    centers = pool.centers.at[widx].set(
+        feats.astype(pool.centers.dtype), mode="drop")
+    mask = pool.mask.at[widx].set(True, mode="drop")
+    return CenterPool(centers, mask, count0 + nacc, overflow), slots_c, z_c
+
+
 def precomputed_gather_validate(
     pool: CenterPool,
     send: jnp.ndarray,
@@ -318,18 +518,27 @@ def precomputed_gather_validate(
     decide_fn: Callable[[jnp.ndarray, Any], jnp.ndarray],
     cap: int | None = None,
     replicate: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+    scan_mode: str = "serial",
 ):
-    """Bounded-master validation on the precomputed fast path.
+    """Bounded-master validation — THE engine validator (DESIGN.md §9/§11).
 
-    Compacts the sent proposals (stable order, as `gather_validate`), runs
-    `precompute_fn(pool, payload_c, aux_c, count0)` ONCE on the MXU, then the
-    D-free scalar scan, then scatters verdicts back to the full index space.
-    `replicate` (optional) constrains the compacted buffers to the master's
-    replicated sharding before the scan (see shardings.occ_validate_sharding).
+    Compacts the sent proposals (stable order == global index order), runs
+    `precompute_fn(pool, payload_c, aux_c, count0)` ONCE on the MXU, then a
+    D-free serializing resolution, then scatters verdicts back to the full
+    index space.  The resolution is picked from the ValidatePre contents
+    and `scan_mode`: `pre.gram` set → the BP-means Gram-carry scan;
+    otherwise the payload scalar scan (`scan_mode="serial"`) or its
+    log-depth fixed-point formulation (`scan_mode="logdepth"`).
+
+    `replicate` (optional) constrains the compacted buffers — inputs AND
+    every precomputed (cap, …) ValidatePre leaf — to the master's
+    replicated sharding before the scan, so GSPMD gathers once at
+    compaction instead of resharding mid-scan, at whatever cap the epoch
+    runs with (see shardings.occ_validate_sharding).
     """
     b = send.shape[0]
     count0 = pool.count
-    cap_c = b if cap is None or cap >= b else cap
+    cap_c = effective_cap(cap, b)
     order, sent_overflow = _compact_sent(send, cap_c)
     send_c = send[order]
     payload_c = payload[order]
@@ -338,7 +547,16 @@ def precomputed_gather_validate(
         send_c, payload_c = replicate(send_c), replicate(payload_c)
         aux_c = None if aux_c is None else jax.tree.map(replicate, aux_c)
     pre = precompute_fn(pool, payload_c, aux_c, count0)
-    pool, slots_c, refs_c = precomputed_validate(
-        pool, send_c, payload_c, pre, decide_fn)
+    if replicate is not None:
+        pre = jax.tree.map(replicate, pre)
+    if pre.gram is not None:
+        validate = precomputed_validate_gram
+    elif scan_mode == "logdepth":
+        validate = logdepth_validate
+    elif scan_mode == "serial":
+        validate = precomputed_validate
+    else:
+        raise ValueError(f"unknown scan_mode {scan_mode!r}")
+    pool, slots_c, refs_c = validate(pool, send_c, payload_c, pre, decide_fn)
     slots, outs = _scatter_back(order, b, slots_c, refs_c)
     return pool, slots, outs, sent_overflow

@@ -107,23 +107,26 @@ class OFLTransaction:
         # can reuse the C^{t-1} distances instead of recomputing them.
         return u_e < p_send, x_e, (u_e, d2, idx), idx
 
-    def accept(self, pool, x_j, aux_j, count0):
-        # Legacy path: accept iff u < min(1, d*²/λ²) with d* over the
-        # current pool — only the new slots are measured fresh (App. B.3).
-        u_j, d2s_j, idxs_j = aux_j
-        d2, ref = nearest_center_with_new(pool, x_j, d2s_j, idxs_j, count0)
-        p = jnp.minimum(1.0, d2 / self._lam2(d2.dtype))
-        return u_j < p, x_j, ref
-
     def precompute_accept(self, pool, payload_c, aux_c, count0):
-        # Fast path (DESIGN.md §9): one payload pairwise matrix on the MXU;
-        # the per-step rule then needs only the point's own uniform.
+        # Unified validator contract (DESIGN.md §11): one payload pairwise
+        # matrix on the MXU; the per-step rule then needs only the point's
+        # own uniform — a monotone threshold in d², so the log-depth
+        # resolution applies (u < min(1, ·/λ²) commutes with min exactly).
         u, d2s, idxs = aux_c
         return ValidatePre(d2s, idxs, sq_dists(payload_c, payload_c), u)
 
     def accept_pre(self, d2_cur, u_j):
         p = jnp.minimum(1.0, d2_cur / self._lam2(d2_cur.dtype))
         return u_j < p
+
+    def accept(self, pool, x_j, aux_j, count0):
+        # REFERENCE ONLY (core/_reference.py): accept iff u < min(1, d*²/λ²)
+        # with d* over the current pool — only the new slots are measured
+        # fresh (App. B.3).
+        u_j, d2s_j, idxs_j = aux_j
+        d2, ref = nearest_center_with_new(pool, x_j, d2s_j, idxs_j, count0)
+        p = jnp.minimum(1.0, d2 / self._lam2(d2.dtype))
+        return u_j < p, x_j, ref
 
     def writeback(self, send, slots, outs, safe, valid):
         return resolve_assignments(send, slots, outs, safe, valid)
@@ -152,15 +155,16 @@ def occ_ofl(
     pb: int,
     key: jax.Array,
     k_max: int = 256,
-    validate_cap: int | None = None,
+    validate_cap: int | None | str = None,
     mesh: jax.sharding.Mesh | None = None,
     data_axis: str = "data",
+    scan_mode: str = "serial",
 ) -> OFLResult:
     """OCC Online Facility Location (Alg. 4) — convenience wrapper running
     `OFLTransaction` under `OCCEngine`.  Single pass by construction."""
     txn = OFLTransaction(lam, k_max, key)
     eng = OCCEngine(txn, pb, validate_cap=validate_cap, mesh=mesh,
-                    data_axis=data_axis)
+                    data_axis=data_axis, scan_mode=scan_mode)
     res = eng.run(x)
     obj = txn.objective(x, res.assign, res.pool)
     return OFLResult(res.pool, res.assign, res.stats, res.send,

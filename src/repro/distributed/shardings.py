@@ -148,9 +148,17 @@ def occ_epoch_sharding(mesh: Mesh, data_axis: str, pb: int,
 
 def occ_validate_sharding(mesh: Mesh, rank: int) -> NamedSharding:
     """Replicated sharding for the bounded master's compacted (cap, …)
-    validator buffers (DESIGN.md §2/§9): validation is SPMD re-execution of
-    the master on every device, so the compaction gather happens once and
-    the scalar scan runs on replicated operands — no mid-scan resharding."""
+    validator buffers (DESIGN.md §2/§9/§11): validation is SPMD
+    re-execution of the master on every device, so the compaction gather
+    happens once and the D-free resolution runs on replicated operands —
+    no mid-scan resharding.
+
+    Applied to the compacted inputs AND every precomputed `ValidatePre`
+    leaf — the (cap, cap) pairwise / Gram matrices included — at whatever
+    cap the epoch runs with: replication has no dimension to split, so the
+    adaptive cap's shrunken warm/rest-segment buffers (power-of-two
+    bucketed, engine §11) all share this one spec and never retrigger
+    layout decisions when the window resizes."""
     return NamedSharding(mesh, P(*([None] * rank)))
 
 

@@ -121,6 +121,12 @@ def serve_topk(x, centers, k: int, mask=None, count=None, n_valid=None,
     to dispatch to — the O(N·K) matrix is one MXU matmul and `lax.top_k`
     lowers natively on TPU.  `topk[..., :1]` equals `serve_assign` on the
     ref backend bit-exactly (same algebra, same tie-breaking).
+
+    Like `serve_assign`, scoring is restricted to the active prefix: the
+    count/mask validity is applied to the center rows BEFORE the distance
+    matmul (`topk_ref` zeroes masked rows), so NaN/inf-laden payloads
+    sitting in padded slots can never surface in — or reorder — the
+    top-k (tests/test_serving.py pins this).
     """
     if mask is None:
         mask = jnp.ones((centers.shape[0],), bool)

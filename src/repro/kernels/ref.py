@@ -49,7 +49,17 @@ def topk_ref(x: jnp.ndarray, centers: jnp.ndarray, k: int,
     column is bit-identical to `assign_ref`'s verdict); slots beyond the
     valid set come back as (inf, -1).  `lax.top_k` breaks distance ties by
     lower index — matching `argmin`, so topk[...,:1] == assign exactly.
+
+    Scoring is restricted to the masked active prefix at the SOURCE: rows
+    outside the mask are zeroed before the matmul, so NaN/inf garbage in
+    padded pool slots (stale payloads past `count`, snapshot capacity
+    padding) cannot poison the distance matrix or the top-k sort order —
+    invalid slots are (inf, -1) by construction, never by luck.  For valid
+    columns the algebra is untouched (zeroing only changes columns the
+    inf-mask overwrites anyway), preserving the top1 == assign contract.
     """
+    if mask is not None:
+        centers = jnp.where(mask[:, None], centers, 0)
     x2 = jnp.sum(x * x, axis=-1, keepdims=True)
     c2 = jnp.sum(centers * centers, axis=-1)[None, :]
     d2 = jnp.maximum(x2 + c2 - 2.0 * (x @ centers.T), 0.0)

@@ -33,7 +33,7 @@ from typing import Any
 import jax.numpy as jnp
 
 from repro.core.engine import OCCPassResult
-from repro.core.occ import CenterPool
+from repro.core.occ import CenterPool, next_pow2
 
 __all__ = ["ModelSnapshot", "SnapshotStore", "next_bucket", "freeze_snapshot"]
 
@@ -41,10 +41,10 @@ _MIN_CAPACITY = 8   # TPU sublane tile: the smallest useful center buffer
 
 
 def next_bucket(n: int, lo: int = _MIN_CAPACITY, hi: int | None = None) -> int:
-    """Smallest power of two >= n, clamped to [lo, hi]."""
-    b = lo
-    while b < n:
-        b <<= 1
+    """Smallest power of two >= n, clamped to [lo, hi] (lo a power of two).
+    Shares the core bucketing primitive with the engine's adaptive
+    validator cap (occ.next_pow2) so bucket policy lives in one place."""
+    b = max(lo, next_pow2(n))
     return b if hi is None else min(b, hi)
 
 

@@ -7,9 +7,10 @@ import pytest
 
 from repro.core import (
     CenterPool, OCCEngine, DPMeansTransaction, OFLTransaction,
-    BPMeansTransaction, gather_validate, make_pool, nearest_center,
+    BPMeansTransaction, make_pool, nearest_center,
     occ_dp_means, occ_ofl,
 )
+from repro.core._reference import _reference_validate
 from repro.core import engine as engine_mod
 from repro.data import dp_stick_breaking_data
 
@@ -63,9 +64,11 @@ def test_engine_matches_wrapper():
 
 # ----------------------------------------------------------------- overflow
 
-def test_gather_validate_sent_overflow_flag():
+def test_bounded_master_sent_overflow_flag():
     """cap < #sent proposals -> sent_overflow raised; proposals beyond the
-    cap are dropped (slot -1), the first `cap` validated in index order."""
+    cap are dropped (slot -1), the first `cap` validated in index order.
+    (Compaction semantics shared by the reference and the engine path —
+    see test_validator_equivalence for the fast-path equivalents.)"""
     pool = make_pool(16, 2)
     pts = jnp.asarray(np.eye(8, 2, dtype=np.float32) * 100
                       + np.arange(8, dtype=np.float32)[:, None] * 50)
@@ -75,7 +78,8 @@ def test_gather_validate_sent_overflow_flag():
         d2, ref = nearest_center(pool, x_j)
         return d2 > 1.0, x_j, ref
 
-    pool2, slots, _, ovf = gather_validate(pool, send, pts, accept_fn, cap=3)
+    pool2, slots, _, ovf = _reference_validate(pool, send, pts, accept_fn,
+                                               cap=3)
     assert bool(ovf)
     assert int(pool2.count) == 3
     assert np.array_equal(np.asarray(slots[:3]), [0, 1, 2])
@@ -83,7 +87,8 @@ def test_gather_validate_sent_overflow_flag():
 
     # cap not exceeded -> no flag, identical to the unbounded validator
     send2 = send.at[3:].set(False)
-    pool3, slots3, _, ovf2 = gather_validate(pool, send2, pts, accept_fn, cap=3)
+    pool3, slots3, _, ovf2 = _reference_validate(pool, send2, pts, accept_fn,
+                                                 cap=3)
     assert not bool(ovf2)
     assert int(pool3.count) == 3
 

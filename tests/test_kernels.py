@@ -227,3 +227,26 @@ def test_serve_topk_matches_full_sort(rng):
                              backend="ref")
     np.testing.assert_array_equal(np.asarray(idxk[:12, 0]),
                                   np.asarray(ia[:12]))
+
+
+def test_serve_topk_active_prefix_immune_to_garbage_slots(rng):
+    """Slots beyond the active prefix may hold arbitrary stale payloads —
+    including NaN/inf — after pool reuse or snapshot capacity padding.
+    `serve_topk` scores only the active prefix (masked rows are zeroed
+    before the matmul), so garbage slots can neither surface in the top-k
+    nor perturb the scores of valid slots, and asking for k > count yields
+    clean (inf, -1) tails rather than garbage indices."""
+    x = jnp.asarray(rng.normal(size=(9, 6)).astype(np.float32))
+    c_clean = jnp.asarray(rng.normal(size=(16, 6)).astype(np.float32))
+    count = 5
+    poisoned = c_clean.at[count:].set(jnp.nan).at[count + 1].set(jnp.inf)
+    cnt = jnp.asarray(count, jnp.int32)
+    k = 8                                     # > count: forces padded tail
+    d2_ref, idx_ref = ops.serve_topk(x, c_clean, k, count=cnt)
+    d2_poi, idx_poi = ops.serve_topk(x, poisoned, k, count=cnt)
+    np.testing.assert_array_equal(np.asarray(idx_ref), np.asarray(idx_poi))
+    np.testing.assert_array_equal(np.asarray(d2_ref), np.asarray(d2_poi))
+    assert (np.asarray(idx_poi) < count).all()            # never a padded slot
+    assert (np.asarray(idx_poi[:, count:]) == -1).all()   # clean k>count tail
+    assert np.isinf(np.asarray(d2_poi[:, count:])).all()
+    assert np.isfinite(np.asarray(d2_poi[:, :count])).all()

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import occ_bp_means, serial_bp_means, serial_bp_means_pass
-from repro.core.bp_means import _reestimate
+from repro.core.bp_means import BPMeansTransaction, _reestimate
 from repro.core.dp_means import thm31_permutation
 from repro.data import bp_stick_breaking_data
 
@@ -13,11 +13,19 @@ LAM = 4.0
 
 @pytest.mark.parametrize("pb", [32, 64])
 def test_serializability_exact(pb):
+    """App. B.2: the OCC run equals the serial pass on the Thm-3.1
+    permutation, GIVEN the same initial pool.  The engine seeds init_mean
+    from the first epoch's points (batching-independent initializer scope,
+    DESIGN.md §11), so the serial pass is seeded with that same pool —
+    serializability is a statement about the pass, not the init."""
     x, _, _ = bp_stick_breaking_data(256, seed=2)
     x = jnp.asarray(x)
     res = occ_bp_means(x, LAM, pb=pb, k_max=64, max_iters=1, init_mean=True)
     perm = thm31_permutation(res, x.shape[0])
-    pool_s, z_s = serial_bp_means_pass(x[perm], LAM, 64, init_mean=True)
+    txn = BPMeansTransaction(LAM, 64, init_mean=True)
+    pool_s, z_s = serial_bp_means_pass(x[perm], LAM, 64,
+                                       pool=txn.init_pool(x[:pb]),
+                                       z=txn.make_state(x))
     k = int(res.pool.count)
     assert int(pool_s.count) == k
     assert np.array_equal(np.asarray(z_s), np.asarray(res.z)[perm])

@@ -103,8 +103,8 @@ def test_bootstrap_preserves_serializability_quality():
 
 
 def test_bounded_master_cap():
-    """gather_validate with a cap produces identical results when the cap
-    is not exceeded."""
+    """The bounded master produces identical results when the cap is not
+    exceeded."""
     x, _, _ = dp_stick_breaking_data(256, seed=6)
     x = jnp.asarray(x)
     r_full = occ_dp_means(x, LAM, pb=64, k_max=128, max_iters=1)

@@ -87,10 +87,7 @@ def test_ofl_stream_any_batching_bit_identical(cuts):
 
 def test_bp_stream_any_batching_bit_identical():
     """BP-means carries per-point STATE (the (N, K_max) assignment rows)
-    through the partial epoch, not just the points.  init_mean=False keeps
-    init_pool data-independent — with init_mean the pool seeds from
-    mean(first batch) vs mean(all x), the one documented way a stream can
-    differ from one-shot (see the seeded-pool variant below)."""
+    through the partial epoch, not just the points."""
     xb, _, _ = bp_stick_breaking_data(256, seed=2)
     xb = jnp.asarray(xb)
     txn = BPMeansTransaction(LAM, k_max=32, init_mean=False)
@@ -103,15 +100,55 @@ def test_bp_stream_any_batching_bit_identical():
                                   np.asarray(one.pool.centers))
 
 
-def test_bp_stream_with_seeded_pool_matches_mean_init():
-    """partial_fit(pool=...) seeds the stream with the one-shot run's
-    mean-initialized pool, restoring bit-identity for init_mean=True."""
+@pytest.mark.parametrize("cuts", [[50, 81, 200], [1], [31, 32, 33], [255]])
+def test_bp_stream_init_mean_bit_identical(cuts):
+    """The ROADMAP divergence, closed: with init_mean=True the pool seeds
+    from the FIRST EPOCH's mean in both modes — pool initialization is
+    deferred until the first committed epoch, whose points are identical
+    for any batching (the partial-epoch carry holds them) — so streams are
+    bit-identical to one-shot with NO explicit seeding, even when the first
+    batch is a single point."""
+    xb, _, _ = bp_stick_breaking_data(256, seed=2)
+    xb = jnp.asarray(xb)
+    txn = BPMeansTransaction(LAM, k_max=32, init_mean=True)
+    one = OCCEngine(txn, pb=32).run(xb)
+    eng = OCCEngine(txn, pb=32)
+    z, eo, _ = _stream_all(eng, xb, cuts)
+    assert np.array_equal(z, np.asarray(one.assign))
+    assert np.array_equal(eo, np.asarray(one.epoch_of))
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers),
+                                  np.asarray(one.pool.centers))
+    assert int(eng.pool.count) == int(one.pool.count)
+
+
+def test_bp_stream_init_mean_short_stream_matches_one_shot():
+    """Streams shorter than one epoch: flush() commits everything as the
+    one-shot run's single short epoch, so the init-mean scope is the whole
+    (short) dataset in both modes."""
+    xb, _, _ = bp_stick_breaking_data(20, seed=3)
+    xb = jnp.asarray(xb)
+    txn = BPMeansTransaction(LAM, k_max=16, init_mean=True)
+    one = OCCEngine(txn, pb=32).run(xb)
+    eng = OCCEngine(txn, pb=32)
+    parts = [eng.partial_fit(xb[:7]), eng.partial_fit(xb[7:])]
+    assert all(p.assign.shape[0] == 0 for p in parts)   # all carried
+    fl = eng.flush()
+    assert np.array_equal(np.asarray(fl.assign), np.asarray(one.assign))
+    np.testing.assert_array_equal(np.asarray(eng.pool.centers),
+                                  np.asarray(one.pool.centers))
+
+
+def test_bp_stream_with_seeded_pool():
+    """partial_fit(pool=...) still seeds the stream with an explicit pool
+    (e.g. a warm model) — first call only; matches a one-shot run seeded
+    with the same pool."""
     xb, _, _ = bp_stick_breaking_data(256, seed=2)
     xb = jnp.asarray(xb)
     txn = BPMeansTransaction(LAM, k_max=32)
-    one = OCCEngine(txn, pb=32).run(xb)
+    seed_pool = txn.init_pool(xb)          # full-data mean (warm model)
+    one = OCCEngine(txn, pb=32).run(xb, pool=seed_pool)
     eng = OCCEngine(txn, pb=32)
-    parts = [eng.partial_fit(xb[:50], pool=txn.init_pool(xb)),
+    parts = [eng.partial_fit(xb[:50], pool=seed_pool),
              eng.partial_fit(xb[50:200]), eng.partial_fit(xb[200:])]
     fl = eng.flush()
     parts += [fl] if fl is not None else []
@@ -139,6 +176,24 @@ def test_carry_only_call_returns_zero_point_result():
     assert res2.assign.shape == (64,)
     assert (np.asarray(res2.epoch_of) == 0).all()
     assert eng.n_pending == 10
+
+
+def test_reset_stream_does_not_leak_pool_into_carry_results():
+    """A carry-only call on a RESET stream must report the zero pre-commit
+    pool, not the previous stream's trained pool (the zero-point template
+    is cached per shape — it must never capture live state)."""
+    x = _x()
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64)
+    eng.partial_fit(x[:64])                  # commit: pool is trained
+    eng.partial_fit(x[64:66])                # carry-only: caches template
+    assert int(eng.pool.count) > 0
+    eng.reset_stream()
+    res = eng.partial_fit(x[:2])             # carry-only on a FRESH stream
+    assert int(res.pool.count) == 0
+    assert not bool(res.pool.mask.any())
+    # and once the fresh stream commits, results flow normally again
+    res2 = eng.partial_fit(x[2:66])
+    assert res2.assign.shape == (64,) and int(eng.pool.count) > 0
 
 
 def test_flush_empty_and_reset_stream():

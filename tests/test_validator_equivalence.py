@@ -1,6 +1,21 @@
-"""The precomputed (D-free) validator is bit-identical to the legacy
-full-recompute validator — for DP-means, OFL, and BP-means, across random
-epochs, caps, pool occupancies, and the sent_overflow path (DESIGN.md §9).
+"""The unified precomputed validator (DESIGN.md §11) vs the reference
+implementations — for DP-means, OFL, and BP-means, across random epochs,
+caps, pool occupancies, and the sent_overflow / pool-overflow paths.
+
+Contracts enforced here:
+  * DP-means / OFL payload scan is bit-identical to the legacy per-step
+    D-dimensional recompute (`core/_reference.py`), including pool bits.
+  * `scan_mode="logdepth"` is bit-identical to `scan_mode="serial"` for
+    DP-means / OFL — everything, centers included (min/compare algebra
+    never rounds).
+  * BP-means Gram-carry validation is decision-identical to the
+    D-dimensional refit reference — every discrete output (assignments,
+    sends, slots, counts, stats, overflow) bit-equal — with appended
+    centers equal up to float reassociation of the same exact algebra
+    (§11), asserted at ulp-scale tolerance.
+  * `validate_cap="adaptive"` commits results bit-identical to the
+    unbounded master for all three transactions (the overflow-retry
+    guarantee).
 
 Two layers: a deterministic seeded sweep that always runs, and hypothesis
 property variants (skipped when hypothesis is absent) exploring the same
@@ -13,9 +28,9 @@ import pytest
 
 from repro.core import (
     BPMeansTransaction, DPMeansTransaction, OCCEngine, OFLTransaction,
-    gather_validate, make_pool, nearest_center, precomputed_gather_validate,
-    resolve_validate_mode,
+    make_pool, nearest_center, precomputed_gather_validate,
 )
+from repro.core._reference import _reference_validate, reference_pass
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -42,25 +57,63 @@ def _problem(n, d, k_max, k0, seed):
     return x, _seeded_pool(k_max, d, min(k0, k_max), rng)
 
 
-def _assert_runs_identical(txn, x, pool, pb, cap):
+def _assert_matches_reference(txn, x, pool, pb, cap, state=None,
+                              scan_mode="serial"):
+    """Engine (fast path) == legacy per-step reference, bit for bit."""
     fast = OCCEngine(txn, pb, validate_cap=cap,
-                     validate_mode="precomputed").run(x, pool=pool)
-    legacy = OCCEngine(txn, pb, validate_cap=cap,
-                       validate_mode="legacy").run(x, pool=pool)
-    np.testing.assert_array_equal(np.asarray(fast.assign),
-                                  np.asarray(legacy.assign))
-    np.testing.assert_array_equal(np.asarray(fast.send),
-                                  np.asarray(legacy.send))
+                     scan_mode=scan_mode).run(x, pool=pool, state=state)
+    rp, ra, rs, rst = reference_pass(txn, pool, x, state=state, pb=pb,
+                                     cap=cap)
+    np.testing.assert_array_equal(np.asarray(fast.assign), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(fast.send), np.asarray(rs))
     np.testing.assert_array_equal(np.asarray(fast.stats.proposed),
-                                  np.asarray(legacy.stats.proposed))
+                                  np.asarray(rst.proposed))
     np.testing.assert_array_equal(np.asarray(fast.stats.accepted),
-                                  np.asarray(legacy.stats.accepted))
+                                  np.asarray(rst.accepted))
     np.testing.assert_array_equal(np.asarray(fast.pool.centers),
-                                  np.asarray(legacy.pool.centers))
+                                  np.asarray(rp.centers))
     np.testing.assert_array_equal(np.asarray(fast.pool.mask),
-                                  np.asarray(legacy.pool.mask))
-    assert int(fast.pool.count) == int(legacy.pool.count)
-    assert bool(fast.pool.overflow) == bool(legacy.pool.overflow)
+                                  np.asarray(rp.mask))
+    assert int(fast.pool.count) == int(rp.count)
+    assert bool(fast.pool.overflow) == bool(rp.overflow)
+    return fast
+
+
+def _assert_scan_modes_identical(txn, x, pool, pb, cap):
+    """logdepth == serial, bit for bit, everything."""
+    serial = OCCEngine(txn, pb, validate_cap=cap).run(x, pool=pool)
+    logd = OCCEngine(txn, pb, validate_cap=cap,
+                     scan_mode="logdepth").run(x, pool=pool)
+    for got, want in [(logd.assign, serial.assign), (logd.send, serial.send),
+                      (logd.pool.centers, serial.pool.centers),
+                      (logd.pool.mask, serial.pool.mask),
+                      (logd.stats.proposed, serial.stats.proposed),
+                      (logd.stats.accepted, serial.stats.accepted)]:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(logd.pool.count) == int(serial.pool.count)
+    assert bool(logd.pool.overflow) == bool(serial.pool.overflow)
+    return serial
+
+
+def _assert_bp_decision_identical(txn, x, pool, pb, cap):
+    """BP Gram scan vs D-dim refit reference: every discrete output bit-
+    identical; centers exact-algebra-equal (ulp-scale reassociation only)."""
+    z0 = txn.make_state(x)
+    fast = OCCEngine(txn, pb, validate_cap=cap).run(x, pool=pool, state=z0)
+    rp, ra, rs, rst = reference_pass(txn, pool, x, state=z0, pb=pb, cap=cap)
+    np.testing.assert_array_equal(np.asarray(fast.assign), np.asarray(ra))
+    np.testing.assert_array_equal(np.asarray(fast.send), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(fast.stats.proposed),
+                                  np.asarray(rst.proposed))
+    np.testing.assert_array_equal(np.asarray(fast.stats.accepted),
+                                  np.asarray(rst.accepted))
+    np.testing.assert_array_equal(np.asarray(fast.pool.mask),
+                                  np.asarray(rp.mask))
+    assert int(fast.pool.count) == int(rp.count)
+    assert bool(fast.pool.overflow) == bool(rp.overflow)
+    scale = max(1.0, float(jnp.max(jnp.abs(rp.centers))))
+    np.testing.assert_allclose(np.asarray(fast.pool.centers),
+                               np.asarray(rp.centers), atol=1e-5 * scale)
     return fast
 
 
@@ -77,55 +130,107 @@ SWEEP = [
 
 
 @pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
-def test_dpmeans_fast_equals_legacy_sweep(n, d, k_max, k0, pb, lam, cap):
+def test_dpmeans_fast_equals_reference_sweep(n, d, k_max, k0, pb, lam, cap):
     x, pool = _problem(n, d, k_max, k0, seed=n + k0)
-    _assert_runs_identical(DPMeansTransaction(lam, k_max), x, pool, pb, cap)
+    _assert_matches_reference(DPMeansTransaction(lam, k_max), x, pool, pb, cap)
 
 
 @pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
-def test_ofl_fast_equals_legacy_sweep(n, d, k_max, k0, pb, lam, cap):
+def test_ofl_fast_equals_reference_sweep(n, d, k_max, k0, pb, lam, cap):
     x, pool = _problem(n, d, k_max, k0, seed=n + k0)
     txn = OFLTransaction(lam, k_max, jax.random.key(n))
-    _assert_runs_identical(txn, x, pool, pb, cap)
+    _assert_matches_reference(txn, x, pool, pb, cap)
 
 
-@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP[:3])
-def test_bpmeans_auto_matches_legacy_sweep(n, d, k_max, k0, pb, lam, cap):
-    """BP-means has no precomputed path (its append vector is the refit
-    residual, not the payload): auto must resolve to legacy, and the
-    auto-mode run must equal the forced-legacy run."""
+@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
+def test_dpmeans_logdepth_equals_serial_sweep(n, d, k_max, k0, pb, lam, cap):
+    x, pool = _problem(n, d, k_max, k0, seed=n + k0)
+    _assert_scan_modes_identical(DPMeansTransaction(lam, k_max), x, pool,
+                                 pb, cap)
+
+
+@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
+def test_ofl_logdepth_equals_serial_sweep(n, d, k_max, k0, pb, lam, cap):
+    x, pool = _problem(n, d, k_max, k0, seed=n + k0)
+    txn = OFLTransaction(lam, k_max, jax.random.key(n))
+    _assert_scan_modes_identical(txn, x, pool, pb, cap)
+
+
+@pytest.mark.parametrize("n,d,k_max,k0,pb,lam,cap", SWEEP)
+def test_bpmeans_gram_matches_refit_reference_sweep(n, d, k_max, k0, pb, lam,
+                                                    cap):
+    """The sweep's rows 3 and 5 drive sent_overflow and pool-capacity
+    overflow through the Gram scan (small λ floods the validator)."""
     x, pool = _problem(n, d, k_max, k0, seed=n + k0)
     txn = BPMeansTransaction(lam, k_max, init_mean=False)
-    assert resolve_validate_mode(txn, "auto") == "legacy"
-    auto = OCCEngine(txn, pb, validate_cap=cap).run(x, pool=pool)
-    legacy = OCCEngine(txn, pb, validate_cap=cap,
-                       validate_mode="legacy").run(x, pool=pool)
-    np.testing.assert_array_equal(np.asarray(auto.assign),
-                                  np.asarray(legacy.assign))
-    np.testing.assert_array_equal(np.asarray(auto.pool.centers),
-                                  np.asarray(legacy.pool.centers))
+    _assert_bp_decision_identical(txn, x, pool, pb, cap)
 
 
-def test_auto_resolves_fast_for_dp_and_ofl():
-    assert resolve_validate_mode(DPMeansTransaction(1.0, 8)) == "precomputed"
-    assert resolve_validate_mode(
-        OFLTransaction(1.0, 8, jax.random.key(0))) == "precomputed"
+@pytest.mark.parametrize("txn_name", ["dp", "ofl", "bp"])
+def test_adaptive_cap_equals_full_cap(txn_name):
+    """Adaptive committed results are bit-identical to the unbounded master
+    for all three transactions — multi-pass so the Thm-3.3 estimate
+    actually engages after the burn-in pass."""
+    x, _ = _problem(256, 4, 128, 0, seed=17)
+    if txn_name == "dp":
+        txn = DPMeansTransaction(3.0, 128)
+    elif txn_name == "ofl":
+        txn = OFLTransaction(3.0, 128, jax.random.key(3))
+    else:
+        txn = BPMeansTransaction(3.0, 128, init_mean=False)
+    state = txn.make_state(x)
+    ea = OCCEngine(txn, pb=64, validate_cap="adaptive")
+    ef = OCCEngine(txn, pb=64)
+    ra, rf = ea.run(x, state=state), ef.run(x, state=state)
+    for _ in range(2):          # warm passes: the shrunken cap is live now
+        ra = ea.run(x, pool=ra.pool, state=state)
+        rf = ef.run(x, pool=rf.pool, state=state)
+    assert ea.cap_history[-1] is not None and ea.cap_history[-1] < 64, \
+        f"adaptive cap never engaged: {ea.cap_history}"
+    np.testing.assert_array_equal(np.asarray(ra.assign), np.asarray(rf.assign))
+    np.testing.assert_array_equal(np.asarray(ra.pool.centers),
+                                  np.asarray(rf.pool.centers))
+    np.testing.assert_array_equal(np.asarray(ra.stats.proposed),
+                                  np.asarray(rf.stats.proposed))
+    assert int(ra.pool.count) == int(rf.pool.count)
+    # the chosen cap is surfaced per epoch
+    caps = np.asarray(ra.stats.cap)
+    assert caps.shape == ra.stats.proposed.shape
+    assert (caps >= np.asarray(ra.stats.proposed)).all()
 
 
-def test_forcing_precomputed_on_bp_raises():
-    txn = BPMeansTransaction(1.0, 8)
+def test_adaptive_cap_overflow_retry_is_lossless():
+    """A stream whose conflict rate explodes after a quiet prefix overflows
+    the shrunken window; the engine must re-dispatch at full width and
+    commit results identical to the unbounded master."""
+    rng = np.random.default_rng(11)
+    quiet = rng.normal(size=(192, 4)).astype(np.float32) * 0.1
+    burst = rng.normal(size=(64, 4)).astype(np.float32) * 50.0
+    x = jnp.asarray(np.concatenate([quiet, burst]))
+    txn = DPMeansTransaction(2.0, 256)
+    ea = OCCEngine(txn, pb=64, validate_cap="adaptive")
+    ef = OCCEngine(txn, pb=64)
+    za, zf = [], []
+    for lo in range(0, 256, 64):
+        za.append(np.asarray(ea.partial_fit(x[lo:lo + 64]).assign))
+        zf.append(np.asarray(ef.partial_fit(x[lo:lo + 64]).assign))
+    assert ea.n_cap_retries >= 1, ea.cap_history
+    np.testing.assert_array_equal(np.concatenate(za), np.concatenate(zf))
+    np.testing.assert_array_equal(np.asarray(ea.pool.centers),
+                                  np.asarray(ef.pool.centers))
+    assert int(ea.pool.count) == int(ef.pool.count)
+
+
+def test_unknown_knobs_raise():
     with pytest.raises(ValueError):
-        OCCEngine(txn, 8, validate_mode="precomputed")
-
-
-def test_unknown_validate_mode_raises():
+        OCCEngine(DPMeansTransaction(1.0, 8), 8, scan_mode="nope")
     with pytest.raises(ValueError):
-        OCCEngine(DPMeansTransaction(1.0, 8), 8, validate_mode="nope")
+        OCCEngine(DPMeansTransaction(1.0, 8), 8, validate_cap="nope")
 
 
 def test_sent_overflow_bitidentical_slots():
     """Direct occ-level check: slots / outs / overflow from the fast path
-    match the legacy path through the bounded master, cap exceeded."""
+    match the reference path through the bounded master, cap exceeded."""
     rng = np.random.default_rng(0)
     d, k_max, cap = 3, 16, 3
     pool = _seeded_pool(k_max, d, 2, rng)
@@ -135,18 +240,20 @@ def test_sent_overflow_bitidentical_slots():
     count0 = pool.count
 
     accept = lambda p, v_j, a_j: txn.accept(p, v_j, a_j, count0)
-    pl_, sl_, ol_, ovf_l = gather_validate(pool, send, payload, accept, aux,
-                                           cap=cap)
-    pf_, sf_, of_, ovf_f = precomputed_gather_validate(
-        pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
-        cap=cap)
-    assert bool(ovf_l) and bool(ovf_f)
-    np.testing.assert_array_equal(np.asarray(sl_), np.asarray(sf_))
-    # outs only carry meaning for sent proposals (writeback masks the rest)
-    s = np.asarray(send)
-    np.testing.assert_array_equal(np.asarray(ol_)[s], np.asarray(of_)[s])
-    np.testing.assert_array_equal(np.asarray(pl_.centers), np.asarray(pf_.centers))
-    assert int(pl_.count) == int(pf_.count)
+    pl_, sl_, ol_, ovf_l = _reference_validate(pool, send, payload, accept,
+                                               aux, cap=cap)
+    for mode in ("serial", "logdepth"):
+        pf_, sf_, of_, ovf_f = precomputed_gather_validate(
+            pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
+            cap=cap, scan_mode=mode)
+        assert bool(ovf_l) and bool(ovf_f)
+        np.testing.assert_array_equal(np.asarray(sl_), np.asarray(sf_))
+        # outs only carry meaning for sent proposals (writeback masks them)
+        s = np.asarray(send)
+        np.testing.assert_array_equal(np.asarray(ol_)[s], np.asarray(of_)[s])
+        np.testing.assert_array_equal(np.asarray(pl_.centers),
+                                      np.asarray(pf_.centers))
+        assert int(pl_.count) == int(pf_.count)
 
 
 def test_fast_path_equals_full_recompute_reference():
@@ -165,8 +272,8 @@ def test_fast_path_equals_full_recompute_reference():
         d2, ref = nearest_center(p, x_j)
         return d2 > lam2, x_j, ref
 
-    pr, sr, orr, _ = gather_validate(pool, send, payload, full_recompute,
-                                     aux=None, cap=None)
+    pr, sr, orr, _ = _reference_validate(pool, send, payload, full_recompute,
+                                         aux=None, cap=None)
     pf, sf, off, _ = precomputed_gather_validate(
         pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
         cap=None)
@@ -198,29 +305,46 @@ if HAVE_HYPOTHESIS:
 
     @given(validator_problem())
     @settings(**SET)
-    def test_dpmeans_fast_equals_legacy_property(prob):
+    def test_dpmeans_fast_equals_reference_property(prob):
         x, pool, pb, lam, k_max, cap, _ = prob
-        _assert_runs_identical(DPMeansTransaction(lam, k_max), x, pool, pb, cap)
+        _assert_matches_reference(DPMeansTransaction(lam, k_max), x, pool,
+                                  pb, cap)
 
     @given(validator_problem())
     @settings(**SET)
-    def test_ofl_fast_equals_legacy_property(prob):
+    def test_ofl_fast_equals_reference_property(prob):
         x, pool, pb, lam, k_max, cap, seed = prob
         txn = OFLTransaction(lam, k_max, jax.random.key(seed))
-        _assert_runs_identical(txn, x, pool, pb, cap)
+        _assert_matches_reference(txn, x, pool, pb, cap)
 
     @given(validator_problem())
-    @settings(max_examples=6, deadline=None)
-    def test_bpmeans_auto_matches_legacy_property(prob):
+    @settings(**SET)
+    def test_logdepth_equals_serial_property(prob):
+        x, pool, pb, lam, k_max, cap, seed = prob
+        _assert_scan_modes_identical(DPMeansTransaction(lam, k_max), x, pool,
+                                     pb, cap)
+        txn = OFLTransaction(lam, k_max, jax.random.key(seed))
+        _assert_scan_modes_identical(txn, x, pool, pb, cap)
+
+    @given(validator_problem())
+    @settings(max_examples=8, deadline=None)
+    def test_bpmeans_gram_matches_reference_property(prob):
+        """The ISSUE's bit-identity layer: every discrete BP validation
+        output equals the D-dim refit reference on adversarial problems —
+        including sent_overflow (cap=4 draws) and pool-overflow (k0 ~ k_max
+        with small λ) epochs."""
         x, pool, pb, lam, k_max, cap, _ = prob
         txn = BPMeansTransaction(lam, k_max, init_mean=False)
-        auto = OCCEngine(txn, pb, validate_cap=cap).run(x, pool=pool)
-        legacy = OCCEngine(txn, pb, validate_cap=cap,
-                           validate_mode="legacy").run(x, pool=pool)
-        np.testing.assert_array_equal(np.asarray(auto.assign),
-                                      np.asarray(legacy.assign))
-        np.testing.assert_array_equal(np.asarray(auto.pool.centers),
-                                      np.asarray(legacy.pool.centers))
+        _assert_bp_decision_identical(txn, x, pool, pb, cap)
+
+    @given(st.sampled_from([0.5, 0.8]), st.integers(0, 2 ** 16))
+    @settings(max_examples=4, deadline=None)
+    def test_bpmeans_gram_overflow_property(lam, seed):
+        """Dedicated overflow hammer: tiny pool + tiny cap + flooding λ."""
+        x, pool = _problem(96, 5, 8, 0, seed)
+        txn = BPMeansTransaction(lam, 8, init_mean=False)
+        res = _assert_bp_decision_identical(txn, x, pool, 16, 4)
+        assert bool(res.pool.overflow)
 else:  # pragma: no cover - exercised only without hypothesis
     def test_hypothesis_layer_skipped():
         pytest.skip("hypothesis not installed; deterministic sweep still ran")
