@@ -1,0 +1,179 @@
+"""Benchmark regression gate — fails CI on real slowdowns in key metrics.
+
+Measures the two serving-critical paths at --quick sizes:
+
+  * ``validator_pass_us`` — one warm compiled OCC pass (bootstrap + epoch
+    scan + the §11 precomputed validator: the training hot path);
+  * ``service_p99_ms`` / ``service_p50_ms`` — solo request latency through
+    `ClusterService.score` with warm jit caches (the serving hot path).
+
+Raw wall times are machine-dependent, so the GATE compares *normalized*
+metrics: each raw time divided by ``reference_us``, a warm jitted matmul
+timed on the same machine in the same process.  A slower CI runner scales
+metric and reference together and the ratio holds; a code regression (or
+the built-in ``--inject-sleep-ms`` self-test) inflates only the metric and
+trips the gate.  Timings take the MIN over trials (robust to scheduler
+noise; p99 is a per-trial tail, then min over trials).
+
+The committed baseline lives in ``benchmarks/baselines/
+BENCH_regress_quick.json`` (regenerate with ``--update`` after an
+intentional perf change).  Exit status: 0 clean, 1 on >``--tol`` (default
+30%) normalized slowdown in any key metric.
+
+  PYTHONPATH=src python -m benchmarks.check_regress            # gate
+  PYTHONPATH=src python -m benchmarks.check_regress --update   # rebaseline
+  PYTHONPATH=src python -m benchmarks.check_regress --inject-sleep-ms 2
+  # ^ self-test: the injected sleep must make the gate FAIL (exit 1)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KEY_METRICS = ("validator_pass_us", "service_p99_ms")
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baselines", "BENCH_regress_quick.json")
+SIZES = dict(n=1024, dim=16, pb=64, k_max=256, lam=4.0,
+             n_requests=200, request=17, trials=7)
+
+
+def _reference_us(trials: int = 7, reps: int = 50) -> float:
+    """Warm jitted matmul on this machine: the speed normalizer."""
+    a = jnp.asarray(np.random.default_rng(0).normal(
+        size=(512, 512)).astype(np.float32))
+    f = jax.jit(lambda a: a @ a)
+    f(a).block_until_ready()
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f(a).block_until_ready()
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best * 1e6
+
+
+def measure(inject_sleep_ms: float = 0.0) -> dict:
+    from repro.core import DPMeansTransaction, OCCEngine
+    from repro.data import dp_stick_breaking_data
+    from repro.serving import ClusterService, SnapshotStore
+
+    s = SIZES
+    x, _, _ = dp_stick_breaking_data(s["n"], seed=0, dim=s["dim"])
+    x = jnp.asarray(x)
+    inject = inject_sleep_ms / 1e3
+
+    # --- validator pass: one compiled pass, warm ------------------------
+    eng = OCCEngine(DPMeansTransaction(s["lam"], k_max=s["k_max"]),
+                    pb=s["pb"])
+    eng.run(x).pool.count.block_until_ready()        # compile + warm
+    best = float("inf")
+    for _ in range(s["trials"]):
+        t0 = time.perf_counter()
+        eng.run(x).pool.count.block_until_ready()
+        if inject:
+            time.sleep(inject)       # --inject-sleep-ms self-test hook
+        best = min(best, time.perf_counter() - t0)
+    validator_pass_us = best * 1e6
+
+    # --- service latency: warm solo requests ----------------------------
+    store = SnapshotStore()
+    eng2 = OCCEngine(DPMeansTransaction(s["lam"], k_max=s["k_max"]),
+                     pb=s["pb"], publish=store.publish_pass)
+    eng2.partial_fit(x)
+    eng2.flush()
+    svc = ClusterService(store)
+    q = x[:s["request"]]
+    svc.score(q)                                     # warm (bucket, cap)
+    p50s, p99s = [], []
+    for _ in range(s["trials"]):
+        lat = np.empty(s["n_requests"])
+        for i in range(s["n_requests"]):
+            t0 = time.perf_counter()
+            svc.score(q)
+            if inject:
+                time.sleep(inject)
+            lat[i] = time.perf_counter() - t0
+        p50s.append(np.percentile(lat, 50))
+        p99s.append(np.percentile(lat, 99))
+    ref_us = _reference_us()
+    metrics = {
+        "validator_pass_us": validator_pass_us,
+        "service_p50_ms": float(min(p50s) * 1e3),
+        "service_p99_ms": float(min(p99s) * 1e3),
+    }
+    return {
+        "bench": "regress_quick",
+        "sizes": dict(s),
+        "reference_us": ref_us,
+        "metrics": metrics,
+        "normalized": {k: v / ref_us for k, v in metrics.items()},
+    }
+
+
+def check(baseline: dict, fresh: dict, tol: float) -> list[str]:
+    failures = []
+    for key in KEY_METRICS:
+        base = baseline["normalized"][key]
+        now = fresh["normalized"][key]
+        ratio = now / base
+        verdict = "FAIL" if ratio > 1.0 + tol else "ok"
+        print(f"{key}: baseline_norm={base:.3f} fresh_norm={now:.3f} "
+              f"ratio={ratio:.2f} (raw {fresh['metrics'][key]:.0f} vs "
+              f"{baseline['metrics'][key]:.0f}) [{verdict}]")
+        if ratio > 1.0 + tol:
+            failures.append(
+                f"{key} regressed {100 * (ratio - 1):.0f}% "
+                f"(> {100 * tol:.0f}% tolerance)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("CHECK_REGRESS_TOL", 0.30)))
+    ap.add_argument("--update", action="store_true",
+                    help="write the fresh measurement as the new baseline")
+    ap.add_argument("--inject-sleep-ms", type=float, default=0.0,
+                    help="inject an artificial slowdown into the measured "
+                         "paths — the gate must then FAIL (self-test)")
+    ap.add_argument("--out", default=None,
+                    help="also write the fresh measurement here (artifact)")
+    args = ap.parse_args(argv)
+
+    fresh = measure(args.inject_sleep_ms)
+    print(f"reference_us={fresh['reference_us']:.1f}  "
+          f"(machine-speed normalizer)")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(fresh, f, indent=2)
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(fresh, f, indent=2)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; run with --update first",
+              file=sys.stderr)
+        return 2
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(baseline, fresh, args.tol)
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("regression gate: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,18 +1,24 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Cluster-serving benchmark: the train→publish→serve pipeline under load.
 
-Two measurements:
+Three measurements:
   * steady-state service latency per request bucket (warm jit caches,
     single published version) — the pure serving-plane cost;
-  * the end-to-end train-while-serve demo (launch/serve_clusters.run_demo):
-    concurrent trainer + load generator with the full zero-stale-read /
-    bit-parity audit; p50/p99 + QPS land in BENCH_cluster_service.json.
+  * admission-queue coalescing: a burst of small concurrent requests
+    through a coalescing service vs the same burst solo — bucket-fill
+    ratio and requests per dispatched group;
+  * the end-to-end multi-model train-while-serve demo
+    (launch/serve_clusters.run_demo): concurrent trainers + coalescing
+    load generator with the full zero-stale-read / bit-parity /
+    delta-publication audit; p50/p99 + QPS + fill ratios land in
+    BENCH_cluster_service.json.
 
   PYTHONPATH=src python -m benchmarks.cluster_service
 """
 from __future__ import annotations
 
 import os
+import threading
 import time
 
 import jax.numpy as jnp
@@ -24,8 +30,7 @@ from repro.launch.serve_clusters import ServeDemoConfig, run_demo
 from repro.serving import ClusterService, SnapshotStore
 
 
-def _steady_state_rows(n_train: int, dim: int, buckets, repeats: int):
-    """Per-bucket microbatch latency against one warm snapshot."""
+def _warm_store(n_train: int, dim: int):
     x, _, _ = dp_stick_breaking_data(n_train, seed=0, dim=dim)
     x = jnp.asarray(x)
     store = SnapshotStore()
@@ -33,6 +38,11 @@ def _steady_state_rows(n_train: int, dim: int, buckets, repeats: int):
                     publish=store.publish_pass)
     eng.partial_fit(x)
     eng.flush()
+    return x, store
+
+
+def _steady_state_rows(x, store, buckets, repeats: int):
+    """Per-bucket microbatch latency against one warm snapshot."""
     svc = ClusterService(store, max_bucket=max(buckets))
     rows = []
     for b in buckets:
@@ -47,14 +57,54 @@ def _steady_state_rows(n_train: int, dim: int, buckets, repeats: int):
     return rows
 
 
+def _coalescing_rows(x, store, n_clients: int, reqs_per_client: int,
+                     max_request: int = 16, bucket: int = 64):
+    """Burst of small concurrent requests: coalesced vs solo fill ratio."""
+    svc = ClusterService(store, coalesce=True, coalesce_bucket=bucket,
+                         coalesce_delay_ms=5.0, max_bucket=max(128, bucket))
+    rng = np.random.default_rng(5)
+    sizes = [[int(rng.integers(1, max_request + 1))
+              for _ in range(reqs_per_client)] for _ in range(n_clients)]
+
+    def client(ci):
+        for s in sizes[ci]:
+            svc.score(x[:s])
+
+    threads = [threading.Thread(target=client, args=(ci,))
+               for ci in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall_us = (time.perf_counter() - t0) * 1e6
+    m = svc.metrics()
+    svc.close()
+    solo = ClusterService(store, max_bucket=max(128, bucket))
+    for per_client in sizes:
+        for s in per_client:
+            solo.score(x[:s])
+    ms = solo.metrics()
+    n_req = sum(len(s) for s in sizes)
+    return [(
+        "cluster_service_coalesced_fill", wall_us / n_req,
+        f"fill={m['bucket_fill_ratio']:.3f};"
+        f"solo_fill={ms['bucket_fill_ratio']:.3f};"
+        f"reqs_per_group={m['requests_per_group']:.2f};"
+        f"deadline_flushes={m['n_deadline_flushes']}")]
+
+
 def run(n_train: int = 8192, dim: int = 16, buckets=(8, 64, 512, 4096),
         repeats: int = 20, demo_queries: int = 2000,
+        coalesce_clients: int = 8, coalesce_reqs: int = 25,
         out_path: str | None = None, quiet: bool = False):
-    rows = _steady_state_rows(n_train, dim, buckets, repeats)
+    x, store = _warm_store(n_train, dim)
+    rows = _steady_state_rows(x, store, buckets, repeats)
+    rows += _coalescing_rows(x, store, coalesce_clients, coalesce_reqs)
 
     # demo_queries=0 skips the train-while-serve demo — CI's --quick smoke
     # does, because the workflow runs `repro.launch.serve_clusters --quick`
-    # as its own step; paying for the trainer+audit twice buys nothing.
+    # as its own job; paying for the trainers+audit twice buys nothing.
     if demo_queries > 0:
         cfg = ServeDemoConfig(n=max(1024, n_train // 4), dim=dim, pb=128,
                               train_batch=300, min_queries=demo_queries,
@@ -63,8 +113,10 @@ def run(n_train: int = 8192, dim: int = 16, buckets=(8, 64, 512, 4096),
         rows.append((
             "cluster_service_train_serve_p50",
             rec["p50_latency_ms"] * 1e3,
-            f"qps={rec['qps']:.0f};versions={rec['n_versions_observed']};"
+            f"qps={rec['qps']:.0f};models={rec['n_models']};"
             f"p99_ms={rec['p99_latency_ms']:.2f};"
+            f"fill={rec['bucket_fill_coalesced']:.3f}vs"
+            f"{rec['bucket_fill_solo']:.3f};"
             f"stale_free={rec['zero_stale_reads']};"
             f"parity={rec['serve_train_parity']}"))
     if not quiet:

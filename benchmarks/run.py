@@ -85,8 +85,11 @@ def main(argv=None) -> None:
             buckets=(8, 64) if args.quick else
                     ((8, 64, 512) if args.fast else (8, 64, 512, 4096)),
             repeats=2 if args.quick else (5 if args.fast else 20),
-            # --quick: steady-state only; the CI workflow runs the
-            # train-while-serve demo as its own serve_clusters step
+            coalesce_clients=4 if args.quick else 8,
+            coalesce_reqs=8 if args.quick else 25,
+            # --quick: steady-state + coalescing only; the CI workflow runs
+            # the multi-model train-while-serve demo as its own serve-e2e
+            # job, and the regression gate (check_regress) as its own step
             demo_queries=0 if args.quick else
                          (1000 if args.fast else 2000))
     if want("kernels"):

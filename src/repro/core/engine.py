@@ -336,9 +336,12 @@ class OCCEngine:
         transactions (BP-means) always use the Gram-carry scan.
       mesh / data_axis: optional device mesh; each epoch's points are
         sharded over `data_axis` while the validation scan is replicated.
-      publish: optional hook `publish(result, n_seen=..., epochs=...)`
-        called after every committed pass (run / partial_fit / flush) —
-        the train→serve publication point (`SnapshotStore.publish_pass`).
+      publish: optional hook `publish(result, n_seen=..., epochs=...,
+        cap_est=...)` called after every committed pass (run / partial_fit
+        / flush) — the train→serve publication point
+        (`SnapshotStore.publish_pass`).  `cap_est` is the adaptive-cap
+        estimator at publish time (None when not adaptive), persisted into
+        snapshots so `restore()` resumes with a warm cap.
     """
 
     def __init__(self, transaction: OCCTransaction, pb: int,
@@ -447,7 +450,8 @@ class OCCEngine:
                              cold=cold, mesh=self.mesh)
         if self.publish is not None:
             self.publish(res, n_seen=x.shape[0],
-                         epochs=res.stats.proposed.shape[0])
+                         epochs=res.stats.proposed.shape[0],
+                         cap_est=self._cap_est)
         return res
 
     def refine(self, pool: CenterPool, x: jnp.ndarray, assign: Any) -> CenterPool:
@@ -498,6 +502,27 @@ class OCCEngine:
         self._pool, self._n_seen, self._stat_chunks = None, 0, []
         self._epoch_base = 0
         self._carry_x = self._carry_state = None
+
+    def restore(self, snapshot, *, k_max: int) -> None:
+        """Resume a stream from a published `serving.ModelSnapshot`.
+
+        Seeds the pool (re-expanded to the trainer's (k_max, D) buffer —
+        rows beyond `count` are zero, exactly as in the live pool), the
+        global point/epoch counters, AND the adaptive-cap estimator the
+        snapshot persisted (`cap_est`), so the restored stream's very
+        first pass runs at the warm Thm-3.3 cap instead of paying a
+        full-width burn-in pass.  The stream continues from the snapshot's
+        `n_seen` — points after the last publish (a pending carry at crash
+        time) must be re-sent by the caller.  A restored stream is
+        bit-identical to the uninterrupted one from the restore point on
+        (adaptive caps never change results — §11's full-width retry)."""
+        if self._pool is not None or self._n_seen:
+            raise ValueError("restore() requires a fresh engine/stream")
+        self._pool = snapshot.to_pool(k_max)
+        self._n_seen = snapshot.n_seen
+        self._epoch_base = snapshot.epochs
+        if self.adaptive and snapshot.cap_est is not None:
+            self._cap_est = snapshot.cap_est
 
     def _empty_stream_result(self, x1: jnp.ndarray, s1: Any) -> OCCPassResult:
         """A zero-point OCCPassResult (pool unchanged, length-0 outputs).
@@ -566,7 +591,7 @@ class OCCEngine:
         self._epoch_base += res.stats.proposed.shape[0]
         if self.publish is not None:
             self.publish(res, n_seen=self.n_processed,
-                         epochs=self._epoch_base)
+                         epochs=self._epoch_base, cap_est=self._cap_est)
         return res
 
     def partial_fit(self, xb: jnp.ndarray, *, state: Any = None,

@@ -2,3 +2,4 @@ from repro.distributed.shardings import (
     ShardCtx, shard_ctx, current_ctx, constrain, batch_spec, param_specs,
     input_shardings,
 )
+from repro.distributed.replication import DeltaChannel, make_follower

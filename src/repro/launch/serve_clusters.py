@@ -1,23 +1,36 @@
-"""Train-on-stream, serve-while-training: the first full train→publish→serve
-pipeline (DESIGN.md §10).
+"""Train-on-stream, serve-while-training: the full train→publish→serve
+pipeline, scaled out to many tenants (DESIGN.md §10/§12).
 
-A trainer thread streams batches through `OCCEngine.partial_fit` (arbitrary
-batch lengths — the partial-epoch carry keeps the stream bit-identical to a
-one-shot run) and publishes an immutable `ModelSnapshot` per committed
-pass.  Concurrently, the main thread runs a load generator against a
-`ClusterService`: ragged request sizes, pad-to-bucket microbatching, one
-jitted dispatch per microbatch, atomic hot-swap to newer versions between
-requests.
+Per model, a trainer thread streams batches through `OCCEngine.partial_fit`
+(arbitrary batch lengths — the partial-epoch carry keeps the stream
+bit-identical to a one-shot run) and publishes one immutable version per
+committed pass through the DELTA log (O(ΔK·D) per publish), mirrored into
+an eager shadow store so the audit can prove delta-materialize ==
+eager-copy bit-identity on the live stream.  Concurrently, a pool of
+client threads runs a load generator against a `ModelRouter` fronting all
+tenants with admission-queue coalescing enabled: ragged request sizes,
+concurrent small requests merged into fuller microbatches under the
+deadline-or-full policy, one jitted dispatch per microbatch, atomic
+hot-swap per model between requests.
 
 After the run, every response is audited:
-  * zero stale reads — replaying the tagged version's snapshot through the
-    service's own jitted step reproduces each response bit-exactly, and
-    observed versions are monotone;
-  * serve == train — response labels are bit-identical to engine labels
-    (`core.occ.nearest_center` on the tagged snapshot's pool);
-  * ≥ 3 versions hot-swapped through, ≥ 10k queries (full mode).
+  * zero stale reads — every coalesced dispatch is replayed from its
+    tagged (model, version) snapshot through the service's own jitted
+    step (`DispatchRecord` holds the exact padded inputs) and must
+    reproduce each member response bit-exactly; versions observed by any
+    single client are monotone per model;
+  * multi-model isolation + serve == train — response labels are
+    bit-identical to engine labels (`core.occ.nearest_center` on the
+    tagged model's snapshot pool), per (model, version);
+  * delta publication — every published version materializes
+    bit-identically from the delta log and from the eager shadow copy;
+  * coalescing pays — the same request trace replayed solo (no admission
+    queue) must show a WORSE bucket-fill ratio than the coalesced run;
+  * ≥ 2 models, ≥ `min_versions` hot-swapped through per model,
+    ≥ `min_queries` total rows (full mode: 10k).
 
-p50/p99 latency and QPS land in BENCH_cluster_service.json.
+p50/p99 latency, QPS, and both fill ratios land in
+BENCH_cluster_service.json.
 
   PYTHONPATH=src python -m repro.launch.serve_clusters [--quick]
 """
@@ -25,7 +38,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -36,7 +48,7 @@ import numpy as np
 from repro.core import DPMeansTransaction, OCCEngine
 from repro.core.occ import nearest_center
 from repro.data import dp_stick_breaking_data
-from repro.serving import ClusterService, SnapshotStore, next_bucket
+from repro.serving import ClusterService, ModelRouter, SnapshotStore
 from repro.serving.cluster_service import _assign_step
 
 __all__ = ["ServeDemoConfig", "run_demo"]
@@ -44,16 +56,24 @@ __all__ = ["ServeDemoConfig", "run_demo"]
 
 @dataclass
 class ServeDemoConfig:
-    n: int = 8192              # stream length
+    n: int = 8192              # stream length PER MODEL
     dim: int = 16
+    n_models: int = 2
     lam: float = 4.0
     k_max: int = 512
     pb: int = 128              # points per OCC epoch
     train_batch: int = 384     # NOT a multiple of pb: exercises the carry
-    min_queries: int = 10_000  # load-generator floor
-    max_request: int = 100     # ragged request sizes in [1, max_request]
+    min_queries: int = 10_000  # load-generator floor (rows, all models)
+    max_request: int = 32      # ragged request sizes in [1, max_request]
+    # Closed-loop load: the queue depth per model is ~ n_clients/n_models
+    # blocked requests, so the coalesce bucket is sized to that row supply
+    # (a bucket far above it turns every flush into a half-empty deadline
+    # flush and coalescing stops paying).
+    n_clients: int = 16        # concurrent load-generator threads
+    coalesce_bucket: int = 64
+    coalesce_delay_ms: float = 10.0
     backend: str = "auto"      # service kernel backend
-    min_versions: int = 3      # hot-swap floor the service must observe
+    min_versions: int = 3      # hot-swap floor per model under load
     seed: int = 0
     out_path: str | None = None
     quiet: bool = False
@@ -61,149 +81,286 @@ class ServeDemoConfig:
 
 @dataclass
 class _Trace:
-    """One served request, as recorded by the load generator."""
+    """One served request, as recorded by a load-generator client."""
+    model: str
     version: int
     q_lo: int
     q_hi: int
     labels: np.ndarray
     scores: np.ndarray
     bucket: int
+    group: int
+    offset: int
     latency_s: float = 0.0
-    order: int = 0
-    extra: dict = field(default_factory=dict)
+    client: int = 0
 
 
-def _trainer(eng: OCCEngine, batches, svc: ClusterService,
+@dataclass
+class _Tenant:
+    name: str
+    x: jnp.ndarray
+    engine: OCCEngine
+    store: SnapshotStore          # the router's delta store
+    shadow: SnapshotStore         # eager shadow for the delta audit
+    batches: list = field(default_factory=list)
+
+
+def _trainer(tn: _Tenant, svc: ClusterService,
              pace_microbatches: int = 2, timeout_s: float = 5.0):
     """Stream batches through partial_fit; between publishes, wait until the
     service has answered a couple more microbatches so every version is
     actually *observed* under load (deterministic interleaving, no sleeps
     tuned to machine speed)."""
-    for xb in batches:
+    for xb in tn.batches:
         seen = svc.n_microbatches
-        eng.partial_fit(xb)
+        tn.engine.partial_fit(xb)
         deadline = time.perf_counter() + timeout_s
         while (svc.n_microbatches < seen + pace_microbatches
                and time.perf_counter() < deadline):
             time.sleep(0.001)
-    eng.flush()
+    tn.engine.flush()
+
+
+def _make_tenant(name: str, i: int, cfg: ServeDemoConfig,
+                 router: ModelRouter) -> _Tenant:
+    x, _, _ = dp_stick_breaking_data(cfg.n, seed=cfg.seed + 17 * i,
+                                     dim=cfg.dim)
+    x = jnp.asarray(x)
+    store = router.add_model(name, snapshot_capacity=256, delta=True)
+    shadow = SnapshotStore(capacity=256)
+
+    def publish(res, **kw):
+        store.publish_pass(res, **kw)
+        shadow.publish_pass(res, **kw)
+
+    eng = OCCEngine(
+        DPMeansTransaction(cfg.lam * (1.0 + 0.25 * i), k_max=cfg.k_max),
+        pb=cfg.pb, validate_cap="adaptive", publish=publish)
+    batches = [x[j:j + cfg.train_batch]
+               for j in range(0, cfg.n, cfg.train_batch)]
+    return _Tenant(name, x, eng, store, shadow, batches)
 
 
 def run_demo(cfg: ServeDemoConfig) -> dict:
-    x, _, _ = dp_stick_breaking_data(cfg.n, seed=cfg.seed, dim=cfg.dim)
-    x = jnp.asarray(x)
-    rng = np.random.default_rng(cfg.seed + 1)
+    assert cfg.n_models >= 2, "the scale-out audit needs >= 2 tenants"
+    assert cfg.max_request <= cfg.coalesce_bucket
+    router = ModelRouter(backend=cfg.backend, coalesce=True,
+                         coalesce_bucket=cfg.coalesce_bucket,
+                         coalesce_delay_ms=cfg.coalesce_delay_ms,
+                         audit_log=True,
+                         max_bucket=max(128, cfg.coalesce_bucket))
+    names = [chr(ord("a") + i) for i in range(cfg.n_models)]
+    tenants = {nm: _make_tenant(nm, i, cfg, router)
+               for i, nm in enumerate(names)}
 
-    store = SnapshotStore(capacity=256)   # retain all versions for the audit
-    eng = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max), pb=cfg.pb,
-                    publish=store.publish_pass)
-    svc = ClusterService(store, backend=cfg.backend,
-                         max_bucket=next_bucket(cfg.max_request, lo=128))
+    # First batch per tenant before any client starts, so every model has a
+    # version (and the jit caches warm under measurement, as in production).
+    for tn in tenants.values():
+        tn.engine.partial_fit(tn.batches[0])
+        tn.batches = tn.batches[1:]
 
-    batches = [x[i:i + cfg.train_batch]
-               for i in range(0, cfg.n, cfg.train_batch)]
-    # First batch before starting the thread so the service has a version
-    # (and the jit caches warm under measurement, as in production).
-    eng.partial_fit(batches[0])
-    trainer = threading.Thread(
-        target=_trainer, args=(eng, batches[1:], svc), daemon=True)
+    trainers = [threading.Thread(target=_trainer,
+                                 args=(tn, router.service(tn.name)),
+                                 daemon=True)
+                for tn in tenants.values()]
 
     # ---------------------------------------------------------------- serve
-    traces: list[_Trace] = []
+    traces: list[list[_Trace]] = [[] for _ in range(cfg.n_clients)]
+    stop = threading.Event()
+
+    def client(ci: int):
+        rng = np.random.default_rng(cfg.seed + 1000 + ci)
+        mine = traces[ci]
+        while not stop.is_set():
+            nm = names[int(rng.integers(0, cfg.n_models))]
+            tn = tenants[nm]
+            size = int(rng.integers(1, cfg.max_request + 1))
+            lo = int(rng.integers(0, cfg.n - size))
+            t0 = time.perf_counter()
+            resp = router.score(nm, tn.x[lo:lo + size])
+            dt = time.perf_counter() - t0
+            mine.append(_Trace(nm, resp.version, lo, lo + size, resp.labels,
+                               resp.scores, resp.bucket, resp.group,
+                               resp.offset, dt, ci))
+
     t_serve0 = time.perf_counter()
-    trainer.start()
-    while (trainer.is_alive() or len(traces) == 0
-           or sum(t.q_hi - t.q_lo for t in traces) < cfg.min_queries
-           or len({t.version for t in traces}) < cfg.min_versions):
-        size = int(rng.integers(1, cfg.max_request + 1))
-        lo = int(rng.integers(0, cfg.n - size))
-        q = x[lo:lo + size]
-        t0 = time.perf_counter()
-        resp = svc.score(q)
-        dt = time.perf_counter() - t0
-        traces.append(_Trace(resp.version, lo, lo + size, resp.labels,
-                             resp.scores, resp.bucket, dt, len(traces)))
-        if time.perf_counter() - t_serve0 > 120:
+    for t in trainers:
+        t.start()
+    clients = [threading.Thread(target=client, args=(ci,), daemon=True)
+               for ci in range(cfg.n_clients)]
+    for c in clients:
+        c.start()
+
+    def floors_met() -> bool:
+        rows = sum(t.q_hi - t.q_lo for ts in traces for t in ts)
+        if rows < cfg.min_queries:
+            return False
+        for nm in names:
+            seen = {t.version for ts in traces for t in ts if t.model == nm}
+            if len(seen) < cfg.min_versions:
+                return False
+        return True
+
+    while any(t.is_alive() for t in trainers) or not floors_met():
+        time.sleep(0.005)
+        if time.perf_counter() - t_serve0 > 180:
             break    # safety valve; the audit below still decides pass/fail
+    for t in trainers:
+        t.join()
+    stop.set()
+    for c in clients:
+        c.join()
     serve_wall = time.perf_counter() - t_serve0
-    trainer.join()
+    all_traces = [t for ts in traces for t in ts]
+    n_rows = sum(t.q_hi - t.q_lo for t in all_traces)
 
     # ---------------------------------------------------------------- audit
-    versions = [t.version for t in traces]
-    assert versions == sorted(versions), "stale read: version went backwards"
-    n_versions = len(set(versions))
-    assert n_versions >= cfg.min_versions, (
-        f"only {n_versions} versions observed under load")
+    # Versions monotone per (client, model) — each client's requests are
+    # sequential, so the hot-swap point can only move forward for it.
+    for ts in traces:
+        last: dict[str, int] = {}
+        for t in ts:
+            assert t.version >= last.get(t.model, -1), \
+                "stale read: version went backwards for a client"
+            last[t.model] = t.version
+    versions_observed = {nm: sorted({t.version for t in all_traces
+                                     if t.model == nm}) for nm in names}
+    for nm, vs in versions_observed.items():
+        assert len(vs) >= cfg.min_versions, (
+            f"model {nm}: only {len(vs)} versions observed under load")
 
+    # Zero stale reads: replay every coalesced dispatch from its tagged
+    # (model, version) snapshot through the service's own jitted step —
+    # exact padded inputs from the audit log, bit-exact member slices.
+    by_group: dict[tuple[str, int], list[_Trace]] = {}
+    for t in all_traces:
+        by_group.setdefault((t.model, t.group), []).append(t)
     stale = parity = 0
-    for t in traces:
-        snap = store.get(t.version)
-        assert snap is not None, "audited version evicted — grow the ring"
-        # zero stale reads: replaying the *tagged* snapshot through the
-        # service's own jitted step must reproduce the response bit-exactly.
-        nq = t.q_hi - t.q_lo
-        qp = jnp.concatenate([x[t.q_lo:t.q_hi],
-                              jnp.zeros((t.bucket - nq, cfg.dim), x.dtype)], 0)
-        d2, idx = _assign_step(snap.centers, snap.mask, np.int32(snap.count),
-                               qp, np.int32(nq), backend=cfg.backend)
-        if not (np.array_equal(t.labels, np.asarray(idx[:nq]))
-                and np.array_equal(t.scores, np.asarray(d2[:nq]))):
-            stale += 1
-        # serve == train: labels bit-identical to engine labels on the
-        # same version (nearest_center on the snapshot's pool).
-        _, ide = nearest_center(snap.as_pool(), x[t.q_lo:t.q_hi],
-                                backend="ref")
-        if not np.array_equal(t.labels, np.asarray(ide)):
-            parity += 1
+    n_replayed = 0
+    for nm in names:
+        tn = tenants[nm]
+        svc = router.service(nm)
+        for rec in svc.audit:
+            members = by_group.get((nm, rec.group), [])
+            if not members:
+                continue
+            snap = tn.store.get(rec.version)
+            assert snap is not None, "audited version evicted — grow the ring"
+            d2, idx = _assign_step(snap.centers, snap.mask,
+                                   np.int32(snap.count), jnp.asarray(rec.x),
+                                   np.int32(rec.n_valid), backend=cfg.backend)
+            d2, idx = np.asarray(d2), np.asarray(idx)
+            for t in members:
+                sl = slice(t.offset, t.offset + (t.q_hi - t.q_lo))
+                if not (np.array_equal(t.labels, idx[sl])
+                        and np.array_equal(t.scores, d2[sl])):
+                    stale += 1
+                n_replayed += 1
+        # serve == train + isolation: labels bit-identical to engine labels
+        # on the tagged MODEL's snapshot (nearest_center on its pool).
+        for t in (t for t in all_traces if t.model == nm):
+            snap = tn.store.get(t.version)
+            _, ide = nearest_center(snap.as_pool(), tn.x[t.q_lo:t.q_hi],
+                                    backend="ref")
+            if not np.array_equal(t.labels, np.asarray(ide)):
+                parity += 1
+    assert n_replayed == len(all_traces), "audit log lost a dispatch"
     assert stale == 0, f"{stale} responses not reproducible from their tag"
     assert parity == 0, f"{parity} responses diverge from engine labels"
 
-    # stream == one-shot (the carry satellite, end to end)
-    one = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max),
-                    pb=cfg.pb).run(x)
-    assert int(one.pool.count) == int(eng.pool.count)
-    np.testing.assert_array_equal(np.asarray(one.pool.centers),
-                                  np.asarray(eng.pool.centers))
+    # Delta publication: every version materializes bit-identically from
+    # the delta log and from the eager shadow copy of the same pass.
+    for nm in names:
+        tn = tenants[nm]
+        assert tn.store.versions() == tn.shadow.versions()
+        for v in tn.store.versions():
+            sd, se = tn.store.get(v), tn.shadow.get(v)
+            assert sd.count == se.count and sd.capacity == se.capacity
+            np.testing.assert_array_equal(np.asarray(sd.centers),
+                                          np.asarray(se.centers))
 
-    lat = np.asarray([t.latency_s for t in traces])
-    m = svc.metrics()
+    # stream == one-shot (the carry satellite, end to end; tenant 0)
+    tn0 = tenants[names[0]]
+    one = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max),
+                    pb=cfg.pb).run(tn0.x)
+    assert int(one.pool.count) == int(tn0.engine.pool.count)
+    np.testing.assert_array_equal(np.asarray(one.pool.centers),
+                                  np.asarray(tn0.engine.pool.centers))
+
+    # Coalescing pays: replay the same request trace solo (no admission
+    # queue) against the same stores and compare bucket-fill ratios.
+    fill_coalesced = router.metrics()["bucket_fill_ratio"]
+    solo = {nm: ClusterService(tenants[nm].store, backend=cfg.backend,
+                               min_bucket=8,
+                               max_bucket=max(128, cfg.coalesce_bucket))
+            for nm in names}
+    for t in all_traces:
+        solo[t.model].score(tenants[t.model].x[t.q_lo:t.q_hi])
+    solo_rows = sum(s.n_queries for s in solo.values())
+    solo_padded = sum(s.n_padded_rows for s in solo.values())
+    fill_solo = solo_rows / max(1, solo_padded)
+    assert fill_coalesced > fill_solo, (
+        f"coalescing did not improve bucket fill: "
+        f"{fill_coalesced:.3f} vs solo {fill_solo:.3f}")
+
+    lat = np.asarray([t.latency_s for t in all_traces])
+    m = router.metrics()
     record = {
         "bench": "cluster_service",
-        "n_train": cfg.n, "pb": cfg.pb, "train_batch": cfg.train_batch,
-        "k_final": int(eng.pool.count),
+        "n_models": cfg.n_models,
+        "n_train_per_model": cfg.n, "pb": cfg.pb,
+        "train_batch": cfg.train_batch,
+        "k_final": {nm: int(tenants[nm].engine.pool.count) for nm in names},
         "n_queries": m["n_queries"],
+        "n_requests": m["n_requests"],
         "n_microbatches": m["n_microbatches"],
-        "dispatches_per_microbatch": m["dispatches_per_microbatch"],
         "query_step_compiles": m["query_step_compiles"],
-        "n_versions_published": len(store),
-        "n_versions_observed": n_versions,
-        "n_hot_swaps": m["n_swaps"],
+        "n_versions_published": {nm: len(tenants[nm].store) for nm in names},
+        "n_versions_observed": {nm: len(versions_observed[nm])
+                                for nm in names},
+        "delta_rows_published": {nm: tenants[nm].store.delta_rows_published
+                                 for nm in names},
         "zero_stale_reads": stale == 0,
         "serve_train_parity": parity == 0,
-        "qps": m["n_queries"] / serve_wall,
+        "bucket_fill_coalesced": fill_coalesced,
+        "bucket_fill_solo": fill_solo,
+        "requests_per_group": {
+            nm: m["models"][nm]["requests_per_group"] for nm in names},
+        "n_deadline_flushes": {
+            nm: m["models"][nm]["n_deadline_flushes"] for nm in names},
+        "cap_trace_latest": {
+            nm: m["models"][nm]["cap_trace"] for nm in names},
+        "qps": n_rows / serve_wall,
         "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
-        "bucket_hist": m["bucket_hist"],
     }
+    router.close()
     if cfg.out_path is not None:
         with open(cfg.out_path, "w") as f:
             json.dump(record, f, indent=2)
     if not cfg.quiet:
-        print(f"trained K={record['k_final']} over {cfg.n} streamed points "
-              f"({len(store)} versions published)")
-        print(f"served {record['n_queries']} queries in "
-              f"{record['n_microbatches']} microbatches "
-              f"({record['dispatches_per_microbatch']:.2f} dispatches each) "
-              f"across {n_versions} hot-swapped versions")
+        ks = ", ".join(f"{nm}:K={record['k_final'][nm]}" for nm in names)
+        print(f"trained {cfg.n_models} models ({ks}) over {cfg.n} streamed "
+              f"points each; versions published: "
+              f"{record['n_versions_published']}")
+        print(f"served {record['n_queries']} rows / {record['n_requests']} "
+              f"requests in {record['n_microbatches']} microbatches across "
+              f"{ {nm: len(v) for nm, v in versions_observed.items()} } "
+              f"hot-swapped versions")
+        print(f"bucket fill: coalesced={fill_coalesced:.3f} vs "
+              f"solo={fill_solo:.3f}  "
+              f"(requests/group: {record['requests_per_group']})")
         print(f"QPS={record['qps']:.0f}  p50={record['p50_latency_ms']:.2f}ms"
               f"  p99={record['p99_latency_ms']:.2f}ms")
-        print("zero stale reads: True   serve==train bit-parity: True")
+        print("zero stale reads: True   serve==train bit-parity: True   "
+              "delta==eager bit-identity: True")
     return record
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--models", type=int, default=2)
     ap.add_argument("--pb", type=int, default=128)
     ap.add_argument("--train-batch", type=int, default=384)
     ap.add_argument("--queries", type=int, default=10_000)
@@ -213,12 +370,15 @@ def main(argv=None):
     ap.add_argument("--out", default=None,
                     help="write BENCH_cluster_service.json here")
     args = ap.parse_args(argv)
-    cfg = ServeDemoConfig(n=args.n, pb=args.pb, train_batch=args.train_batch,
+    cfg = ServeDemoConfig(n=args.n, n_models=args.models, pb=args.pb,
+                          train_batch=args.train_batch,
                           min_queries=args.queries, backend=args.backend,
                           out_path=args.out)
     if args.quick:
-        cfg = ServeDemoConfig(n=1024, pb=64, train_batch=200, dim=8,
-                              min_queries=400, max_request=50, k_max=256,
+        cfg = ServeDemoConfig(n=1024, n_models=max(2, args.models), pb=64,
+                              train_batch=200, dim=8, min_queries=600,
+                              max_request=16, k_max=256, n_clients=12,
+                              coalesce_bucket=64, coalesce_delay_ms=8.0,
                               backend=args.backend, out_path=args.out)
     run_demo(cfg)
 

@@ -3,14 +3,23 @@
 `SnapshotStore` + `ClusterService` are the paper-side serving stack
 (DESIGN.md §10): OCC training publishes immutable `ModelSnapshot` versions;
 the read-only service answers batched assign/score/topk queries against
-them with pad-to-bucket microbatching and atomic hot-swap.
+them with pad-to-bucket microbatching and atomic hot-swap.  The §12
+scale-out layer adds `ModelRouter` (many tenants behind one service with
+shared jit caches), delta snapshot publication (`CenterDelta`/`CenterLog`,
+O(ΔK·D) publishes + the replication wire format), and admission-queue
+coalescing (`ClusterService(coalesce=True)`).
 """
 from repro.serving.engine import ServeEngine
 from repro.serving.snapshot import (
-    ModelSnapshot, SnapshotStore, freeze_snapshot, next_bucket,
+    CenterDelta, CenterLog, DeltaSnapshot, ModelSnapshot, SnapshotStore,
+    freeze_snapshot, next_bucket,
 )
-from repro.serving.cluster_service import ClusterService, ServeResponse
+from repro.serving.cluster_service import (
+    ClusterService, DispatchRecord, ServeResponse,
+)
+from repro.serving.router import ModelRouter
 
 __all__ = ["ServeEngine", "ModelSnapshot", "SnapshotStore",
            "freeze_snapshot", "next_bucket", "ClusterService",
-           "ServeResponse"]
+           "ServeResponse", "ModelRouter", "CenterDelta", "CenterLog",
+           "DeltaSnapshot", "DispatchRecord"]

@@ -1,4 +1,4 @@
-"""Batched cluster-assignment service over published snapshots (DESIGN.md §10).
+"""Batched cluster-assignment service over published snapshots (§10/§12).
 
 The read-only data plane of the train/serve split: a `ClusterService`
 answers `assign` / `score` / `topk` queries against the newest
@@ -17,12 +17,28 @@ Microbatching & jit-cache policy:
     -1) and are sliced off before the response, so they can never alias a
     real answer.
 
+Admission queue (DESIGN.md §12): `coalesce=True` puts small requests
+through an admission queue that merges CONCURRENT requests into one
+fuller microbatch — the CYCLADES move of batching conflict-free work into
+fuller units, applied to the serving plane: the ONE-dispatch-per-
+microbatch invariant then amortizes across requests (and across tenants,
+via the router) instead of padding each tiny request up to its own
+bucket.  Flush policy is deadline-or-full: a group is dispatched the
+moment its rows would fill `coalesce_bucket`, or when the OLDEST queued
+request has waited `coalesce_delay_ms` — a stalled or absent partner can
+never hold a request past its latency budget.  Every request in a group
+is answered from the ONE snapshot pinned at flush time and tagged with
+its version (and group/offset), so responses still replay bit-exactly
+from their tagged version; requests larger than the coalesce bucket
+bypass the queue onto the solo path unchanged.
+
 Hot-swap semantics: the service re-reads `store.latest()` exactly once per
 microbatch; the whole microbatch is computed against that one immutable
 snapshot and the response is tagged with its version.  Swapping is a single
 reference read — no locks on the query path, no torn reads (immutability
 contract, serving/snapshot.py), and versions observed by any single client
-are monotone because the store's versions are.
+are monotone because the store's versions are (a client's next request can
+only be flushed after its previous one resolved).
 
 Sharding (optional `mesh`): snapshots are placed replicated
 (`shardings.serve_snapshot_sharding`) and query rows are sharded over the
@@ -32,6 +48,8 @@ center-side collectives.
 from __future__ import annotations
 
 import functools
+import threading
+import time
 from typing import Any, NamedTuple
 
 import jax
@@ -41,19 +59,39 @@ import numpy as np
 from repro.kernels import ops as _kops
 from repro.serving.snapshot import ModelSnapshot, SnapshotStore, next_bucket
 
-__all__ = ["ClusterService", "ServeResponse"]
+__all__ = ["ClusterService", "ServeResponse", "DispatchRecord"]
 
 
 class ServeResponse(NamedTuple):
-    """One microbatch's answer, tagged with the version that produced it."""
+    """One request's answer, tagged with everything needed to replay it."""
     version: int            # ModelSnapshot.version used for every row
     labels: np.ndarray      # (B,) int32 — assigned center / (B, k) for topk
     scores: np.ndarray | None   # (B,) squared distance / (B, k) for topk
     bucket: int             # padded microbatch size actually dispatched
+    model: str | None = None    # owning model (set when served via a router)
+    group: int = -1         # coalesced dispatch id (-1: solo dispatch)
+    offset: int = 0         # this request's first row within the dispatch
+
+
+class DispatchRecord(NamedTuple):
+    """Audit-log entry: one jitted dispatch, exactly as it ran.  Replaying
+    `x` (same padded shape, same rows) through the service's own jitted
+    step against the version-`version` snapshot must reproduce every
+    member response bit-exactly — the zero-stale-read proof for coalesced
+    and solo dispatches alike."""
+    group: int
+    version: int
+    kind: str               # "score" | "topk"
+    k: int                  # top-k width (0 for score)
+    bucket: int
+    n_valid: int
+    x: np.ndarray           # (bucket, D) — the exact padded dispatch input
+    spans: tuple[tuple[int, int], ...]   # member request row ranges
 
 
 # Trace counter: incremented only when a query step is (re)compiled.  Lets
-# tests assert hot-swapping versions does NOT retrace (warm-cache contract).
+# tests assert hot-swapping versions does NOT retrace (warm-cache contract)
+# and that equal-shape tenants share one compilation (router contract).
 _QUERY_TRACES = 0
 
 
@@ -74,7 +112,9 @@ def _constrained(centers, mask, xq, mesh, data_axis):
 def _assign_step(centers, mask, count, xq, n_valid, *, backend,
                  mesh=None, data_axis="data"):
     """THE jitted query step: one dispatch per microbatch, cache-keyed on
-    (bucket, capacity, backend) — never on the version."""
+    (bucket, capacity, backend) — never on the version, and never on the
+    MODEL: the cache is module-level, so router tenants with equal
+    capacity buckets share compilations."""
     global _QUERY_TRACES
     _QUERY_TRACES += 1
     centers, mask, xq = _constrained(centers, mask, xq, mesh, data_axis)
@@ -93,6 +133,107 @@ def _topk_step(centers, mask, count, xq, n_valid, *, k, backend,
                             n_valid=n_valid, backend=backend)
 
 
+class _Pending:
+    """One admitted request waiting for its coalesced dispatch."""
+    __slots__ = ("x", "kind", "k", "want_scores", "t", "event", "out", "err")
+
+    def __init__(self, x, kind, k, want_scores):
+        self.x, self.kind, self.k = x, kind, k
+        self.want_scores = want_scores
+        self.t = time.perf_counter()
+        self.event = threading.Event()
+        self.out = self.err = None
+
+
+class _AdmissionQueue:
+    """Deadline-or-full request coalescer (one flusher thread per service).
+
+    Requests queue FIFO; the flusher drains the longest prefix of the
+    oldest request's (kind, k) group whose rows fit `bucket`, dispatching
+    either when the group would fill the bucket or when the oldest queued
+    request has waited `delay_s`.  Different (kind, k) groups flush as
+    separate dispatches (they are different jit programs) but each gets
+    the same deadline discipline.
+    """
+
+    def __init__(self, service: "ClusterService", bucket: int, delay_s: float):
+        self._svc = service
+        self.bucket = bucket
+        self.delay_s = delay_s
+        self._q: list[_Pending] = []
+        self._cond = threading.Condition()
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._loop, daemon=True,
+            name=f"admission-{service.name or id(service)}")
+        self._thread.start()
+
+    def submit(self, x, kind: str, k: int, want_scores: bool,
+               timeout_s: float = 60.0) -> ServeResponse:
+        item = _Pending(x, kind, k, want_scores)
+        with self._cond:
+            self._q.append(item)
+            self._cond.notify_all()
+        if not item.event.wait(timeout_s):
+            raise RuntimeError("admission queue flush timed out")
+        if item.err is not None:
+            raise item.err
+        return item.out
+
+    def close(self) -> None:
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._thread.join(timeout=5)
+
+    # ---------------------------------------------------------- flusher
+    def _group_rows(self) -> int:
+        key = (self._q[0].kind, self._q[0].k)
+        return sum(it.x.shape[0] for it in self._q
+                   if (it.kind, it.k) == key)
+
+    def _drain_locked(self) -> list[_Pending]:
+        key = (self._q[0].kind, self._q[0].k)
+        take, total = [], 0
+        for it in list(self._q):
+            if (it.kind, it.k) != key:
+                continue
+            if take and total + it.x.shape[0] > self.bucket:
+                break          # never overshoot the bucket once non-empty
+            take.append(it)
+            total += it.x.shape[0]
+            self._q.remove(it)
+        return take
+
+    def _loop(self) -> None:
+        while True:
+            with self._cond:
+                while not self._q and not self._stop:
+                    self._cond.wait()
+                if self._stop:
+                    for it in self._q:
+                        it.err = RuntimeError("service closed")
+                        it.event.set()
+                    return
+                deadline = self._q[0].t + self.delay_s
+                while self._group_rows() < self.bucket:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0 or self._stop:
+                        break
+                    self._cond.wait(remaining)
+                    if not self._q:
+                        break
+                if not self._q:
+                    continue
+                batch = self._drain_locked()
+            try:
+                self._svc._flush_group(batch)
+            except Exception as e:        # propagate to every waiter
+                for it in batch:
+                    it.err = e
+                    it.event.set()
+
+
 class ClusterService:
     """Serves batched assignment queries from a SnapshotStore.
 
@@ -104,34 +245,64 @@ class ClusterService:
         what makes serve-vs-train bit-parity hold).
       min_bucket / max_bucket: power-of-two request bucket bounds; requests
         larger than max_bucket are split into max_bucket microbatches.
+      name: model tag stamped on responses (set by the router).
+      coalesce / coalesce_bucket / coalesce_delay_ms: admission-queue
+        coalescing — requests of <= coalesce_bucket rows merge into fuller
+        microbatches under the deadline-or-full policy; larger requests
+        take the solo path unchanged.
+      audit_log: retain a `DispatchRecord` per jitted dispatch (exact
+        padded inputs + member spans) so every response can be replayed
+        bit-exactly from its tagged version — the e2e audit surface.
+        Unbounded growth: enable for audits/tests, not steady production.
       mesh / data_axis: optional device mesh for replicated-snapshot /
         sharded-query serving.
     """
 
     def __init__(self, store: SnapshotStore, backend: str = "auto",
                  min_bucket: int = 8, max_bucket: int = 4096,
+                 name: str | None = None,
+                 coalesce: bool = False, coalesce_bucket: int = 64,
+                 coalesce_delay_ms: float = 2.0,
+                 audit_log: bool = False,
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data"):
         assert min_bucket & (min_bucket - 1) == 0, "min_bucket: power of two"
         assert max_bucket & (max_bucket - 1) == 0, "max_bucket: power of two"
+        assert coalesce_bucket & (coalesce_bucket - 1) == 0, \
+            "coalesce_bucket: power of two"
         self.store = store
         self.backend = backend
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
+        self.name = name
+        self.coalesce_bucket = min(coalesce_bucket, max_bucket)
         self.mesh = mesh
         self.data_axis = data_axis
         # observability: one dispatch per microbatch is the contract.
         # n_dispatches is incremented at every jitted-step CALL SITE (not
         # alongside n_microbatches) so the ratio actually measures the
         # contract; _traces0 anchors the process-wide compile counter.
+        # _mlock guards counters: solo dispatches run on caller threads
+        # while coalesced ones run on the flusher thread.
         self.n_queries = 0
+        self.n_requests = 0
         self.n_microbatches = 0
         self.n_dispatches = 0
+        self.n_padded_rows = 0
+        self.n_groups = 0            # coalesced dispatches
+        self.n_group_requests = 0    # requests answered by coalesced ones
+        self.n_deadline_flushes = 0  # groups flushed below the bucket
         self.n_swaps = 0
         self._traces0 = _QUERY_TRACES
         self.bucket_hist: dict[int, int] = {}
         self.version_hist: dict[int, int] = {}
         self._cur_version: int | None = None
+        self._mlock = threading.Lock()
+        self._next_group = 0
+        self.audit: list[DispatchRecord] | None = [] if audit_log else None
+        self._queue = (_AdmissionQueue(self, self.coalesce_bucket,
+                                       coalesce_delay_ms / 1e3)
+                       if coalesce else None)
 
     # ------------------------------------------------------------ internals
     def _take_snapshot(self) -> ModelSnapshot:
@@ -139,10 +310,11 @@ class ClusterService:
         snap = self.store.latest()
         if snap is None:
             raise RuntimeError("no model version published yet")
-        if snap.version != self._cur_version:
-            if self._cur_version is not None:
-                self.n_swaps += 1
-            self._cur_version = snap.version
+        with self._mlock:
+            if snap.version != self._cur_version:
+                if self._cur_version is not None:
+                    self.n_swaps += 1
+                self._cur_version = snap.version
         return snap
 
     def _pad(self, x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
@@ -154,11 +326,19 @@ class ClusterService:
         return x, bucket
 
     def _account(self, snap: ModelSnapshot, n: int, bucket: int) -> None:
-        self.n_queries += n
-        self.n_microbatches += 1
-        self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
-        self.version_hist[snap.version] = (
-            self.version_hist.get(snap.version, 0) + n)
+        with self._mlock:
+            self.n_queries += n
+            self.n_microbatches += 1
+            self.n_padded_rows += bucket
+            self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+            self.version_hist[snap.version] = (
+                self.version_hist.get(snap.version, 0) + n)
+
+    def _record(self, group, snap, kind, k, bucket, n, xp, spans) -> None:
+        if self.audit is not None:
+            self.audit.append(DispatchRecord(
+                group, snap.version, kind, k, bucket, n,
+                np.asarray(xp), tuple(spans)))
 
     def _split(self, x) -> list[jnp.ndarray]:
         x = jnp.asarray(x)
@@ -169,68 +349,144 @@ class ClusterService:
         return [x[i:i + self.max_bucket]
                 for i in range(0, x.shape[0], self.max_bucket)]
 
-    # -------------------------------------------------------------- queries
-    def score(self, x) -> ServeResponse:
-        """Nearest-center label AND squared distance per query row.
-
-        The snapshot is pinned ONCE for the whole request — even when a
-        giant request splits into several max_bucket microbatches, every
-        row is answered by the same version (the one in the tag); the
-        hot-swap point is between requests.
-        """
-        snap = self._take_snapshot()
-        parts_l, parts_s, bucket = [], [], 0
-        for xc in self._split(x):
-            n = xc.shape[0]
-            xp, bucket = self._pad(xc)
+    def _run_step(self, snap, xp, n, kind, k):
+        """One jitted dispatch (the only two call sites of the steps)."""
+        if kind == "topk":
+            d2, idx = _topk_step(
+                snap.centers, snap.mask, np.int32(snap.count), xp,
+                np.int32(n), k=k, backend=self.backend, mesh=self.mesh,
+                data_axis=self.data_axis)
+        else:
             d2, idx = _assign_step(
                 snap.centers, snap.mask, np.int32(snap.count), xp,
                 np.int32(n), backend=self.backend, mesh=self.mesh,
                 data_axis=self.data_axis)
+        with self._mlock:
             self.n_dispatches += 1
-            self._account(snap, n, bucket)
-            parts_l.append(np.asarray(idx[:n]))
-            parts_s.append(np.asarray(d2[:n]))
-        return ServeResponse(snap.version, np.concatenate(parts_l),
-                             np.concatenate(parts_s), bucket)
+        return d2, idx
 
-    def assign(self, x) -> ServeResponse:
-        """Nearest-center label per query row (scores omitted)."""
-        return self.score(x)._replace(scores=None)
-
-    def topk(self, x, k: int = 4) -> ServeResponse:
-        """k nearest centers per query row, distances ascending."""
+    # ----------------------------------------------------------- coalescing
+    def _flush_group(self, items: list[_Pending]) -> None:
+        """Dispatch one coalesced group: ONE snapshot pin, ONE jitted step,
+        per-request slices tagged (version, group, offset)."""
         snap = self._take_snapshot()
+        kind, k = items[0].kind, items[0].k
+        kk = min(k, snap.capacity) if kind == "topk" else 0
+        x = (jnp.concatenate([it.x for it in items], 0)
+             if len(items) > 1 else items[0].x)
+        n = x.shape[0]
+        xp, bucket = self._pad(x)
+        d2, idx = self._run_step(snap, xp, n, kind, kk)
+        self._account(snap, n, bucket)
+        with self._mlock:
+            gid = self._next_group
+            self._next_group += 1
+            self.n_groups += 1
+            self.n_group_requests += len(items)
+            self.n_requests += len(items)
+            if n < self.coalesce_bucket:
+                self.n_deadline_flushes += 1
+        spans, lo = [], 0
+        for it in items:
+            spans.append((lo, lo + it.x.shape[0]))
+            lo += it.x.shape[0]
+        self._record(gid, snap, kind, kk, bucket, n, xp, spans)
+        labels, scores = np.asarray(idx), np.asarray(d2)
+        for it, (lo, hi) in zip(items, spans):
+            it.out = ServeResponse(
+                snap.version, labels[lo:hi],
+                scores[lo:hi] if it.want_scores else None, bucket,
+                model=self.name, group=gid, offset=lo)
+            it.event.set()
+
+    def _coalesced(self, x, kind: str, k: int,
+                   want_scores: bool) -> ServeResponse | None:
+        """Route through the admission queue when eligible, else None."""
+        if self._queue is None:
+            return None
+        x = jnp.asarray(x)
+        if x.ndim == 1:
+            x = x[None, :]
+        if x.shape[0] > self.coalesce_bucket:
+            return None
+        return self._queue.submit(x, kind, k, want_scores)
+
+    def close(self) -> None:
+        """Stop the admission-queue flusher (no-op for solo services)."""
+        if self._queue is not None:
+            self._queue.close()
+            self._queue = None
+
+    # -------------------------------------------------------------- queries
+    def _solo(self, x, kind: str, k: int) -> ServeResponse:
+        """The solo path: this request is its own microbatch (split into
+        max_bucket chunks when giant).  The snapshot is pinned ONCE for the
+        whole request — even when it splits, every row is answered by the
+        same version (the one in the tag); hot-swap is between requests."""
+        snap = self._take_snapshot()
+        kk = min(k, snap.capacity) if kind == "topk" else 0
         parts_l, parts_s, bucket = [], [], 0
         for xc in self._split(x):
             n = xc.shape[0]
             xp, bucket = self._pad(xc)
-            kk = min(k, snap.capacity)
-            d2, idx = _topk_step(
-                snap.centers, snap.mask, np.int32(snap.count), xp,
-                np.int32(n), k=kk, backend=self.backend, mesh=self.mesh,
-                data_axis=self.data_axis)
-            self.n_dispatches += 1
+            d2, idx = self._run_step(snap, xp, n, kind, kk)
             self._account(snap, n, bucket)
+            self._record(-1, snap, kind, kk, bucket, n, xp, [(0, n)])
             parts_l.append(np.asarray(idx[:n]))
             parts_s.append(np.asarray(d2[:n]))
+        with self._mlock:
+            self.n_requests += 1
         return ServeResponse(snap.version, np.concatenate(parts_l),
-                             np.concatenate(parts_s), bucket)
+                             np.concatenate(parts_s), bucket,
+                             model=self.name)
+
+    def score(self, x) -> ServeResponse:
+        """Nearest-center label AND squared distance per query row."""
+        resp = self._coalesced(x, "score", 0, want_scores=True)
+        return resp if resp is not None else self._solo(x, "score", 0)
+
+    def assign(self, x) -> ServeResponse:
+        """Nearest-center label per query row (scores omitted)."""
+        resp = self._coalesced(x, "score", 0, want_scores=False)
+        return (resp if resp is not None
+                else self._solo(x, "score", 0)._replace(scores=None))
+
+    def topk(self, x, k: int = 4) -> ServeResponse:
+        """k nearest centers per query row, distances ascending."""
+        resp = self._coalesced(x, "topk", k, want_scores=True)
+        return resp if resp is not None else self._solo(x, "topk", k)
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> dict[str, Any]:
+        meta = self.store.latest_meta()
         return {
+            "model": self.name,
             "n_queries": self.n_queries,
+            "n_requests": self.n_requests,
             "n_microbatches": self.n_microbatches,
             "n_dispatches": self.n_dispatches,
             "dispatches_per_microbatch":
                 self.n_dispatches / max(1, self.n_microbatches),
+            # admission-queue effectiveness: valid rows per padded row
+            # dispatched — coalescing exists to push this toward 1.0.
+            "bucket_fill_ratio": self.n_queries / max(1, self.n_padded_rows),
+            "n_coalesced_groups": self.n_groups,
+            "n_deadline_flushes": self.n_deadline_flushes,
+            "requests_per_group":
+                self.n_group_requests / max(1, self.n_groups),
             "n_swaps": self.n_swaps,
             # query-step compilations since this service was built
-            # (process-wide counter: exact when one service is live).
-            # Bounded by the distinct (bucket, capacity) pairs — hot swaps
-            # and steady traffic must not grow it.
+            # (process-wide counter: exact when one service is live;
+            # router tenants with equal shapes share compilations, which
+            # is what the router-level counter proves).
             "query_step_compiles": _QUERY_TRACES - self._traces0,
             "versions_served": sorted(self.version_hist),
             "bucket_hist": dict(sorted(self.bucket_hist.items())),
+            # training-side observability surfaced at the serving endpoint:
+            # the adaptive-cap estimator and per-epoch cap trace of the
+            # newest published version (DESIGN.md §11 — closes the
+            # ROADMAP observability loop; no dense materialization).
+            "latest_version": None if meta is None else meta.version,
+            "cap_est": None if meta is None else meta.cap_est,
+            "cap_trace": None if meta is None else meta.cap_trace,
         }

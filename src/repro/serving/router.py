@@ -1,0 +1,150 @@
+"""Multi-model router: many snapshot stores behind one service (§12).
+
+The scale-out front of the serving plane: a `ModelRouter` owns one
+`(SnapshotStore, ClusterService)` pair per named model and routes
+assign/score/topk requests by model name.  The design invariants:
+
+* **Per-model versioning & atomic hot-swap** — each model keeps its own
+  monotone version sequence and its own hot-swap point; publishing to one
+  model can never change another model's responses (isolation is by
+  construction: tenants share NO mutable state, only compiled code).
+* **Shared jit caches across tenants** — the jitted query steps are
+  module-level (`cluster_service._assign_step` / `_topk_step`), cache-keyed
+  on (request bucket, capacity bucket, backend) and never on the model:
+  two tenants whose snapshots land in the same capacity bucket reuse ONE
+  compilation.  `metrics()["query_step_compiles"]` counts compiles since
+  router construction — bounded by the distinct (bucket, capacity) pairs
+  across ALL tenants, not by the tenant count.
+* **Coalescing per model** — with `coalesce=True` every tenant service gets
+  an admission queue (requests against different models can never share a
+  dispatch — the centers differ — so queues are per model; the jit-cache
+  sharing above is what keeps the multi-tenant compile footprint flat).
+* **Replication-ready** — `add_model(delta=True, wire=channel)` publishes
+  through the append-only delta log and emits the `CenterDelta` wire
+  stream (`distributed/replication.py`): a follower router on another host
+  reconstructs every tenant's versions bit-identically.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import jax
+
+from repro.serving import cluster_service as _cs
+from repro.serving.cluster_service import ClusterService, ServeResponse
+from repro.serving.snapshot import SnapshotStore
+
+__all__ = ["ModelRouter"]
+
+
+class ModelRouter:
+    """Routes batched assignment queries to named per-model services.
+
+    Constructor arguments are the shared service defaults; `add_model`
+    accepts per-tenant overrides.  Thread-safe: `add_model` and queries
+    may race (the model map flips atomically under a lock; queries hold a
+    reference to their tenant's service for the duration of the call).
+    """
+
+    def __init__(self, backend: str = "auto", min_bucket: int = 8,
+                 max_bucket: int = 4096, coalesce: bool = False,
+                 coalesce_bucket: int = 64, coalesce_delay_ms: float = 2.0,
+                 audit_log: bool = False,
+                 mesh: jax.sharding.Mesh | None = None,
+                 data_axis: str = "data"):
+        self._defaults = dict(
+            backend=backend, min_bucket=min_bucket, max_bucket=max_bucket,
+            coalesce=coalesce, coalesce_bucket=coalesce_bucket,
+            coalesce_delay_ms=coalesce_delay_ms, audit_log=audit_log,
+            mesh=mesh, data_axis=data_axis)
+        self._services: dict[str, ClusterService] = {}
+        self._lock = threading.Lock()
+        self._traces0 = _cs._QUERY_TRACES
+
+    # ------------------------------------------------------------ model mgmt
+    def add_model(self, name: str, store: SnapshotStore | None = None, *,
+                  snapshot_capacity: int = 16, delta: bool = False,
+                  wire: Any = None, max_model_capacity: int | None = None,
+                  **service_overrides) -> SnapshotStore:
+        """Register a tenant; returns its store (hand `store.publish_pass`
+        to the tenant's `OCCEngine(publish=)`)."""
+        with self._lock:
+            if name in self._services:
+                raise ValueError(f"model {name!r} already registered")
+        if store is None:
+            store = SnapshotStore(capacity=snapshot_capacity, delta=delta,
+                                  model=name, wire=wire,
+                                  max_model_capacity=max_model_capacity)
+        # Construct outside the lock (coalescing services spawn a flusher
+        # thread); re-check under it so a racing duplicate never leaks that
+        # thread — the loser closes its service and raises.
+        svc = ClusterService(store, name=name,
+                             **{**self._defaults, **service_overrides})
+        with self._lock:
+            if name in self._services:
+                svc.close()
+                raise ValueError(f"model {name!r} already registered")
+            self._services[name] = svc
+        return store
+
+    def remove_model(self, name: str) -> None:
+        with self._lock:
+            svc = self._services.pop(name)
+        svc.close()
+
+    def close(self) -> None:
+        with self._lock:
+            svcs = list(self._services.values())
+            self._services.clear()
+        for svc in svcs:
+            svc.close()
+
+    def models(self) -> list[str]:
+        with self._lock:
+            return sorted(self._services)
+
+    def service(self, model: str) -> ClusterService:
+        with self._lock:
+            svc = self._services.get(model)
+        if svc is None:
+            raise KeyError(f"unknown model {model!r}")
+        return svc
+
+    def store(self, model: str) -> SnapshotStore:
+        return self.service(model).store
+
+    def publish_hook(self, model: str):
+        """The tenant's `OCCEngine(publish=...)` target."""
+        return self.store(model).publish_pass
+
+    # --------------------------------------------------------------- queries
+    def score(self, model: str, x) -> ServeResponse:
+        return self.service(model).score(x)
+
+    def assign(self, model: str, x) -> ServeResponse:
+        return self.service(model).assign(x)
+
+    def topk(self, model: str, x, k: int = 4) -> ServeResponse:
+        return self.service(model).topk(x, k=k)
+
+    # --------------------------------------------------------------- metrics
+    def metrics(self) -> dict[str, Any]:
+        with self._lock:
+            svcs = dict(self._services)
+        per_model = {name: svc.metrics() for name, svc in sorted(svcs.items())}
+        return {
+            "models": per_model,
+            "n_models": len(per_model),
+            "n_queries": sum(m["n_queries"] for m in per_model.values()),
+            "n_requests": sum(m["n_requests"] for m in per_model.values()),
+            "n_microbatches": sum(m["n_microbatches"]
+                                  for m in per_model.values()),
+            "bucket_fill_ratio": (
+                sum(m["n_queries"] for m in per_model.values())
+                / max(1, sum(svc.n_padded_rows for svc in svcs.values()))),
+            # compiles since ROUTER construction, across every tenant —
+            # bounded by distinct (bucket, capacity, backend) triples, NOT
+            # by tenant count: the shared-jit-cache proof.
+            "query_step_compiles": _cs._QUERY_TRACES - self._traces0,
+        }

@@ -1,4 +1,4 @@
-"""Immutable model snapshots: the train→serve publication point (DESIGN.md §10).
+"""Immutable model snapshots: the train→serve publication point (DESIGN.md §10/§12).
 
 The serving-side dual of the paper's optimistic write-side protocol,
 following the versioned-parameter-store idea of *Parameter Database* (Goel
@@ -22,20 +22,44 @@ buckets as the model grows, so the service's jitted query steps recompile
 once per (request bucket, capacity bucket) and then stay warm across
 versions — publishing a new version never causes a serve-path recompile
 unless the model actually outgrew its capacity bucket.
+
+Delta publication (DESIGN.md §12): within an engine stream the pool is
+append-only between publishes (the validator only ever appends; `refine`
+is not on the streaming path), so version v+1 differs from v by exactly
+the rows [count_v, count_{v+1}).  `SnapshotStore(delta=True)` exploits
+this: each publish slices ONLY the new rows off the device — O(ΔK·D)
+instead of the O(capacity·D) live-prefix copy — appends them to an
+append-only `CenterLog`, and registers a lazy `DeltaSnapshot` whose
+`materialize()` reconstructs the dense, capacity-bucketed buffers
+bit-identically to the eager copy (rows beyond `count` are zero in the
+pool by construction, so log-prefix + zero-pad IS the eager slice).  The
+emitted `CenterDelta` is the replication wire format: shipping the deltas
+over a channel (`distributed/replication.py`) and `apply_delta`-ing them
+into a follower store reproduces every version bit-identically.
+
+Append-only contract: delta mode trusts that rows below the publish
+watermark did not change since the previous publish.  A caller that
+rewrote the prefix (e.g. an explicit `refine` between passes) must pass
+`rebase=True`, which re-logs the full prefix.  A one-row guard (the last
+previously-published row is re-compared, O(D)) auto-rebases on the common
+violation; `verify=True` upgrades the guard to a full O(count·D) bit-check
+(tests use it — production publishes stay O(ΔK·D)).
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.engine import OCCPassResult
 from repro.core.occ import CenterPool, next_pow2
 
-__all__ = ["ModelSnapshot", "SnapshotStore", "next_bucket", "freeze_snapshot"]
+__all__ = ["ModelSnapshot", "SnapshotStore", "next_bucket", "freeze_snapshot",
+           "CenterDelta", "CenterLog", "DeltaSnapshot"]
 
 _MIN_CAPACITY = 8   # TPU sublane tile: the smallest useful center buffer
 
@@ -64,10 +88,18 @@ class ModelSnapshot:
     epochs: int = 0         # global OCC epochs committed when frozen
     overflow: bool = False  # pool/validator overflow was raised in training
     objective: float | None = None   # optional objective metadata
+    cap_est: int | None = None       # adaptive-cap estimator at publish time
+    cap_trace: tuple[int, ...] | None = None  # per-epoch OCCStats.cap of the
+    #                                           pass that produced this version
 
     @property
     def k(self) -> int:
         return self.count
+
+    def materialize(self) -> "ModelSnapshot":
+        """Already dense — the lazy/eager publication duals share one call
+        surface (`DeltaSnapshot.materialize()` produces exactly this)."""
+        return self
 
     def as_pool(self) -> CenterPool:
         """View this snapshot as a (read-only) CenterPool — lets serving
@@ -77,10 +109,27 @@ class ModelSnapshot:
                           jnp.asarray(self.count, jnp.int32),
                           jnp.asarray(self.overflow, bool))
 
+    def to_pool(self, k_max: int) -> CenterPool:
+        """Re-expand into a trainer-shaped (k_max, D) pool — the warm-start
+        seed for `OCCEngine.restore`.  Rows beyond `count` are zero, exactly
+        as in a live pool, so a restored stream is bit-identical to the
+        uninterrupted one."""
+        if k_max < self.count:
+            raise ValueError(f"k_max={k_max} < snapshot count {self.count}")
+        centers = jnp.zeros((k_max, self.centers.shape[1]),
+                            self.centers.dtype)
+        centers = centers.at[:self.count].set(self.centers[:self.count])
+        mask = jnp.arange(k_max) < self.count
+        return CenterPool(centers, mask,
+                          jnp.asarray(self.count, jnp.int32),
+                          jnp.asarray(self.overflow, bool))
+
 
 def freeze_snapshot(pool: CenterPool, version: int, *, n_seen: int = 0,
                     epochs: int = 0, objective: float | None = None,
-                    max_capacity: int | None = None) -> ModelSnapshot:
+                    max_capacity: int | None = None,
+                    cap_est: int | None = None,
+                    cap_trace: tuple[int, ...] | None = None) -> ModelSnapshot:
     """Freeze a CenterPool into an immutable, capacity-bucketed snapshot.
 
     One host sync (count/overflow scalars) per publish; the center slice is
@@ -99,7 +148,114 @@ def freeze_snapshot(pool: CenterPool, version: int, *, n_seen: int = 0,
     return ModelSnapshot(version=version, centers=centers, mask=mask,
                          count=count, capacity=cap, n_seen=n_seen,
                          epochs=epochs, overflow=bool(pool.overflow),
-                         objective=objective)
+                         objective=objective, cap_est=cap_est,
+                         cap_trace=cap_trace)
+
+
+# ---------------------------------------------------------------------------
+# Delta publication (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+class CenterDelta(NamedTuple):
+    """One publish, as it crosses the wire: the rows version v adds over
+    v-1 plus the scalar metadata of v.  `apply_delta`-ing the stream into
+    a follower store reproduces every version bit-identically — this tuple
+    IS the cross-host replication format (stubbed in-process by
+    `distributed.replication.DeltaChannel`)."""
+    model: str | None       # routing tag on a shared channel
+    version: int            # assigned by the PRIMARY store
+    start: int              # first row this delta writes (== prior count)
+    rows: np.ndarray        # (ΔK, D) appended center rows (bit-exact)
+    count: int              # watermark after applying == start + len(rows)
+    capacity: int           # the primary's capacity bucket (depends on its
+    #                         K_max clamp, so it travels on the wire — the
+    #                         follower must materialize the same shape)
+    rebase: bool            # True → rows span [0, count): a fresh base
+    n_seen: int = 0
+    epochs: int = 0
+    overflow: bool = False
+    objective: float | None = None
+    cap_est: int | None = None
+    cap_trace: tuple[int, ...] | None = None
+
+    @property
+    def nbytes(self) -> int:
+        return self.rows.nbytes
+
+
+class CenterLog:
+    """Append-only dense row store backing a delta-mode SnapshotStore.
+
+    Amortized-doubling host buffer: `append` is O(ΔK·D), `dense(count,
+    capacity)` materializes a snapshot's center buffer — log prefix plus
+    zero pad, which is bit-identical to the eager `pool.centers[:capacity]`
+    slice because pool rows beyond `count` are zero by construction (the
+    validator's batched write drops out-of-range slots)."""
+
+    def __init__(self, dim: int, dtype=np.float32):
+        self._dim = dim
+        self._dtype = np.dtype(dtype)
+        self._buf = np.zeros((_MIN_CAPACITY, dim), self._dtype)
+        self._n = 0
+
+    @property
+    def rows(self) -> int:
+        return self._n
+
+    def append(self, rows: np.ndarray) -> None:
+        rows = np.asarray(rows, self._dtype)
+        need = self._n + rows.shape[0]
+        if need > self._buf.shape[0]:
+            grown = np.zeros((next_pow2(need), self._dim), self._dtype)
+            grown[:self._n] = self._buf[:self._n]
+            self._buf = grown
+        self._buf[self._n:need] = rows
+        self._n = need
+
+    def row(self, i: int) -> np.ndarray:
+        return self._buf[i]
+
+    def dense(self, count: int, capacity: int) -> jnp.ndarray:
+        """(capacity, D) device buffer: log[:count] + zero pad."""
+        out = np.zeros((capacity, self._dim), self._dtype)
+        out[:count] = self._buf[:count]
+        return jnp.asarray(out)
+
+
+@dataclass
+class DeltaSnapshot:
+    """Lazy published version: metadata now, dense buffers on first read.
+
+    Publishing one of these costs O(ΔK·D) (the delta slice); the dense
+    (capacity, D) reconstruction is deferred to `materialize()` — off the
+    trainer's critical path, paid at most once per version (cached), and
+    never paid at all by versions that are evicted unread."""
+    version: int
+    count: int
+    capacity: int
+    n_seen: int
+    epochs: int
+    overflow: bool
+    objective: float | None
+    cap_est: int | None
+    cap_trace: tuple[int, ...] | None
+    _log: CenterLog
+    _dense: ModelSnapshot | None = None
+
+    def materialize(self) -> ModelSnapshot:
+        """Dense, capacity-bucketed buffers — bit-identical to the eager
+        `freeze_snapshot` copy of the same pool (a benign race may build
+        the cache twice; both builds are equal by construction)."""
+        if self._dense is None:
+            centers = self._log.dense(self.count, self.capacity)
+            mask = jnp.arange(self.capacity) < self.count
+            self._dense = ModelSnapshot(
+                version=self.version, centers=centers, mask=mask,
+                count=self.count, capacity=self.capacity, n_seen=self.n_seen,
+                epochs=self.epochs, overflow=self.overflow,
+                objective=self.objective, cap_est=self.cap_est,
+                cap_trace=self.cap_trace)
+        return self._dense
 
 
 @dataclass
@@ -111,36 +267,163 @@ class SnapshotStore:
     Old versions are evicted FIFO beyond `capacity` — in-flight readers
     holding an evicted snapshot are unaffected (immutability), the store
     just stops handing it out.
+
+    `delta=True` switches publication to the append-only center log: each
+    publish slices only the new rows (O(ΔK·D)), readers materialize dense
+    buffers lazily (bit-identical to the eager copy), and every publish
+    emits a `CenterDelta` — to `wire` when given (the replication channel),
+    and always retrievable by followers via `apply_delta` on their side.
+    The delta log retains at most K_max rows total regardless of ring
+    eviction (append-only ⇒ bounded by the pool capacity).
     """
     capacity: int = 16
     max_model_capacity: int | None = None
-    _ring: "OrderedDict[int, ModelSnapshot]" = field(default_factory=OrderedDict)
+    delta: bool = False
+    model: str | None = None            # wire tag for emitted deltas
+    wire: Any = None                    # optional .send(CenterDelta) channel
+    _ring: "OrderedDict[int, Any]" = field(default_factory=OrderedDict)
     _next_version: int = 1
     _lock: threading.Lock = field(default_factory=threading.Lock)
+    _log: CenterLog | None = None
+    _watermark: int = 0                 # rows published into the log so far
+    n_deltas: int = 0
+    delta_rows_published: int = 0       # Σ ΔK over all publishes
 
     def publish_pool(self, pool: CenterPool, *, n_seen: int = 0,
-                     epochs: int = 0,
-                     objective: float | None = None) -> ModelSnapshot:
+                     epochs: int = 0, objective: float | None = None,
+                     cap_est: int | None = None,
+                     cap_trace: tuple[int, ...] | None = None,
+                     rebase: bool = False,
+                     verify: bool = False) -> ModelSnapshot | DeltaSnapshot:
         """Freeze and publish; returns the new snapshot with its version."""
         # Freeze outside the lock would race the version order; the slice
-        # is cheap (device-side copy), so publish holds the lock throughout.
+        # is cheap (device-side copy / ΔK rows), so publish holds the lock.
         with self._lock:
-            snap = freeze_snapshot(pool, self._next_version, n_seen=n_seen,
-                                   epochs=epochs, objective=objective,
-                                   max_capacity=self.max_model_capacity)
-            self._next_version += 1
-            self._ring[snap.version] = snap
-            while len(self._ring) > self.capacity:
-                self._ring.popitem(last=False)
+            if not self.delta:
+                snap = freeze_snapshot(
+                    pool, self._next_version, n_seen=n_seen, epochs=epochs,
+                    objective=objective, cap_est=cap_est, cap_trace=cap_trace,
+                    max_capacity=self.max_model_capacity)
+                self._next_version += 1
+                self._register(snap)
+                return snap
+            return self._publish_delta_locked(
+                pool, n_seen=n_seen, epochs=epochs, objective=objective,
+                cap_est=cap_est, cap_trace=cap_trace, rebase=rebase,
+                verify=verify)
+
+    def _publish_delta_locked(self, pool, *, n_seen, epochs, objective,
+                              cap_est, cap_trace, rebase, verify):
+        count = int(pool.count)
+        k_max = pool.centers.shape[0]
+        cap = next_bucket(count, hi=min(k_max,
+                                        self.max_model_capacity or k_max))
+        if cap < count:
+            raise ValueError(
+                f"max_model_capacity={self.max_model_capacity} cannot hold "
+                f"{count} live centers")
+        if self._log is None:
+            self._log = CenterLog(pool.centers.shape[1],
+                                  np.asarray(pool.centers[:1]).dtype)
+        wm = self._watermark
+        # Append-only guards: a shrunk count can never be append-only; the
+        # one-row check catches a rewritten prefix (refine) at O(D); verify
+        # upgrades it to the full O(count·D) bit-check for tests.
+        if count < wm:
+            rebase = True
+        elif wm and not rebase:
+            probe = slice(0, wm) if verify else slice(wm - 1, wm)
+            if not np.array_equal(np.asarray(pool.centers[probe]),
+                                  self._log._buf[probe]):
+                rebase = True
+        start = 0 if rebase else wm
+        rows = np.asarray(pool.centers[start:count])
+        if rebase:
+            # A fresh log, NOT a reset: ring snapshots published before the
+            # rebase keep their reference to the old log (never written
+            # again — appends go to the new object), so every older version
+            # still materializes its original centers bit-identically and
+            # an in-flight materialize() can never read a torn buffer.
+            self._log = CenterLog(pool.centers.shape[1],
+                                  np.asarray(pool.centers[:1]).dtype)
+        self._log.append(rows)
+        self._watermark = count
+        delta = CenterDelta(
+            model=self.model, version=self._next_version, start=start,
+            rows=rows, count=count, capacity=cap, rebase=rebase,
+            n_seen=n_seen, epochs=epochs, overflow=bool(pool.overflow),
+            objective=objective, cap_est=cap_est, cap_trace=cap_trace)
+        self._next_version += 1
+        snap = self._snapshot_from_delta(delta)
+        self._register(snap)
+        self.n_deltas += 1
+        self.delta_rows_published += rows.shape[0]
+        if self.wire is not None:
+            self.wire.send(delta)
+        return snap
+
+    def _snapshot_from_delta(self, delta: CenterDelta):
+        return DeltaSnapshot(
+            version=delta.version, count=delta.count, capacity=delta.capacity,
+            n_seen=delta.n_seen, epochs=delta.epochs,
+            overflow=delta.overflow, objective=delta.objective,
+            cap_est=delta.cap_est, cap_trace=delta.cap_trace, _log=self._log)
+
+    def _register(self, snap) -> None:
+        self._ring[snap.version] = snap
+        while len(self._ring) > self.capacity:
+            self._ring.popitem(last=False)
+
+    def apply_delta(self, delta: CenterDelta) -> ModelSnapshot | DeltaSnapshot:
+        """Follower side of replication: fold one wire delta into this
+        store, reproducing the primary's version bit-identically.  Versions
+        come from the wire (the primary assigned them); deltas must arrive
+        in order per model — the channel preserves it."""
+        with self._lock:
+            if not self.delta:
+                raise ValueError("apply_delta requires a delta-mode store")
+            if self._log is None or delta.rebase:
+                # Rebase allocates a fresh log (see _publish_delta_locked):
+                # the follower's older versions keep the old one.
+                self._log = CenterLog(delta.rows.shape[1], delta.rows.dtype)
+                self._watermark = 0
+            if delta.start != self._watermark:
+                raise ValueError(
+                    f"delta gap: have {self._watermark} rows, delta starts "
+                    f"at {delta.start} (version {delta.version})")
+            self._log.append(delta.rows)
+            self._watermark = delta.count
+            self._next_version = delta.version + 1
+            snap = self._snapshot_from_delta(delta)
+            self._register(snap)
+            self.n_deltas += 1
+            self.delta_rows_published += delta.rows.shape[0]
             return snap
 
     def publish_pass(self, result: OCCPassResult, *, n_seen: int = 0,
-                     epochs: int = 0) -> ModelSnapshot:
+                     epochs: int = 0,
+                     cap_est: int | None = None) -> Any:
         """`OCCEngine(publish=store.publish_pass)` — one version per
-        committed pass."""
-        return self.publish_pool(result.pool, n_seen=n_seen, epochs=epochs)
+        committed pass.  Persists the engine's adaptive-cap estimator and
+        the pass's per-epoch `OCCStats.cap` trace into the snapshot, so a
+        restored stream resumes with a warm cap and the serving metrics can
+        surface the trace (DESIGN.md §11/§12)."""
+        cap = result.stats.cap
+        trace = None if cap is None else tuple(
+            int(c) for c in np.asarray(cap))
+        return self.publish_pool(result.pool, n_seen=n_seen, epochs=epochs,
+                                 cap_est=cap_est, cap_trace=trace)
 
     def latest(self) -> ModelSnapshot | None:
+        with self._lock:
+            if not self._ring:
+                return None
+            snap = next(reversed(self._ring.values()))
+        return snap.materialize()
+
+    def latest_meta(self) -> Any:
+        """Newest published version WITHOUT materializing dense buffers —
+        the metadata read for metrics/observability endpoints."""
         with self._lock:
             if not self._ring:
                 return None
@@ -148,7 +431,8 @@ class SnapshotStore:
 
     def get(self, version: int) -> ModelSnapshot | None:
         with self._lock:
-            return self._ring.get(version)
+            snap = self._ring.get(version)
+        return None if snap is None else snap.materialize()
 
     def versions(self) -> list[int]:
         with self._lock:

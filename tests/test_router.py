@@ -1,0 +1,399 @@
+"""Serving scale-out: router, admission queue, delta publication (§12).
+
+Contracts under test:
+  * multi-model isolation — publishing to model A never changes model B's
+    responses; per-model versions are independent and monotone;
+  * shared jit caches — tenants with equal (bucket, capacity) shapes reuse
+    ONE compilation (the router-level compile counter stays flat);
+  * admission queue — coalesced responses are bit-identical to solo
+    responses on the same tagged version; replay of the recorded dispatch
+    reproduces every member bit-exactly; a lone request with a stalled
+    partner is flushed at the deadline, never held past its budget;
+  * delta publication — delta-materialized snapshots are bit-identical to
+    the eager copies (incl. pool-overflow epochs), replication through the
+    in-process channel reproduces every version bit-identically, and a
+    rewritten prefix forces a rebase rather than a corrupt replica;
+  * warm restore — `OCCEngine.restore` resumes a stream bit-identically
+    and with the persisted adaptive cap (no full-width re-burn-in), and
+    the cap trace reaches the serving metrics endpoint.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DPMeansTransaction, OCCEngine, nearest_center
+from repro.data import dp_stick_breaking_data
+from repro.distributed import DeltaChannel, make_follower
+from repro.serving import (
+    ClusterService, ModelRouter, SnapshotStore,
+)
+from repro.serving import cluster_service as cs_mod
+
+LAM = 4.0
+
+
+def _stream(n=768, seed=0, dim=8):
+    x, _, _ = dp_stick_breaking_data(n, seed=seed, dim=dim)
+    return jnp.asarray(x)
+
+
+def _train_into(store_publish, x, lam=LAM, pb=64, k_max=128, **eng_kw):
+    eng = OCCEngine(DPMeansTransaction(lam, k_max=k_max), pb=pb,
+                    publish=store_publish, **eng_kw)
+    eng.partial_fit(x)
+    eng.flush()
+    return eng
+
+
+# ------------------------------------------------------------------ router
+
+def test_multi_model_isolation():
+    """Publishing to A never changes B's responses; versions independent."""
+    x = _stream()
+    router = ModelRouter(backend="ref")
+    store_a = router.add_model("a")
+    store_b = router.add_model("b")
+    ea = _train_into(store_a.publish_pass, x[:512], lam=LAM)
+    _train_into(store_b.publish_pass, x[256:], lam=2.0)
+
+    rb1 = router.score("b", x[:64])
+    # publish a NEW version to A only
+    ea.partial_fit(x[512:])
+    ea.flush()
+    rb2 = router.score("b", x[:64])
+    assert rb1.model == rb2.model == "b"
+    assert rb2.version == rb1.version            # B's hot-swap untouched
+    np.testing.assert_array_equal(rb1.labels, rb2.labels)
+    np.testing.assert_array_equal(rb1.scores, rb2.scores)
+    ra = router.score("a", x[:64])
+    assert ra.model == "a"
+    # per-model parity against each model's own snapshot pool
+    for nm, resp in (("a", ra), ("b", rb2)):
+        snap = router.store(nm).get(resp.version)
+        _, ide = nearest_center(snap.as_pool(), x[:64], backend="ref")
+        assert np.array_equal(resp.labels, np.asarray(ide))
+
+
+def test_router_shared_jit_cache_across_tenants():
+    """Equal (bucket, capacity) tenants share ONE compilation: serving a
+    second model with the same shapes adds zero query-step compiles."""
+    x = _stream()
+    router = ModelRouter(backend="ref")
+    store_a = router.add_model("a")
+    store_b = router.add_model("b")
+    # Same lam + disjoint-but-similar data → same capacity bucket for both
+    _train_into(store_a.publish_pass, x[:512])
+    _train_into(store_b.publish_pass, x[:512], lam=LAM * 1.01)
+    sa, sb = store_a.latest(), store_b.latest()
+    assert sa.capacity == sb.capacity            # test premise
+    router.score("a", x[:40])                    # compiles (64-bucket, cap)
+    compiles = router.metrics()["query_step_compiles"]
+    for _ in range(3):
+        router.score("b", x[:40])                # same shapes → warm cache
+        router.score("a", x[:40])
+    assert router.metrics()["query_step_compiles"] == compiles
+    assert router.metrics()["n_models"] == 2
+
+
+def test_router_unknown_model_and_duplicate():
+    router = ModelRouter(backend="ref")
+    router.add_model("a")
+    with pytest.raises(KeyError):
+        router.score("nope", jnp.zeros((4, 8)))
+    with pytest.raises(ValueError):
+        router.add_model("a")
+
+
+# --------------------------------------------------------- admission queue
+
+def test_coalesced_vs_solo_bit_parity_per_tagged_version():
+    """Concurrent coalesced requests: labels/scores bit-identical to a solo
+    service on the SAME tagged version, and the recorded dispatch replays
+    bit-exactly through the service's own jitted step."""
+    x = _stream()
+    store = SnapshotStore(capacity=64)
+    _train_into(store.publish_pass, x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=25.0,
+                         audit_log=True)
+    solo = ClusterService(store, backend="ref")
+
+    spans = [(0, 13), (13, 40), (40, 41), (41, 64), (100, 117)]
+    results: dict[int, object] = {}
+
+    def client(i, lo, hi):
+        results[i] = svc.score(x[lo:hi])
+
+    threads = [threading.Thread(target=client, args=(i, lo, hi))
+               for i, (lo, hi) in enumerate(spans)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    for i, (lo, hi) in enumerate(spans):
+        resp = results[i]
+        ref = solo.score(x[lo:hi])
+        assert resp.version == ref.version
+        assert np.array_equal(resp.labels, ref.labels)
+        # scores: identical algebra on identical rows — here both dispatch
+        # shapes are warm jnp paths, and replay below is the bit-exactness
+        # contract; solo-vs-coalesced labels are the cross-shape guarantee
+        np.testing.assert_allclose(resp.scores, ref.scores, rtol=1e-6)
+    # at least some requests actually shared a dispatch
+    assert svc.n_groups < len(spans)
+    assert svc.n_group_requests == len(spans)
+
+    # bit-exact replay of every recorded dispatch from its tagged version
+    for rec in svc.audit:
+        snap = store.get(rec.version)
+        d2, idx = cs_mod._assign_step(
+            snap.centers, snap.mask, np.int32(snap.count),
+            jnp.asarray(rec.x), np.int32(rec.n_valid), backend="ref")
+        d2, idx = np.asarray(d2), np.asarray(idx)
+        for i, (lo, hi) in enumerate(spans):
+            resp = results[i]
+            if resp.group != rec.group:
+                continue
+            sl = slice(resp.offset, resp.offset + (hi - lo))
+            assert np.array_equal(resp.labels, idx[sl])
+            np.testing.assert_array_equal(resp.scores, d2[sl])
+    svc.close()
+
+
+def test_deadline_flush_under_stalled_partner():
+    """A lone request (its would-be partner never arrives) is flushed at
+    the latency budget, NOT held until the bucket fills."""
+    x = _stream()
+    store = SnapshotStore()
+    _train_into(store.publish_pass, x)
+    delay_ms = 30.0
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=256, coalesce_delay_ms=delay_ms)
+    svc.score(x[:4])                    # warm the jit cache first
+    t0 = time.perf_counter()
+    resp = svc.score(x[:10])            # 10 rows << 256: can never fill
+    dt = time.perf_counter() - t0
+    assert resp.labels.shape == (10,)
+    assert dt >= delay_ms / 1e3 * 0.5   # it did wait for a partner…
+    assert dt < 5.0                     # …but was NOT held indefinitely
+    assert svc.n_deadline_flushes >= 1
+    assert svc.metrics()["dispatches_per_microbatch"] == 1.0
+    svc.close()
+
+
+def test_coalesce_full_flush_and_oversized_bypass():
+    """A request bigger than the coalesce bucket takes the solo path; small
+    concurrent ones still coalesce around it."""
+    x = _stream()
+    store = SnapshotStore()
+    _train_into(store.publish_pass, x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=32, coalesce_delay_ms=20.0,
+                         audit_log=True)
+    big = svc.score(x[:100])            # > 32 → solo dispatch
+    assert big.group == -1 and big.labels.shape == (100,)
+    results = []
+
+    def client(lo):
+        results.append(svc.score(x[lo:lo + 16]))
+
+    threads = [threading.Thread(target=client, args=(i * 16,))
+               for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(r.group >= 0 for r in results)
+    svc.close()
+
+
+def test_coalesced_topk_and_assign_paths():
+    x = _stream()
+    store = SnapshotStore()
+    _train_into(store.publish_pass, x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=5.0)
+    solo = ClusterService(store, backend="ref")
+    k = min(3, store.latest().count)
+    rt = svc.topk(x[:20], k=k)
+    assert rt.labels.shape == (20, k)
+    assert np.array_equal(rt.labels, solo.topk(x[:20], k=k).labels)
+    ra = svc.assign(x[:11])
+    assert ra.scores is None
+    assert np.array_equal(ra.labels, solo.assign(x[:11]).labels)
+    svc.close()
+
+
+# -------------------------------------------------------- delta publication
+
+def _publish_both(eager, delta):
+    def publish(res, **kw):
+        eager.publish_pass(res, **kw)
+        delta.publish_pass(res, **kw)
+    return publish
+
+
+def test_delta_materialize_bit_identical_to_eager_copy():
+    x = _stream()
+    eager = SnapshotStore(capacity=64)
+    delta = SnapshotStore(capacity=64, delta=True)
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64,
+                    publish=_publish_both(eager, delta))
+    for lo, hi in ((0, 300), (300, 520), (520, 768)):
+        eng.partial_fit(x[lo:hi])
+    eng.flush()
+    assert eager.versions() == delta.versions()
+    assert len(eager.versions()) >= 3
+    total_rows = delta.delta_rows_published
+    assert total_rows == int(eng.pool.count)     # O(ΔK·D): each row once
+    for v in eager.versions():
+        se, sd = eager.get(v), delta.get(v)
+        assert (se.count, se.capacity, se.n_seen, se.epochs) == \
+               (sd.count, sd.capacity, sd.n_seen, sd.epochs)
+        np.testing.assert_array_equal(np.asarray(se.centers),
+                                      np.asarray(sd.centers))
+        np.testing.assert_array_equal(np.asarray(se.mask),
+                                      np.asarray(sd.mask))
+
+
+def test_delta_materialize_pool_overflow_epochs():
+    """Overflow epochs publish too; delta == eager incl. the overflow flag
+    and the full-capacity prefix."""
+    x = _stream()
+    eager = SnapshotStore()
+    delta = SnapshotStore(delta=True)
+    eng = OCCEngine(DPMeansTransaction(0.01, k_max=8), pb=64,
+                    publish=_publish_both(eager, delta))
+    eng.partial_fit(x[:256])
+    eng.partial_fit(x[256:512])
+    for v in eager.versions():
+        se, sd = eager.get(v), delta.get(v)
+        assert se.overflow and sd.overflow
+        assert se.count == sd.count == 8
+        np.testing.assert_array_equal(np.asarray(se.centers),
+                                      np.asarray(sd.centers))
+    # a service keeps serving from the delta store through overflow
+    svc = ClusterService(delta, backend="ref")
+    resp = svc.assign(x[:16])
+    assert (resp.labels >= 0).all() and (resp.labels < 8).all()
+
+
+def test_delta_replication_channel_bit_identity():
+    """primary → wire → follower: every version reconstructs bit-identically
+    and the bytes on the wire are Σ ΔK·D·4, not versions × capacity."""
+    x = _stream()
+    chan = DeltaChannel()
+    primary = SnapshotStore(capacity=64, delta=True, model="m", wire=chan)
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64,
+                    publish=primary.publish_pass)
+    follower = make_follower(chan, "m", capacity=64)
+    for lo, hi in ((0, 300), (300, 768)):
+        eng.partial_fit(x[lo:hi])
+        chan.pump()                      # interleave delivery with training
+    eng.flush()
+    chan.pump()
+    assert follower.versions() == primary.versions()
+    for v in primary.versions():
+        sp, sf = primary.get(v), follower.get(v)
+        assert (sp.count, sp.capacity) == (sf.count, sf.capacity)
+        np.testing.assert_array_equal(np.asarray(sp.centers),
+                                      np.asarray(sf.centers))
+    assert chan.bytes_sent == int(eng.pool.count) * x.shape[1] * 4
+    # a service over the follower is bit-identical to one over the primary
+    svp = ClusterService(primary, backend="ref")
+    svf = ClusterService(follower, backend="ref")
+    rp, rf = svp.score(x[:50]), svf.score(x[:50])
+    assert rp.version == rf.version
+    np.testing.assert_array_equal(rp.labels, rf.labels)
+    np.testing.assert_array_equal(rp.scores, rf.scores)
+
+
+def test_delta_rebase_on_rewritten_prefix():
+    """A publish whose prefix changed (refine-style rewrite) must rebase,
+    and the materialized snapshot reflects the NEW prefix."""
+    from repro.core.occ import CenterPool
+    k_max, d = 16, 4
+    c1 = np.zeros((k_max, d), np.float32)
+    c1[:3] = np.arange(12, dtype=np.float32).reshape(3, 4)
+    pool1 = CenterPool(jnp.asarray(c1), jnp.arange(k_max) < 3,
+                       jnp.asarray(3, jnp.int32), jnp.asarray(False))
+    store = SnapshotStore(delta=True)
+    store.publish_pool(pool1)
+    c2 = c1.copy()
+    c2[1] += 100.0                       # rewrite an already-published row
+    c2[3] = 7.0                          # and append a new one
+    pool2 = CenterPool(jnp.asarray(c2), jnp.arange(k_max) < 4,
+                       jnp.asarray(4, jnp.int32), jnp.asarray(False))
+    store.publish_pool(pool2, verify=True)      # guard detects the rewrite
+    snap = store.latest()
+    np.testing.assert_array_equal(np.asarray(snap.centers[:4]), c2[:4])
+    # the rebase must NOT corrupt older versions: v1 (never materialized
+    # before the rebase) still reconstructs its ORIGINAL centers
+    v1 = store.get(store.versions()[0])
+    np.testing.assert_array_equal(np.asarray(v1.centers[:3]), c1[:3])
+    # the one-row guard alone catches a rewrite of the LAST published row
+    store2 = SnapshotStore(delta=True)
+    store2.publish_pool(pool1)
+    c3 = c1.copy()
+    c3[2] += 5.0                         # last published row changes
+    pool3 = CenterPool(jnp.asarray(c3), jnp.arange(k_max) < 3,
+                       jnp.asarray(3, jnp.int32), jnp.asarray(False))
+    store2.publish_pool(pool3)           # no verify: O(D) guard must fire
+    np.testing.assert_array_equal(
+        np.asarray(store2.latest().centers[:3]), c3[:3])
+
+
+# ------------------------------------------------- warm restore + cap trace
+
+def test_restore_resumes_bit_identical_with_warm_cap():
+    x = _stream(1024, seed=3, dim=8)
+    store = SnapshotStore(capacity=64)
+    eng_a = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64,
+                      validate_cap="adaptive", publish=store.publish_pass)
+    eng_a.partial_fit(x[:512])
+    snap = store.latest()
+    assert snap.cap_est is not None          # estimator persisted
+    assert snap.cap_trace is not None and len(snap.cap_trace) == 8
+    # continue A as the uninterrupted reference
+    eng_a.partial_fit(x[512:])
+    eng_a.flush()
+
+    # B restores from the snapshot and replays the remaining stream
+    eng_b = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64,
+                      validate_cap="adaptive")
+    eng_b.restore(snap, k_max=128)
+    assert eng_b._cap_est == snap.cap_est    # warm, not full-width
+    assert eng_b.n_seen == snap.n_seen and eng_b.epochs_done == snap.epochs
+    eng_b.partial_fit(x[512:])
+    eng_b.flush()
+    assert eng_b.cap_history[0] is not None  # first pass ran at a warm cap
+    assert int(eng_b.pool.count) == int(eng_a.pool.count)
+    np.testing.assert_array_equal(np.asarray(eng_b.pool.centers),
+                                  np.asarray(eng_a.pool.centers))
+
+    # restore refuses to clobber a live stream
+    with pytest.raises(ValueError):
+        eng_a.restore(snap, k_max=128)
+    with pytest.raises(ValueError):
+        snap.to_pool(k_max=snap.count - 1)
+
+
+def test_cap_trace_surfaces_in_serving_metrics():
+    x = _stream()
+    store = SnapshotStore(delta=True)      # metadata flows through deltas too
+    _train_into(store.publish_pass, x, validate_cap="adaptive")
+    svc = ClusterService(store, backend="ref")
+    m = svc.metrics()
+    assert m["latest_version"] == store.latest().version
+    assert m["cap_trace"] is not None and len(m["cap_trace"]) >= 1
+    assert all(isinstance(c, int) for c in m["cap_trace"])
+    # non-adaptive engines publish cap traces too (full-width caps) but no
+    # estimator
+    store2 = SnapshotStore()
+    _train_into(store2.publish_pass, x)
+    m2 = ClusterService(store2, backend="ref").metrics()
+    assert m2["cap_est"] is None and m2["cap_trace"] is not None
