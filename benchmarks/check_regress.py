@@ -1,11 +1,13 @@
 """Benchmark regression gate — fails CI on real slowdowns in key metrics.
 
-Measures the two serving-critical paths at --quick sizes:
+Measures the three serving-critical paths at --quick sizes:
 
   * ``validator_pass_us`` — one warm compiled OCC pass (bootstrap + epoch
     scan + the §11 precomputed validator: the training hot path);
   * ``service_p99_ms`` / ``service_p50_ms`` — solo request latency through
-    `ClusterService.score` with warm jit caches (the serving hot path).
+    `ClusterService.score` with warm jit caches (the serving hot path);
+  * ``transport_commit_us`` — median publish→all-followers-acked latency
+    over loopback sockets (the §13 replication barrier hot path).
 
 Raw wall times are machine-dependent, so the GATE compares *normalized*
 metrics: each raw time divided by ``reference_us``, a warm jitted matmul
@@ -37,11 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-KEY_METRICS = ("validator_pass_us", "service_p99_ms")
+KEY_METRICS = ("validator_pass_us", "service_p99_ms", "transport_commit_us")
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "baselines", "BENCH_regress_quick.json")
 SIZES = dict(n=1024, dim=16, pb=64, k_max=256, lam=4.0,
-             n_requests=200, request=17, trials=7)
+             n_requests=200, request=17, trials=7,
+             repl_followers=2, repl_versions=16, repl_trials=3)
 
 
 def _reference_us(trials: int = 7, reps: int = 50) -> float:
@@ -102,11 +105,20 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
             lat[i] = time.perf_counter() - t0
         p50s.append(np.percentile(lat, 50))
         p99s.append(np.percentile(lat, 99))
+    # --- replication commit: publish → all followers acked ---------------
+    from benchmarks.transport import measure_commit
+    transport_commit_us = min(
+        measure_commit(s["repl_followers"], s["repl_versions"], dk=4,
+                       dim=s["dim"],
+                       inject_sleep_s=inject)["commit_p50_us"]
+        for _ in range(s["repl_trials"]))
+
     ref_us = _reference_us()
     metrics = {
         "validator_pass_us": validator_pass_us,
         "service_p50_ms": float(min(p50s) * 1e3),
         "service_p99_ms": float(min(p99s) * 1e3),
+        "transport_commit_us": transport_commit_us,
     }
     return {
         "bench": "regress_quick",

@@ -9,6 +9,7 @@ Suites:
   occ_engine — single-jit epoch scan vs legacy Python epoch loop
   validator  — precomputed (D-free) validator vs legacy per-step recompute
   serve      — cluster-serving plane: per-bucket latency + train-while-serve
+  transport  — replication sockets: delta bytes/publish + commit latency
   kernels    — Pallas kernel microbenches
   roofline   — §Roofline summary from the dry-run artifacts
 
@@ -30,8 +31,8 @@ def main(argv=None) -> None:
                     help="minimal smoke sizes for CI — liveness only")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "fig3,fig4,occ_engine,validator,serve,kernels,"
-                         "roofline")
+                         "fig3,fig4,occ_engine,validator,serve,transport,"
+                         "kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
@@ -92,6 +93,12 @@ def main(argv=None) -> None:
             # job, and the regression gate (check_regress) as its own step
             demo_queries=0 if args.quick else
                          (1000 if args.fast else 2000))
+    if want("transport"):
+        from benchmarks import transport
+        rows += transport.run(
+            n_followers=2,
+            versions=8 if args.quick else (16 if args.fast else 32),
+            trials=1 if args.quick else 3)
     if want("kernels"):
         from benchmarks import kernels
         rows += kernels.run()

@@ -1,0 +1,119 @@
+"""Replication transport microbench: delta bytes/publish + commit latency.
+
+In-process but over REAL loopback sockets: a delta-mode primary
+`SnapshotStore` wired onto a `ReplicationServer`, N `ReplicationClient`
+follower threads tailing it.  Measures the two §13 replication costs:
+
+  * payload bytes per publish — O(ΔK·D) delta rows, not the
+    O(capacity·D) a full-snapshot wire would pay;
+  * publish→commit latency — `publish_pool` returning through
+    `wait_acked` (every live follower durably applied + ACKed), i.e. the
+    replication barrier the cluster driver runs per pass; the server's
+    own per-ack samples give the one-way ack p50/p99.
+
+`launch/occ_cluster.py` emits the multi-process e2e record
+(BENCH_transport.json); this is the repeatable single-process microbench.
+
+  PYTHONPATH=src python -m benchmarks.transport
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.occ import CenterPool
+from repro.distributed.transport import (ReplicationClient, ReplicationServer,
+                                         store_digest)
+from repro.serving.snapshot import SnapshotStore
+
+
+def _pools(versions: int, dk: int, dim: int):
+    """An append-only version chain: version v holds the first v*dk rows
+    of one fixed base — every publish after the first is a pure delta."""
+    k_max = versions * dk
+    base = np.random.default_rng(0).normal(
+        size=(k_max, dim)).astype(np.float32)
+    out = []
+    for v in range(1, versions + 1):
+        k = v * dk
+        centers = jnp.zeros((k_max, dim), jnp.float32).at[:k].set(base[:k])
+        out.append(CenterPool(centers, jnp.arange(k_max) < k,
+                              jnp.asarray(k, jnp.int32), jnp.asarray(False)))
+    return out
+
+
+def measure_commit(n_followers: int, versions: int, dk: int, dim: int,
+                   inject_sleep_s: float = 0.0) -> dict:
+    """One trial: fresh server + followers, publish the whole chain with a
+    commit barrier per version; returns latency stats and wire metrics."""
+    pools = _pools(versions, dk, dim)
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=versions + 1, delta=True, model="bench",
+                          wire=srv)
+    clients = [ReplicationClient(srv.address, model="bench",
+                                 capacity=versions + 1).start()
+               for _ in range(n_followers)]
+    commit_s = []
+    try:
+        for v, pool in enumerate(pools, start=1):
+            t0 = time.perf_counter()
+            store.publish_pool(pool)
+            assert srv.wait_acked(v, "bench", timeout=30.0)
+            if inject_sleep_s:
+                time.sleep(inject_sleep_s)
+            commit_s.append(time.perf_counter() - t0)
+        assert all(store_digest(c.store) == store_digest(store)
+                   for c in clients)
+        m = srv.metrics()
+    finally:
+        srv.close()
+    for c in clients:
+        c.join(10.0)
+    lat = np.asarray(commit_s)
+    return dict(commit_p50_us=float(np.percentile(lat, 50) * 1e6),
+                commit_p99_us=float(np.percentile(lat, 99) * 1e6),
+                bytes_per_publish=m["bytes_sent"] / max(1, m["n_sent"]),
+                ack_p50_ms=m["ack_p50_ms"], ack_p99_ms=m["ack_p99_ms"],
+                n_acks=m["n_acks"])
+
+
+def run(n_followers: int = 2, versions: int = 32, dk: int = 4, dim: int = 16,
+        trials: int = 3, out_path: str | None = None, quiet: bool = False):
+    best = None
+    for _ in range(trials):
+        t = measure_commit(n_followers, versions, dk, dim)
+        if best is None or t["commit_p50_us"] < best["commit_p50_us"]:
+            best = t
+    record = {
+        "bench": "transport_micro",
+        "followers": n_followers, "versions": versions,
+        "dk": dk, "dim": dim, "trials": trials,
+        **best,
+    }
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+    rows = [
+        (f"transport_commit_f{n_followers}_v{versions}",
+         best["commit_p50_us"],
+         f"p99_us={best['commit_p99_us']:.0f};"
+         f"ack_p50_ms={best['ack_p50_ms']:.2f};"
+         f"ack_p99_ms={best['ack_p99_ms']:.2f}"),
+        (f"transport_delta_wire_f{n_followers}_v{versions}",
+         best["commit_p50_us"],
+         f"bytes_per_publish={best['bytes_per_publish']:.0f};"
+         f"acks={best['n_acks']}"),
+    ]
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(out_path=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_transport_micro.json"))

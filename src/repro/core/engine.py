@@ -197,12 +197,16 @@ ADAPTIVE_CAP_MIN = 8
 ADAPTIVE_CAP_MARGIN = 2
 
 
-def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap, scan_mode,
-                replicate=None):
-    """One bulk-synchronous OCC epoch (any width, incl. the width-1 epochs
-    of the serial bootstrap prefix) — always on the precomputed validator."""
+def _finish_epoch(txn, pool, send, payload, aux, safe, valid_e, validate_cap,
+                  scan_mode, replicate=None):
+    """Serialize one epoch's proposals: the master half of an OCC epoch.
+
+    Everything after `propose` — valid-masking, the one true precomputed
+    validator, writeback, overflow fold, epoch stats.  Split out of
+    `_epoch_body` so the proposal block can come from ANYWHERE (the fused
+    scan below, or worker processes streaming proposals over sockets in
+    `launch/occ_cluster.py`) while validation stays one code path."""
     b = valid_e.shape[0]
-    send, payload, aux, safe = txn.propose(pool, x_e, state_e)
     send = jnp.logical_and(send, valid_e)
     pool, slots, outs, sent_ovf = precomputed_gather_validate(
         pool, send, payload, aux, txn.precompute_accept, txn.accept_pre,
@@ -213,6 +217,15 @@ def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap, scan_mode,
     n_acc = jnp.sum((slots >= 0).astype(jnp.int32))
     return pool, (assign_e, send, n_sent, n_acc,
                   jnp.asarray(effective_cap(validate_cap, b), jnp.int32))
+
+
+def _epoch_body(txn, pool, x_e, valid_e, state_e, validate_cap, scan_mode,
+                replicate=None):
+    """One bulk-synchronous OCC epoch (any width, incl. the width-1 epochs
+    of the serial bootstrap prefix) — always on the precomputed validator."""
+    send, payload, aux, safe = txn.propose(pool, x_e, state_e)
+    return _finish_epoch(txn, pool, send, payload, aux, safe, valid_e,
+                         validate_cap, scan_mode, replicate)
 
 
 def _engine_pass(txn, pool, x, state, *, pb, cap_warm, cap_rest, n_warm,
@@ -312,6 +325,22 @@ _engine_pass_jit = jax.jit(
     _engine_pass,
     static_argnames=("pb", "cap_warm", "cap_rest", "n_warm", "n_bootstrap",
                      "mesh", "data_axis", "scan_mode"))
+
+
+# Per-epoch jits for the host-driven proposal-source path
+# (`OCCEngine.run_from_proposals`).  Key bit-identity fact the multi-process
+# cluster rests on: a jitted propose at shard shape equals the matching
+# slice of the jitted full-epoch propose, and this per-epoch finish equals
+# the fused scan's epoch body — so a pass assembled from worker proposal
+# blocks reproduces the single-jit `run()` bitwise (tests/test_occ_cluster).
+_propose_epoch_jit = jax.jit(
+    lambda txn, pool, x_e, state_e: txn.propose(pool, x_e, state_e))
+
+_finish_epoch_jit = jax.jit(
+    lambda txn, pool, send, payload, aux, safe, valid_e, validate_cap,
+    scan_mode: _finish_epoch(txn, pool, send, payload, aux, safe, valid_e,
+                             validate_cap, scan_mode),
+    static_argnames=("validate_cap", "scan_mode"))
 
 
 class OCCEngine:
@@ -456,6 +485,133 @@ class OCCEngine:
 
     def refine(self, pool: CenterPool, x: jnp.ndarray, assign: Any) -> CenterPool:
         return self.txn.refine(pool, x, assign)
+
+    # ------------------------------------------- pluggable proposal source
+    def local_proposer(self):
+        """The in-process proposal source: jitted `txn.propose` on the full
+        epoch.  `run_from_proposals(x)` with this source is the reference
+        the cluster driver's bit-identity audit compares against (and a
+        worker's jitted shard propose equals the matching slice of this —
+        jit-to-jit exactness is what makes the cluster bitwise faithful)."""
+        def propose_fn(pool, x_e, state_e, valid_e, *, epoch, offset):
+            send, payload, aux, safe = _propose_epoch_jit(
+                self.txn, pool, x_e, state_e)
+            return send, payload, aux, safe, valid_e
+        return propose_fn
+
+    def run_from_proposals(self, x: jnp.ndarray, propose_fn=None, *,
+                           pool: CenterPool | None = None, state: Any = None,
+                           n_bootstrap: int = 0,
+                           on_commit=None) -> OCCPassResult:
+        """One pass with a PLUGGABLE proposal source — the host-driven dual
+        of `run()`, bit-identical to it on the same data.
+
+        Where `run()` fuses propose+validate into one compiled scan,
+        this drives the epoch loop from Python and asks `propose_fn` for
+        each epoch's proposal block; only the serializing finish
+        (`_finish_epoch`: THE validator + writeback) runs here.  That is
+        exactly the paper's master: proposals may come from anywhere —
+        `local_proposer()` (in-process reference), or P worker processes
+        each running `propose` on a disjoint shard with the blocks
+        reassembled in global index order (`launch/occ_cluster.py`).
+
+        propose_fn(pool, x_e, state_e, valid_e, *, epoch, offset) returns
+        (send, payload, aux, safe, valid_e) for the epoch's `pb` points
+        (`offset` is the global index of the epoch's first point; the
+        returned valid_e may narrow the input mask, e.g. masking the shard
+        of a worker that died mid-epoch).
+
+        on_commit(pool, epoch, t_epochs), when given, runs after each main
+        epoch's commit — the per-epoch replication hook: the cluster driver
+        publishes the pool delta to followers here, so replication is
+        per-epoch exactly as in the paper, not per-pass.
+
+        Adaptive caps need the fused pass's observe/retry machinery and the
+        mesh path shards inside the compiled scan; both are refused here.
+        Per-epoch dispatches are counted in `n_dispatches` (one per epoch —
+        the price of a host-driven loop; `run()` stays 1 per pass).
+        """
+        if self.adaptive:
+            raise ValueError("run_from_proposals requires a fixed/None "
+                             "validate_cap (adaptive needs the fused pass)")
+        if self.mesh is not None:
+            raise ValueError("run_from_proposals is host-driven; use run() "
+                             "for mesh-sharded passes")
+        if propose_fn is None:
+            propose_fn = self.local_proposer()
+        cap, sm = self.validate_cap, self.scan_mode
+        n, d = x.shape
+        nb = min(int(n_bootstrap), n)
+        if pool is None:
+            pool = self.txn.init_pool(x[:min(self.pb, n)])
+        if state is None:
+            state = self.txn.make_state(x, 0)
+
+        # Serial bootstrap prefix: width-1 epochs, stats discarded and send
+        # forced True — exactly the fused pass's bootstrap scan.
+        assign_parts = []
+        for i in range(nb):
+            xe = x[i:i + 1]
+            se = jax.tree.map(lambda s: s[i:i + 1], state)
+            ve = jnp.ones((1,), bool)
+            s_, p_, a_, sf_, ve = propose_fn(pool, xe, se, ve,
+                                             epoch=0, offset=i)
+            pool, (ae, _, _, _, _) = _finish_epoch_jit(
+                self.txn, pool, s_, p_, a_, sf_, ve,
+                validate_cap=cap, scan_mode=sm)
+            self.n_dispatches += 1
+            assign_parts.append(ae)
+        assign_b = None if not nb else jax.tree.map(
+            lambda *p: jnp.concatenate(p, 0), *assign_parts)
+
+        # Main epochs: identical padding/valid-masking to the fused pass.
+        n_rest = n - nb
+        t_epochs = block_epochs(n_rest, self.pb)
+        pad = t_epochs * self.pb - n_rest
+        flat = lambda a: jnp.concatenate(
+            [a[nb:], jnp.zeros((pad,) + a.shape[1:], a.dtype)], 0)
+        xs = flat(x)
+        valid = flat(jnp.ones((n,), bool))
+        ss = jax.tree.map(flat, state)
+
+        am_parts, sm_parts, sent_l, acc_l, cap_l = [], [], [], [], []
+        for e in range(t_epochs):
+            cut = slice(e * self.pb, (e + 1) * self.pb)
+            s_, p_, a_, sf_, ve = propose_fn(
+                pool, xs[cut], jax.tree.map(lambda s: s[cut], ss),
+                valid[cut], epoch=e, offset=nb + e * self.pb)
+            pool, (ae, sde, ns, na, ce) = _finish_epoch_jit(
+                self.txn, pool, s_, p_, a_, sf_, ve,
+                validate_cap=cap, scan_mode=sm)
+            self.n_dispatches += 1
+            am_parts.append(ae)
+            sm_parts.append(sde)
+            sent_l.append(ns)
+            acc_l.append(na)
+            cap_l.append(ce)
+            if on_commit is not None:
+                on_commit(pool, e, t_epochs)
+
+        unpad = lambda a: a[:n_rest]
+        assign = jax.tree.map(
+            lambda *p: unpad(jnp.concatenate(p, 0)), *am_parts)
+        send = unpad(jnp.concatenate(sm_parts, 0))
+        if nb:
+            assign = jax.tree.map(lambda b, m: jnp.concatenate([b, m], 0),
+                                  assign_b, assign)
+            send = jnp.concatenate([jnp.ones((nb,), bool), send], 0)
+        epoch_of = jnp.concatenate([
+            jnp.zeros((nb,), jnp.int32),
+            jnp.repeat(jnp.arange(t_epochs, dtype=jnp.int32),
+                       self.pb)[:n_rest]])
+        res = OCCPassResult(pool, assign, send, epoch_of,
+                            OCCStats(proposed=jnp.stack(sent_l),
+                                     accepted=jnp.stack(acc_l),
+                                     cap=jnp.stack(cap_l)))
+        if self.publish is not None:
+            self.publish(res, n_seen=n, epochs=t_epochs,
+                         cap_est=self._cap_est)
+        return res
 
     # --------------------------------------------------------- streaming
     @property

@@ -2,4 +2,7 @@ from repro.distributed.shardings import (
     ShardCtx, shard_ctx, current_ctx, constrain, batch_spec, param_specs,
     input_shardings,
 )
+from repro.distributed.transport import (
+    Transport, ReplicationServer, ReplicationClient, store_digest,
+)
 from repro.distributed.replication import DeltaChannel, make_follower

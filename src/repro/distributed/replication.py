@@ -7,13 +7,14 @@ order and `SnapshotStore.apply_delta` it into follower stores, and every
 follower version is bit-identical to the primary's (versions are assigned
 once, by the primary, and travel on the wire).
 
-`DeltaChannel` stubs the transport in-process: a thread-safe ordered
-queue with per-model follower registration and explicit `pump()` delivery
-(tests drive delivery deterministically; a real deployment replaces this
-class with a DCN/RPC stream — the protocol and the stores are unchanged,
-which is the point of the stub).  Byte counters expose the replication
-cost: Σ ΔK·D·itemsize, NOT versions × capacity × D — the log-vs-prefix
-saving the delta format exists for.
+`DeltaChannel` is the in-process loopback backend of the `Transport`
+interface (`distributed/transport.py`): a thread-safe ordered queue with
+per-model follower registration and explicit `pump()` delivery — tests
+drive delivery deterministically, and swapping in the socket-backed
+`ReplicationServer` changes nothing about the stores or the protocol,
+which is the point of the shared interface.  Byte counters expose the
+replication cost: Σ ΔK·D·itemsize, NOT versions × capacity × D — the
+log-vs-prefix saving the delta format exists for.
 """
 from __future__ import annotations
 
@@ -21,12 +22,13 @@ import threading
 from collections import deque
 from typing import Any
 
+from repro.distributed.transport import Transport
 from repro.serving.snapshot import CenterDelta, SnapshotStore
 
 __all__ = ["DeltaChannel", "make_follower"]
 
 
-class DeltaChannel:
+class DeltaChannel(Transport):
     """In-process, ordered, thread-safe delta stream with fan-out.
 
     Publishers call `send` (SnapshotStore does it on every delta-mode
@@ -37,12 +39,12 @@ class DeltaChannel:
     """
 
     def __init__(self):
+        super().__init__()
         self._q: deque[CenterDelta] = deque()
         self._lock = threading.Lock()
         self._followers: dict[str | None, list[SnapshotStore]] = {}
-        self.n_sent = 0
-        self.n_delivered = 0
-        self.bytes_sent = 0
+        self._acked: dict[str | None, dict[int, int]] = {}
+        #            model → {id(store): last applied version}
 
     def send(self, delta: CenterDelta) -> None:
         with self._lock:
@@ -61,6 +63,18 @@ class DeltaChannel:
     def pending(self) -> int:
         with self._lock:
             return len(self._q)
+
+    def commit_watermark(self, model: str | None = None) -> int | None:
+        """Min version every attached follower of `model` has applied
+        (0 for a follower that has applied nothing; None if no followers)
+        — the loopback analogue of the socket server's ack watermark,
+        where delivery via `pump` IS the ack."""
+        with self._lock:
+            stores = self._followers.get(model, ())
+            if not stores:
+                return None
+            acked = self._acked.get(model, {})
+            return min(acked.get(id(s), 0) for s in stores)
 
     def pump(self, max_items: int | None = None) -> int:
         """Deliver queued deltas to attached followers, in order.  Returns
@@ -82,6 +96,9 @@ class DeltaChannel:
                 if store.n_deltas == 0 and delta.start != 0:
                     continue
                 store.apply_delta(delta)
+                with self._lock:
+                    self._acked.setdefault(delta.model,
+                                           {})[id(store)] = delta.version
             with self._lock:
                 self.n_delivered += 1
             delivered += 1

@@ -1,0 +1,458 @@
+"""Socket transport for delta replication: acks, watermark, bootstrap (§13).
+
+The `Transport` interface is the seam between the OCC publication path and
+the bytes that carry it: a `SnapshotStore(delta=True, wire=transport)`
+calls `send(CenterDelta)` on every publish and never learns whether the
+other side is a deque in the same process (`replication.DeltaChannel`, the
+loopback backend) or follower processes on real sockets
+(`ReplicationServer` here).  Both back ends preserve the one invariant the
+stores rely on: per-model deltas arrive in publish order, exactly once.
+
+`ReplicationServer` is the primary's side of the wire:
+
+  * per-follower ACKs — each follower acknowledges every version it has
+    durably applied; the server records per-(connection, version) ack
+    latency for the replication benchmarks;
+  * commit watermark — `commit_watermark(model)` is the min acked version
+    over live followers: everything at or below it is replicated
+    everywhere, the transport-level analogue of the serializing master's
+    commit point in the paper;
+  * snapshot bootstrap — the server folds every outbound delta into an
+    internal shadow follower store; a late joiner (HELLO with
+    `have_version` behind the shadow's latest) first receives a SNAPSHOT
+    frame: the shadow's latest version as a full-prefix REBASE delta.
+    `SnapshotStore.apply_delta` already implements rebase semantics, so
+    bootstrap needs no new follower code path — the joiner applies the
+    snapshot like any delta and then tails the live stream, landing
+    bit-identical to a follower that was attached from version 1.
+
+`ReplicationClient` is the follower loop: connect → HELLO → apply
+SNAPSHOT/DELTA frames into a local delta-mode store → ACK each version →
+stop on FIN or EOF.  It runs inline (`run()`) or on a daemon thread
+(`start()`); `launch/occ_follower.py` wraps it as a process entrypoint.
+"""
+from __future__ import annotations
+
+import abc
+import queue
+import socket
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.distributed.protocol import (ACK, DELTA, FIN, HELLO, SNAPSHOT,
+                                        ack_frame, delta_frame, fin_frame,
+                                        frame_delta, hello_frame, read_frame,
+                                        write_frame)
+from repro.serving.snapshot import CenterDelta, SnapshotStore
+
+__all__ = ["Transport", "ReplicationServer", "ReplicationClient",
+           "store_digest"]
+
+
+class Transport(abc.ABC):
+    """Delta fan-out seam between a primary store and its followers.
+
+    Implementations must deliver each model's deltas to every follower in
+    publish order, exactly once.  `pump`/`pending` exist for pull-based
+    back ends (the in-process loopback lets tests control interleaving);
+    push-based back ends deliver asynchronously and leave them as no-ops.
+    """
+
+    def __init__(self) -> None:
+        self.n_sent = 0        # deltas accepted for delivery
+        self.n_delivered = 0   # delta→follower deliveries completed
+        self.bytes_sent = 0    # payload bytes accepted for delivery
+
+    @abc.abstractmethod
+    def send(self, delta: CenterDelta) -> None:
+        """Enqueue one published delta for delivery to followers."""
+
+    @abc.abstractmethod
+    def attach(self, model: str | None, store: SnapshotStore) -> SnapshotStore:
+        """Register an in-process follower store for one model's stream."""
+
+    def pump(self, max_items: int | None = None) -> int:
+        """Deliver queued deltas (pull-based back ends); 0 for push-based."""
+        return 0
+
+    def pending(self) -> int:
+        """Deltas accepted but not yet delivered everywhere."""
+        return 0
+
+    def commit_watermark(self, model: str | None = None) -> int | None:
+        """Min version every live follower of `model` has applied (None if
+        no followers) — everything <= it is fully replicated."""
+        return None
+
+    def close(self) -> None:
+        """Release transport resources; followers see an orderly FIN."""
+
+
+def store_digest(store: SnapshotStore) -> str:
+    """Content digest of a store's latest version: sha256 over (count,
+    capacity, live center bytes).  Equal digests == bit-identical latest
+    snapshots — the cross-process identity check the e2e drivers pin."""
+    import hashlib
+    snap = store.latest()
+    h = hashlib.sha256()
+    if snap is None:
+        return h.hexdigest()
+    h.update(f"{snap.count}:{snap.capacity}:".encode())
+    h.update(np.ascontiguousarray(np.asarray(snap.centers)).tobytes())
+    return h.hexdigest()
+
+
+class _FollowerConn:
+    """Server-side state for one connected follower socket."""
+
+    def __init__(self, sock: socket.socket, model: str | None,
+                 have_version: int):
+        self.sock = sock
+        self.model = model
+        self.have_version = have_version
+        self.q: "queue.SimpleQueue[bytes | None]" = queue.SimpleQueue()
+        self.acked = 0                      # highest version ACKed
+        self.alive = True
+        self.sent_ts: dict[int, float] = {}  # version → enqueue time
+        self.bootstrap_version: int | None = None
+
+
+class ReplicationServer(Transport):
+    """Primary-side socket transport: fan-out, acks, watermark, bootstrap.
+
+    One accept thread; per follower connection one reader (ACKs, runs the
+    handshake) and one writer (drains the outbound frame queue) thread.
+    `send` never blocks on a slow follower — frames queue per connection;
+    a dead connection is detected by EOF/send failure and deregistered.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 shadow_capacity: int = 4):
+        super().__init__()
+        self._lock = threading.RLock()
+        self._acked_cv = threading.Condition(self._lock)
+        self._shadow: dict[str | None, SnapshotStore] = {}
+        self._shadow_capacity = shadow_capacity
+        self._conns: list[_FollowerConn] = []
+        self._local: dict[str | None, list[SnapshotStore]] = {}
+        self._local_acked: dict[int, int] = {}   # id(store) → version
+        self.ack_latency_s: list[float] = []
+        self.n_bootstraps = 0
+        self._closing = False
+        self._lsock = socket.create_server((host, port))
+        self.address = self._lsock.getsockname()
+        self._threads: list[threading.Thread] = []
+        t = threading.Thread(target=self._accept_loop,
+                             name="repl-accept", daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    # ------------------------------------------------------------- sending
+
+    def send(self, delta: CenterDelta) -> None:
+        frame = delta_frame(delta)
+        with self._lock:
+            if self._closing:
+                raise RuntimeError("transport closed")
+            shadow = self._shadow.get(delta.model)
+            if shadow is None:
+                shadow = SnapshotStore(capacity=self._shadow_capacity,
+                                       delta=True, model=delta.model)
+                self._shadow[delta.model] = shadow
+            shadow.apply_delta(delta)
+            self.n_sent += 1
+            self.bytes_sent += len(frame)
+            for store in self._local.get(delta.model, ()):  # loopback attach
+                store.apply_delta(delta)
+                self._local_acked[id(store)] = delta.version
+                self.n_delivered += 1
+            now = time.perf_counter()
+            for conn in self._conns:
+                if conn.alive and conn.model == delta.model:
+                    conn.sent_ts[delta.version] = now
+                    conn.q.put(frame)
+
+    def attach(self, model: str | None,
+               store: SnapshotStore) -> SnapshotStore:
+        """In-process follower (delivered synchronously on send).  A store
+        attached after publishes began is bootstrapped from the shadow —
+        the same rebase-snapshot path a late socket joiner takes."""
+        if not store.delta:
+            raise ValueError("followers must be delta-mode stores")
+        with self._lock:
+            shadow = self._shadow.get(model)
+            if shadow is not None and len(shadow):
+                boot = shadow.bootstrap_delta()
+                if boot is not None and store.n_deltas == 0:
+                    store.apply_delta(boot)
+                    self._local_acked[id(store)] = boot.version
+                    self.n_bootstraps += 1
+            self._local.setdefault(model, []).append(store)
+        return store
+
+    # ------------------------------------------------------------ watermark
+
+    def commit_watermark(self, model: str | None = None) -> int | None:
+        with self._lock:
+            acks = [c.acked for c in self._conns
+                    if c.alive and c.model == model]
+            acks += [self._local_acked.get(id(s), 0)
+                     for s in self._local.get(model, ())]
+        return min(acks) if acks else None
+
+    def wait_acked(self, version: int, model: str | None = None,
+                   timeout: float = 30.0) -> bool:
+        """Block until every live follower of `model` has acked `version`
+        (vacuously true with zero followers).  The replication barrier the
+        cluster driver uses before declaring a pass fully replicated."""
+        deadline = time.monotonic() + timeout
+        with self._acked_cv:
+            while True:
+                wm = self.commit_watermark(model)
+                if wm is None or wm >= version:
+                    return True
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                self._acked_cv.wait(min(left, 0.2))
+
+    def followers(self, model: str | None = None) -> int:
+        with self._lock:
+            return sum(1 for c in self._conns
+                       if c.alive and c.model == model)
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(c.q.qsize() for c in self._conns if c.alive)
+
+    def metrics(self) -> dict:
+        with self._lock:
+            lat = sorted(self.ack_latency_s)
+            pct = (lambda p: 1e3 * lat[min(len(lat) - 1,
+                                           int(p * len(lat)))] if lat else 0.0)
+            return dict(n_sent=self.n_sent, n_delivered=self.n_delivered,
+                        bytes_sent=self.bytes_sent, n_acks=len(lat),
+                        n_bootstraps=self.n_bootstraps,
+                        ack_p50_ms=pct(0.50), ack_p99_ms=pct(0.99))
+
+    # ----------------------------------------------------------- conn plumbing
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _addr = self._lsock.accept()
+            except OSError:        # listening socket closed: shutdown
+                return
+            t = threading.Thread(target=self._serve_conn, args=(sock,),
+                                 name="repl-conn", daemon=True)
+            t.start()
+            with self._lock:
+                self._threads.append(t)
+
+    def _serve_conn(self, sock: socket.socket) -> None:
+        conn: _FollowerConn | None = None
+        try:
+            fr = read_frame(sock)
+            if fr is None or fr[0] != HELLO:
+                sock.close()
+                return
+            _, meta, _ = fr
+            if meta.get("role") != "follower":
+                write_frame(sock, fin_frame("replication port is "
+                                            "follower-only"))
+                sock.close()
+                return
+            conn = _FollowerConn(sock, meta.get("model"),
+                                 int(meta.get("have_version", 0)))
+            with self._lock:
+                if self._closing:
+                    sock.close()
+                    return
+                # Bootstrap decision and registration are one atomic step:
+                # every version after the snapshot flows through the live
+                # fan-out, so the joiner sees no gap and no duplicate.
+                shadow = self._shadow.get(conn.model)
+                if shadow is not None and len(shadow):
+                    latest = shadow.latest_meta().version
+                    if conn.have_version != latest:
+                        boot = shadow.bootstrap_delta()
+                        conn.sent_ts[boot.version] = time.perf_counter()
+                        conn.q.put(delta_frame(boot, SNAPSHOT))
+                        conn.bootstrap_version = boot.version
+                        self.n_bootstraps += 1
+                self._conns.append(conn)
+            wt = threading.Thread(target=self._writer, args=(conn,),
+                                  name="repl-write", daemon=True)
+            wt.start()
+            with self._lock:
+                self._threads.append(wt)
+            self._reader(conn)
+        except (ConnectionError, ValueError, OSError):
+            pass
+        finally:
+            if conn is not None:
+                self._drop(conn)
+            else:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+    def _reader(self, conn: _FollowerConn) -> None:
+        while True:
+            fr = read_frame(conn.sock)
+            if fr is None:
+                return
+            ftype, meta, _ = fr
+            if ftype == ACK:
+                with self._acked_cv:
+                    conn.acked = max(conn.acked, int(meta["version"]))
+                    ts = conn.sent_ts.pop(int(meta["version"]), None)
+                    if ts is not None:
+                        self.ack_latency_s.append(time.perf_counter() - ts)
+                    self._acked_cv.notify_all()
+            elif ftype == FIN:
+                return
+
+    def _writer(self, conn: _FollowerConn) -> None:
+        while True:
+            frame = conn.q.get()
+            if frame is None:
+                return
+            try:
+                conn.sock.sendall(frame)
+            except OSError:
+                self._drop(conn)
+                return
+
+    def _drop(self, conn: _FollowerConn) -> None:
+        with self._acked_cv:
+            if not conn.alive:
+                return
+            conn.alive = False
+            if conn in self._conns:
+                self._conns.remove(conn)
+            # a dead follower no longer holds the watermark back
+            self._acked_cv.notify_all()
+        conn.q.put(None)
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+
+    def close(self, reason: str = "shutdown") -> None:
+        with self._lock:
+            if self._closing:
+                return
+            self._closing = True
+            conns = list(self._conns)
+        fin = fin_frame(reason)
+        for conn in conns:
+            conn.q.put(fin)
+            conn.q.put(None)
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        # writers flush the FIN; followers close; readers see EOF and drop
+        for t in list(self._threads):
+            if t is not threading.current_thread():
+                t.join(timeout=5.0)
+
+
+class ReplicationClient:
+    """Follower loop over one socket: HELLO → apply deltas → ACK → FIN.
+
+    `store` may be a pre-existing delta-mode store (reconnect: HELLO
+    carries its latest version, and the server bootstraps only if that is
+    behind) or None for a fresh joiner.
+    """
+
+    def __init__(self, address: tuple[str, int], model: str | None = None,
+                 store: SnapshotStore | None = None, capacity: int = 16,
+                 connect_timeout: float = 10.0):
+        self.address = tuple(address)
+        self.model = model
+        self.store = store if store is not None else SnapshotStore(
+            capacity=capacity, delta=True, model=model)
+        self.connect_timeout = connect_timeout
+        self.n_applied = 0
+        self.bootstrapped = False
+        self.fin_reason: str | None = None
+        self._sock: socket.socket | None = None
+        self._thread: threading.Thread | None = None
+        self._applied_cv = threading.Condition()
+
+    def connect(self) -> None:
+        meta = self.store.latest_meta()
+        have = 0 if meta is None else meta.version
+        self._sock = socket.create_connection(self.address,
+                                              timeout=self.connect_timeout)
+        self._sock.settimeout(None)
+        write_frame(self._sock, hello_frame("follower", self.model,
+                                            have_version=have))
+
+    def run(self) -> None:
+        """Apply the stream until FIN or EOF (inline; `start` for a
+        thread).  Each applied version is ACKed immediately after the
+        store commit — the ack IS the durability signal upstream."""
+        if self._sock is None:
+            self.connect()
+        sock = self._sock
+        try:
+            while True:
+                fr = read_frame(sock)
+                if fr is None:
+                    return
+                ftype, meta, arrays = fr
+                if ftype in (DELTA, SNAPSHOT):
+                    delta = frame_delta(meta, arrays)
+                    self.store.apply_delta(delta)
+                    with self._applied_cv:
+                        self.n_applied += 1
+                        if ftype == SNAPSHOT:
+                            self.bootstrapped = True
+                        self._applied_cv.notify_all()
+                    write_frame(sock, ack_frame(self.model, delta.version))
+                elif ftype == FIN:
+                    self.fin_reason = meta.get("reason", "")
+                    return
+        except (ConnectionError, OSError):
+            return
+        finally:
+            self.close()
+
+    def start(self) -> "ReplicationClient":
+        self.connect()
+        self._thread = threading.Thread(target=self.run, name="repl-client",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def wait_version(self, version: int, timeout: float = 30.0) -> bool:
+        """Block until the local store holds `version` (or newer)."""
+        deadline = time.monotonic() + timeout
+        with self._applied_cv:
+            while True:
+                meta = self.store.latest_meta()
+                if meta is not None and meta.version >= version:
+                    return True
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    return False
+                self._applied_cv.wait(min(left, 0.2))
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def close(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None

@@ -1,0 +1,66 @@
+"""Follower process entrypoint: tail a primary's delta stream (§13).
+
+Connects a `ReplicationClient` to a `ReplicationServer`, applies
+SNAPSHOT/DELTA frames into a local delta-mode `SnapshotStore` (ACKing each
+version), and on FIN writes a JSON report — versions held, latest count /
+capacity, a sha256 content digest of the latest snapshot, and whether the
+stream began with a snapshot bootstrap.  The cluster driver compares the
+digest against the primary to prove cross-process bit-identity; a follower
+spawned mid-run must report `bootstrapped: true` with the same digest.
+
+  PYTHONPATH=src python -m repro.launch.occ_follower \
+      --connect 127.0.0.1:5432 --model occ --out follower.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.distributed.transport import ReplicationClient, store_digest
+
+__all__ = ["follower_main"]
+
+
+def follower_main(host: str, port: int, model: str | None,
+                  result_path: str | None = None,
+                  capacity: int = 128) -> dict:
+    """Run the follower loop to FIN/EOF; return (and optionally write) the
+    state report.  Spawnable as a `multiprocessing` target."""
+    client = ReplicationClient((host, port), model=model, capacity=capacity)
+    client.connect()
+    client.run()
+    store = client.store
+    meta = store.latest_meta()
+    report = dict(
+        model=model,
+        versions=store.versions(),
+        latest_version=None if meta is None else meta.version,
+        count=None if meta is None else meta.count,
+        capacity=None if meta is None else meta.capacity,
+        digest=store_digest(store),
+        bootstrapped=client.bootstrapped,
+        n_applied=client.n_applied,
+        fin_reason=client.fin_reason,
+    )
+    if result_path is not None:
+        with open(result_path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT")
+    ap.add_argument("--model", default=None)
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--capacity", type=int, default=128,
+                    help="follower snapshot-ring capacity")
+    args = ap.parse_args(argv)
+    host, port = args.connect.rsplit(":", 1)
+    report = follower_main(host, int(port), args.model, args.out,
+                           args.capacity)
+    print(json.dumps(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -400,6 +400,29 @@ class SnapshotStore:
             self.delta_rows_published += delta.rows.shape[0]
             return snap
 
+    def bootstrap_delta(self) -> CenterDelta | None:
+        """The latest version as a full-prefix REBASE delta — the SNAPSHOT
+        bootstrap payload for a late-joining follower (DESIGN.md §13).
+        `apply_delta`-ing it rebuilds this store's newest version
+        bit-identically on a fresh (or stale) follower store, which then
+        tails subsequent deltas with no gap: rebase semantics already
+        cover bootstrap, so followers need no separate code path."""
+        with self._lock:
+            if not self._ring:
+                return None
+            snap = next(reversed(self._ring.values()))
+            if self.delta:
+                # after a rebase the current log backs the latest version
+                rows = self._log._buf[:snap.count].copy()
+            else:
+                rows = np.asarray(snap.centers[:snap.count])
+            return CenterDelta(
+                model=self.model, version=snap.version, start=0, rows=rows,
+                count=snap.count, capacity=snap.capacity, rebase=True,
+                n_seen=snap.n_seen, epochs=snap.epochs,
+                overflow=bool(snap.overflow), objective=snap.objective,
+                cap_est=snap.cap_est, cap_trace=snap.cap_trace)
+
     def publish_pass(self, result: OCCPassResult, *, n_seen: int = 0,
                      epochs: int = 0,
                      cap_est: int | None = None) -> Any:

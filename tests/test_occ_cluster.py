@@ -1,0 +1,189 @@
+"""Multi-process OCC: host-driven pass parity + real-process e2e (§13).
+
+Fast tests pin the keystone equivalence behind `launch/occ_cluster.py`:
+`OCCEngine.run_from_proposals` — the host-driven epoch loop the cluster
+master runs — is bit-identical to the fused single-jit `run()`: with the
+local proposer, with a serial bootstrap prefix, with a sharded 2-worker
+proposer (the in-process twin of the worker plane's reassembly), and on
+the BP-means pytree path.  Slow tests spawn REAL worker/follower
+processes over loopback sockets and audit cross-process bit-identity plus
+both chaos paths (worker death mid-epoch, follower kill + replacement
+snapshot bootstrap).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BPMeansTransaction, DPMeansTransaction, OCCEngine)
+from repro.core import engine as engine_mod
+from repro.data import bp_stick_breaking_data, dp_stick_breaking_data
+from repro.launch.occ_cluster import ClusterConfig, run_cluster
+from repro.serving.snapshot import SnapshotStore
+
+LAM = 4.0
+
+
+def _assert_bitwise(res, ref):
+    """Full-pass bit-identity: pool, per-point outputs, and stats."""
+    eq = lambda a, b: np.array_equal(np.asarray(a), np.asarray(b))
+    assert eq(ref.pool.centers, res.pool.centers)
+    assert int(ref.pool.count) == int(res.pool.count)
+    assert eq(ref.pool.mask, res.pool.mask)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.assign),
+                    jax.tree_util.tree_leaves(res.assign)):
+        assert eq(a, b)
+    assert eq(ref.send, res.send)
+    assert eq(ref.epoch_of, res.epoch_of)
+    assert eq(ref.stats.proposed, res.stats.proposed)
+    assert eq(ref.stats.accepted, res.stats.accepted)
+    assert eq(ref.stats.cap, res.stats.cap)
+
+
+# ------------------------------------------------- host-driven pass parity
+
+def test_run_from_proposals_matches_fused_run():
+    """Ragged final epoch (488 % 61 != 0) — padding/valid handling must
+    match the fused scan exactly, and the host loop costs one dispatch per
+    epoch where run() costs one per pass."""
+    x, _, _ = dp_stick_breaking_data(488, seed=11, dim=12)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=99)
+    eng = OCCEngine(txn, pb=61)
+    res = eng.run_from_proposals(x)
+    t_epochs = -(-488 // 61)
+    assert eng.n_dispatches == t_epochs
+    _assert_bitwise(res, OCCEngine(txn, pb=61).run(x))
+
+
+def test_run_from_proposals_with_bootstrap_prefix():
+    x, _, _ = dp_stick_breaking_data(256, seed=8)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=64)
+    res = OCCEngine(txn, pb=32).run_from_proposals(x, n_bootstrap=5)
+    _assert_bitwise(res, OCCEngine(txn, pb=32).run(x, n_bootstrap=5))
+
+
+def test_two_shard_proposer_matches_fused_run():
+    """The cluster reassembly in miniature: each epoch's proposal block is
+    produced by TWO shard-shaped jitted propose calls and concatenated in
+    worker order — jit-to-jit slice exactness makes it bitwise equal."""
+    x, _, _ = dp_stick_breaking_data(512, seed=5)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=128)
+    spb = 32
+
+    def sharded(pool, x_e, state_e, valid_e, *, epoch, offset):
+        parts = []
+        for w in range(2):
+            cut = slice(w * spb, (w + 1) * spb)
+            out = engine_mod._propose_epoch_jit(
+                txn, pool, x_e[cut], jax.tree.map(lambda s: s[cut], state_e))
+            parts.append(jax.tree_util.tree_flatten(out))
+        treedef = parts[0][1]
+        cat = [jnp.concatenate([p[0][i] for p in parts], 0)
+               for i in range(len(parts[0][0]))]
+        send, payload, aux, safe = jax.tree_util.tree_unflatten(treedef, cat)
+        return send, payload, aux, safe, valid_e
+
+    res = OCCEngine(txn, pb=64).run_from_proposals(x, sharded)
+    _assert_bitwise(res, OCCEngine(txn, pb=64).run(x))
+
+
+def test_bp_means_host_driven_matches_fused():
+    """The pytree-assign (Gram fast path) transaction through the host
+    loop — (N, K) boolean assigns concatenate/unpad identically."""
+    xb, _, _ = bp_stick_breaking_data(128, seed=2)
+    xb = jnp.asarray(xb)
+    txn = BPMeansTransaction(LAM, k_max=32)
+    res = OCCEngine(txn, pb=32).run_from_proposals(xb)
+    _assert_bitwise(res, OCCEngine(txn, pb=32).run(xb))
+
+
+def test_run_from_proposals_refuses_adaptive_and_mesh():
+    x, _, _ = dp_stick_breaking_data(64, seed=0)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=32)
+    with pytest.raises(ValueError, match="adaptive"):
+        OCCEngine(txn, pb=32, validate_cap="adaptive").run_from_proposals(x)
+    eng = OCCEngine(txn, pb=32)
+    eng.mesh = object()      # any mesh: host loop can't shard inside jit
+    with pytest.raises(ValueError, match="mesh"):
+        eng.run_from_proposals(x)
+
+
+def test_on_commit_publishes_every_epoch():
+    """The per-epoch replication hook fires after each commit with the
+    committed pool — publishing there yields one store version per epoch,
+    the last one holding the final centers."""
+    x, _, _ = dp_stick_breaking_data(256, seed=4)
+    x = jnp.asarray(x)
+    txn = DPMeansTransaction(LAM, k_max=64)
+    store = SnapshotStore(capacity=16, delta=True, model="m")
+    seen = []
+
+    def on_commit(pool, epoch, t_epochs):
+        seen.append((epoch, t_epochs, int(pool.count)))
+        store.publish_pool(pool, epochs=epoch + 1)
+
+    res = OCCEngine(txn, pb=32).run_from_proposals(x, on_commit=on_commit)
+    assert [e for e, _, _ in seen] == list(range(8))
+    assert all(t == 8 for _, t, _ in seen)
+    counts = [c for _, _, c in seen]
+    assert counts == sorted(counts)          # validator only appends
+    assert counts[-1] == int(res.pool.count)
+    assert store.versions() == list(range(1, 9))
+    np.testing.assert_array_equal(
+        np.asarray(store.latest().centers[:counts[-1]]),
+        np.asarray(res.pool.centers[:counts[-1]]))
+
+
+# ------------------------------------------------- real processes (slow)
+
+QUICK = dict(n=1024, dim=8, pb=64, k_max=128, lam=3.0,
+             n_workers=2, n_followers=1, quiet=True)
+
+
+@pytest.mark.slow
+def test_multiproc_e2e_bit_identical(tmp_path):
+    """2 worker processes + follower processes over loopback: the full
+    acceptance audit — bit-identity to the single-process pass, follower
+    digests, late-joiner bootstrap, full version streams — plus the BENCH
+    record the CI job consumes."""
+    out = tmp_path / "BENCH_transport.json"
+    rec = run_cluster(ClusterConfig(**QUICK, out_path=str(out)))
+    assert all(rec["bit_identical"].values())
+    assert rec["follower_digests_match"] and all(rec["follower_digests_match"])
+    assert rec["late_joiners_bootstrapped"]
+    assert rec["full_stream_versions_match"]
+    assert rec["worker_deaths"] == {}
+    assert rec["followers"] == 2             # initial + late joiner
+    assert rec["epochs"] == 16 and rec["versions_published"] == 16
+    assert rec["n_acks"] > 0 and rec["ack_p99_ms"] >= rec["ack_p50_ms"]
+    assert rec["delta_bytes_per_publish"] > 0
+    assert out.exists()
+
+
+@pytest.mark.slow
+def test_multiproc_worker_death_is_deterministic():
+    """Worker 1 exits hard on STEP for epoch 3: the master must mask that
+    shard from exactly epoch 3 on and land bit-identical to the in-process
+    reference with the same masks — a pinned, reproducible outcome."""
+    rec = run_cluster(ClusterConfig(**QUICK, die_worker=1, die_epoch=3))
+    assert rec["worker_deaths"] == {1: 3}
+    assert all(rec["bit_identical"].values())
+    assert rec["follower_digests_match"] and all(rec["follower_digests_match"])
+
+
+@pytest.mark.slow
+def test_multiproc_follower_kill_replacement_bootstraps():
+    """SIGKILL the only follower mid-publish: the primary keeps publishing
+    (dead follower no longer holds the watermark), and the replacement
+    resyncs via a SNAPSHOT bootstrap to the same bit-identical store."""
+    rec = run_cluster(ClusterConfig(**QUICK, late_follower=False,
+                                    kill_follower_at_epoch=4))
+    assert rec["followers"] == 1             # the killed one wrote no report
+    assert rec["n_bootstraps"] >= 1
+    assert all(rec["bit_identical"].values())
+    assert rec["follower_digests_match"] and all(rec["follower_digests_match"])
+    assert rec["late_joiners_bootstrapped"]

@@ -1,0 +1,393 @@
+"""Wire protocol + socket transport tests (DESIGN.md §13).
+
+Covers: byte-level golden fixture for every frame type (the format cannot
+drift silently), codec round-trips including pool-overflow epochs, the
+`Transport` interface across both back ends, socket replication e2e with
+acks / commit watermark / snapshot bootstrap, and the `apply_delta`
+rebase/verify paths when a follower lags multiple versions behind.
+
+Regenerate the golden fixture (after an INTENTIONAL format change only):
+  PYTHONPATH=src python tests/test_transport.py --regen
+"""
+import os
+import struct
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.occ import CenterPool
+from repro.distributed import protocol as proto
+from repro.distributed.replication import DeltaChannel, make_follower
+from repro.distributed.transport import (ReplicationClient, ReplicationServer,
+                                         Transport, store_digest)
+from repro.serving.snapshot import CenterDelta, SnapshotStore
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "transport_frames.bin")
+
+
+def _pool(rows: np.ndarray, k_max: int = 16) -> CenterPool:
+    rows = np.asarray(rows, np.float32)
+    k = rows.shape[0]
+    c = jnp.zeros((k_max, rows.shape[1]), jnp.float32).at[:k].set(rows)
+    return CenterPool(c, jnp.arange(k_max) < k,
+                      jnp.asarray(k, jnp.int32), jnp.asarray(False))
+
+
+def _golden_frames() -> list[bytes]:
+    """Deterministic frame sequence covering EVERY frame type, including a
+    snapshot bootstrap, a pool-overflow epoch delta (with a non-finite
+    objective), an empty-ΔK delta, and a mixed-dtype proposal block."""
+    boot = CenterDelta(
+        model="m", version=4, start=0,
+        rows=np.linspace(-1.0, 1.0, 20, dtype=np.float32).reshape(5, 4),
+        count=5, capacity=8, rebase=True, n_seen=320, epochs=4,
+        overflow=False, objective=0.5, cap_est=16, cap_trace=(8, 8, 4, 4))
+    tail = CenterDelta(
+        model="m", version=5, start=5,
+        rows=(np.arange(12, dtype=np.float32).reshape(3, 4) / 8.0),
+        count=8, capacity=8, rebase=False, n_seen=384, epochs=5,
+        overflow=False, objective=1.25, cap_est=16, cap_trace=None)
+    ovf = CenterDelta(
+        model="ovf", version=2, start=3, rows=np.zeros((0, 4), np.float32),
+        count=3, capacity=8, rebase=False, n_seen=128, epochs=2,
+        overflow=True, objective=float("inf"), cap_est=None, cap_trace=(64,))
+    return [
+        proto.hello_frame("follower", "m", have_version=3, worker=-1),
+        proto.delta_frame(boot, proto.SNAPSHOT),
+        proto.delta_frame(tail),
+        proto.delta_frame(ovf),
+        proto.ack_frame("m", 5),
+        proto.step_frame(7, 8),
+        proto.propose_frame(7, 1, [np.array([True, False, True]),
+                                   np.arange(6, dtype=np.float32).reshape(3, 2),
+                                   np.array([2, -1, 0], np.int32)]),
+        proto.fin_frame("bye"),
+    ]
+
+
+def _split_frames(buf: bytes) -> list[bytes]:
+    out, off = [], 0
+    while off < len(buf):
+        _, _, _, plen = struct.unpack_from("!4sBBI", buf, off)
+        out.append(buf[off:off + 10 + plen])
+        off += 10 + plen
+    return out
+
+
+# ------------------------------------------------------------ golden fixture
+
+def test_golden_fixture_bytes_exact():
+    """The committed fixture pins the format at the byte level — any codec
+    change that alters encoded bytes fails here and must be deliberate."""
+    with open(GOLDEN, "rb") as f:
+        want = f.read()
+    got = b"".join(_golden_frames())
+    assert got == want, "wire format drifted from the committed golden bytes"
+
+
+def test_golden_fixture_covers_every_frame_type():
+    with open(GOLDEN, "rb") as f:
+        frames = _split_frames(f.read())
+    types = {proto.decode_frame(fr)[0] for fr in frames}
+    assert types == set(proto.FRAME_NAMES), (
+        "golden fixture must exercise every frame type")
+
+
+def test_golden_fixture_decodes_back():
+    with open(GOLDEN, "rb") as f:
+        frames = _split_frames(f.read())
+    decoded = [proto.decode_frame(fr) for fr in frames]
+    assert decoded[0][1] == dict(role="follower", model="m", have_version=3,
+                                 worker=-1)
+    boot = proto.frame_delta(decoded[1][1], decoded[1][2])
+    assert boot.rebase and boot.start == 0 and boot.count == 5
+    ovf = proto.frame_delta(decoded[3][1], decoded[3][2])
+    assert ovf.overflow and ovf.rows.shape == (0, 4)
+    assert ovf.objective is None      # inf is not JSON-representable
+    assert decoded[4][1]["version"] == 5                       # ACK
+    assert decoded[5][1] == dict(epoch=7, count=8)             # STEP
+    ep, meta, arrays = decoded[6]                              # PROPOSE
+    assert meta["epoch"] == 7 and meta["n_leaves"] == 3
+    assert arrays["leaf0"].dtype == np.bool_
+    assert arrays["leaf2"].dtype == np.int32
+    assert decoded[7][1]["reason"] == "bye"                    # FIN
+
+
+# ------------------------------------------------------------- codec basics
+
+def test_delta_frame_roundtrip_every_field():
+    rng = np.random.default_rng(0)
+    d = CenterDelta(model="abc", version=17, start=6,
+                    rows=rng.normal(size=(4, 9)).astype(np.float32),
+                    count=10, capacity=16, rebase=False, n_seen=1234,
+                    epochs=11, overflow=True, objective=-2.5, cap_est=32,
+                    cap_trace=(1, 2, 3))
+    ftype, meta, arrays = proto.decode_frame(proto.delta_frame(d))
+    back = proto.frame_delta(meta, arrays)
+    assert ftype == proto.DELTA
+    for f in CenterDelta._fields:
+        a, b = getattr(d, f), getattr(back, f)
+        if f == "rows":
+            assert b.dtype == a.dtype and np.array_equal(a, b)
+        else:
+            assert a == b, f
+
+
+def test_propose_frame_preserves_dtype_and_shape():
+    leaves = [np.array([[True], [False]]),
+              np.arange(8, dtype=np.float32).reshape(2, 4),
+              np.array([7, -7], np.int32),
+              np.arange(2, dtype=np.float64)]
+    ftype, meta, arrays = proto.decode_frame(proto.propose_frame(3, 0, leaves))
+    assert ftype == proto.PROPOSE and meta["n_leaves"] == 4
+    for i, l in enumerate(leaves):
+        got = arrays[f"leaf{i}"]
+        assert got.dtype == l.dtype and got.shape == l.shape
+        assert np.array_equal(got, l)
+
+
+def test_decode_rejects_garbage():
+    frame = proto.fin_frame("x")
+    with pytest.raises(ValueError, match="magic"):
+        proto.decode_frame(b"NOPE" + frame[4:])
+    with pytest.raises(ValueError, match="version"):
+        proto.decode_frame(frame[:4] + b"\x63" + frame[5:])
+    with pytest.raises(ValueError, match="truncated"):
+        proto.decode_frame(frame[:-1])
+
+
+# -------------------------------------------------------- Transport interface
+
+def test_both_backends_implement_transport():
+    chan = DeltaChannel()
+    assert isinstance(chan, Transport)
+    srv = ReplicationServer()
+    try:
+        assert isinstance(srv, Transport)
+    finally:
+        srv.close()
+
+
+def test_loopback_commit_watermark_tracks_pump():
+    chan = DeltaChannel()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=chan)
+    f1 = make_follower(chan, "m", capacity=8)
+    assert chan.commit_watermark("m") == 0          # attached, nothing applied
+    assert chan.commit_watermark("other") is None   # no followers at all
+    for k in (2, 3):
+        store.publish_pool(_pool(np.ones((k, 4))))
+    assert chan.commit_watermark("m") == 0          # queued, not delivered
+    chan.pump()
+    assert chan.commit_watermark("m") == 2
+    assert f1.versions() == store.versions()
+
+
+# ------------------------------------------------------- socket replication
+
+def test_socket_replication_acks_watermark_bootstrap():
+    """End-to-end over real loopback sockets: in-order delivery with acks,
+    commit watermark, late-joiner SNAPSHOT bootstrap, orderly FIN."""
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=32, delta=True, model="m", wire=srv)
+    c1 = ReplicationClient(srv.address, model="m", capacity=32).start()
+    rng = np.random.default_rng(1)
+    pools = [_pool(rng.normal(size=(k, 4))) for k in (2, 3, 5, 6, 9)]
+    try:
+        for p in pools[:3]:
+            store.publish_pool(p)
+        assert srv.wait_acked(3, "m", timeout=20)
+        assert srv.commit_watermark("m") == 3
+        # late joiner: must receive a SNAPSHOT (rebase of version 3), then
+        # tail versions 4..5 live — landing bit-identical to c1
+        c2 = ReplicationClient(srv.address, model="m", capacity=32).start()
+        assert c2.wait_version(3)       # bootstrap applied before we move on
+        for p in pools[3:]:
+            store.publish_pool(p)
+        assert srv.wait_acked(5, "m", timeout=20)
+        assert c1.wait_version(5) and c2.wait_version(5)
+        assert c2.bootstrapped and not c1.bootstrapped
+        assert c1.store.versions() == store.versions()
+        assert c2.store.versions() == [3, 4, 5]
+        assert (store_digest(store) == store_digest(c1.store)
+                == store_digest(c2.store))
+        for v in (3, 4, 5):     # every shared version, not just the latest
+            np.testing.assert_array_equal(
+                np.asarray(store.get(v).centers),
+                np.asarray(c2.store.get(v).centers))
+        m = srv.metrics()
+        assert m["n_acks"] >= 8 and m["n_bootstraps"] == 1
+        assert m["ack_p99_ms"] >= m["ack_p50_ms"] >= 0.0
+    finally:
+        srv.close()
+    c1.join(10)
+    c2.join(10)
+    assert c1.fin_reason == "shutdown"
+
+
+def test_socket_reconnect_at_head_tails_without_bootstrap():
+    """A follower reconnecting with have_version == latest just tails."""
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    try:
+        store.publish_pool(_pool(np.ones((2, 4))))
+        c1 = ReplicationClient(srv.address, model="m", capacity=8).start()
+        assert c1.wait_version(1)
+        c1.close()      # drop the link, keep the store
+        c1.join(10)
+        c2 = ReplicationClient(srv.address, model="m",
+                               store=c1.store).start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:   # registered before the next publish
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        store.publish_pool(_pool(np.ones((4, 4)) * 2))
+        assert c2.wait_version(2)
+        assert not c2.bootstrapped          # was at head: pure tail
+        assert c2.store.versions() == [1, 2]
+    finally:
+        srv.close()
+
+
+def test_socket_stale_reconnect_bootstraps_over_existing_store():
+    """A follower that fell multiple versions behind is resynced by a
+    rebase SNAPSHOT applied over its EXISTING store (apply_delta rebase
+    semantics — no special resync path)."""
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    rng = np.random.default_rng(2)
+    try:
+        store.publish_pool(_pool(rng.normal(size=(2, 4))))
+        c1 = ReplicationClient(srv.address, model="m", capacity=8).start()
+        assert c1.wait_version(1)
+        c1.close()
+        c1.join(10)
+        for k in (3, 5, 8):                 # follower misses three versions
+            store.publish_pool(_pool(rng.normal(size=(k, 4))))
+        c2 = ReplicationClient(srv.address, model="m",
+                               store=c1.store).start()
+        assert c2.wait_version(4)
+        assert c2.bootstrapped
+        assert store_digest(c2.store) == store_digest(store)
+    finally:
+        srv.close()
+
+
+def test_server_local_attach_is_loopback_follower():
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    try:
+        store.publish_pool(_pool(np.ones((2, 4))))
+        late = SnapshotStore(capacity=8, delta=True, model="m")
+        srv.attach("m", late)               # attach AFTER a publish
+        store.publish_pool(_pool(np.ones((3, 4)) * 3))
+        assert late.versions() == [1, 2]    # bootstrapped + tailed, sync
+        assert srv.commit_watermark("m") == 2
+        assert store_digest(late) == store_digest(store)
+    finally:
+        srv.close()
+
+
+# ----------------------- apply_delta under a lagging watermark (satellite)
+
+def _publish_seq(store, rng, ks):
+    """Publish a prefix-preserving (genuinely append-only) version chain."""
+    base = rng.normal(size=(max(ks), 4)).astype(np.float32)
+    for k in ks:
+        store.publish_pool(_pool(base[:k]))
+    return base
+
+
+def test_apply_delta_backlog_multiple_versions_behind():
+    """A follower draining a 5-version backlog in one pump reproduces every
+    version — the watermark advances through each delta in order."""
+    chan = DeltaChannel()
+    primary = SnapshotStore(capacity=8, delta=True, model="m", wire=chan)
+    follower = make_follower(chan, "m", capacity=8)
+    rng = np.random.default_rng(3)
+    _publish_seq(primary, rng, (1, 2, 4, 5, 9))
+    assert chan.pending() == 5 and follower.n_deltas == 0
+    assert chan.commit_watermark("m") == 0          # maximally lagged
+    chan.pump()
+    assert chan.commit_watermark("m") == 5
+    assert follower.versions() == primary.versions()
+    for v in primary.versions():
+        np.testing.assert_array_equal(
+            np.asarray(primary.get(v).centers),
+            np.asarray(follower.get(v).centers))
+
+
+def test_apply_delta_rebase_mid_backlog():
+    """A rebase inside the backlog (count shrank — e.g. a refine between
+    passes) re-logs the prefix; the lagging follower replays append →
+    rebase → append and lands bit-identical, with its OLD versions still
+    materializing from the pre-rebase log."""
+    chan = DeltaChannel()
+    primary = SnapshotStore(capacity=8, delta=True, model="m", wire=chan)
+    follower = make_follower(chan, "m", capacity=8)
+    rng = np.random.default_rng(4)
+    _publish_seq(primary, rng, (3, 6))
+    shrunk = rng.normal(size=(2, 4)).astype(np.float32)
+    primary.publish_pool(_pool(shrunk))             # count 6 → 2: forces rebase
+    grown = np.concatenate(
+        [shrunk, rng.normal(size=(2, 4)).astype(np.float32)])
+    primary.publish_pool(_pool(grown))              # genuine append again
+    chan.pump()                                     # drain all four at once
+    assert follower.versions() == primary.versions() == [1, 2, 3, 4]
+    for v in (1, 2, 3, 4):                          # incl. pre-rebase versions
+        np.testing.assert_array_equal(
+            np.asarray(primary.get(v).centers),
+            np.asarray(follower.get(v).centers))
+
+
+def test_apply_delta_gap_detected():
+    """A skipped delta must raise, not corrupt: the follower's watermark
+    check catches out-of-order/lossy delivery."""
+    primary = SnapshotStore(capacity=8, delta=True, model="m")
+    rng = np.random.default_rng(5)
+    deltas = []
+    primary.wire = type("W", (), {"send": lambda self, d: deltas.append(d)})()
+    _publish_seq(primary, rng, (2, 4, 7))
+    follower = SnapshotStore(capacity=8, delta=True, model="m")
+    follower.apply_delta(deltas[0])
+    with pytest.raises(ValueError, match="delta gap"):
+        follower.apply_delta(deltas[2])             # skipped version 2
+    follower.apply_delta(deltas[1])                 # in order: fine
+    follower.apply_delta(deltas[2])
+    assert follower.versions() == [1, 2, 3]
+
+
+def test_publish_verify_catches_deep_prefix_rewrite():
+    """The O(D) one-row guard only probes the LAST published row; verify=
+    True upgrades to the full bit-check.  A rewrite deeper in the prefix
+    slips past the fast guard (documented tradeoff) but must force a
+    rebase under verify=True — and the rebase delta resyncs a follower
+    that had already applied the pre-rewrite versions."""
+    chan = DeltaChannel()
+    primary = SnapshotStore(capacity=8, delta=True, model="m", wire=chan)
+    follower = make_follower(chan, "m", capacity=8)
+    rows = np.arange(12, dtype=np.float32).reshape(3, 4)
+    primary.publish_pool(_pool(rows))
+    chan.pump()
+    rewritten = rows.copy()
+    rewritten[0] += 100.0                           # NOT the last row
+    grown = np.concatenate([rewritten, np.ones((1, 4), np.float32)])
+    snap_fast = primary.publish_pool(_pool(grown))  # fast guard misses it
+    assert not np.array_equal(np.asarray(snap_fast.materialize().centers[0]),
+                              rewritten[0])         # stale row 0: the hazard
+    snap = primary.publish_pool(_pool(grown), verify=True)
+    d = snap.materialize()
+    np.testing.assert_array_equal(np.asarray(d.centers[:4]), grown)
+    chan.pump()                                     # follower gets the rebase
+    assert store_digest(follower) == store_digest(primary)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "wb") as f:
+            f.write(b"".join(_golden_frames()))
+        print(f"wrote {GOLDEN}")
