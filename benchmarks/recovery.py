@@ -1,0 +1,121 @@
+"""Crash-recovery microbench: checkpoint-restore + WAL-replay latency (§14).
+
+Builds a `DeltaWAL` the way a trainer would — an append-only version chain
+published through the store's wire seam, with full checkpoints every
+`checkpoint_every` versions — then "crashes" (drops the in-memory store)
+and times `recover_wal`: restore the newest checkpoint image + replay the
+logged deltas past it.  That wall time IS the §14 MTTR contribution of
+state reconstruction, and it is the quantity the checkpoint cadence
+bounds: replay work never exceeds one interval, so
+
+  * ``recovery_replay_us`` — median full `recover_wal` wall time (the
+    regression-gate key metric: a codec, checkpoint-manager, or
+    apply_delta slowdown shows up here);
+  * ``append_us`` — median per-publish WAL append cost (the durability
+    tax the trainer pays per epoch; fsync off, as in the e2e drivers);
+  * ``replayed`` / ``ckpt_version`` — what recovery actually did, so the
+    numbers can't silently measure an empty replay.
+
+Every trial asserts the recovered store digest equals the pre-crash one —
+a recovery bench that recovers wrong state must fail, not report a time.
+
+  PYTHONPATH=src python -m benchmarks.recovery
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.wal import DeltaWAL, recover_wal
+from repro.core.occ import CenterPool
+from repro.distributed.transport import store_digest
+from repro.serving.snapshot import SnapshotStore
+
+
+def _pools(versions: int, dk: int, dim: int):
+    """Append-only chain: version v holds the first v*dk rows (same shape
+    as benchmarks/transport.py, so the delta payloads are comparable)."""
+    k_max = versions * dk
+    base = np.random.default_rng(0).normal(
+        size=(k_max, dim)).astype(np.float32)
+    out = []
+    for v in range(1, versions + 1):
+        k = v * dk
+        centers = jnp.zeros((k_max, dim), jnp.float32).at[:k].set(base[:k])
+        out.append(CenterPool(centers, jnp.arange(k_max) < k,
+                              jnp.asarray(k, jnp.int32), jnp.asarray(False)))
+    return out
+
+
+def measure_recovery(versions: int, dk: int, dim: int,
+                     checkpoint_every: int) -> dict:
+    """One trial: write the WAL, crash, time `recover_wal` end to end."""
+    pools = _pools(versions, dk, dim)
+    tmp = tempfile.mkdtemp(prefix="occ-recovery-bench-")
+    try:
+        wal = DeltaWAL(tmp, model="bench", checkpoint_every=checkpoint_every,
+                       fsync=False)
+        store = SnapshotStore(capacity=versions + 1, delta=True,
+                              model="bench", wire=wal)
+        append_s = []
+        for pool in pools:
+            t0 = time.perf_counter()
+            store.publish_pool(pool)
+            append_s.append(time.perf_counter() - t0)
+        wal.close()
+        digest = store_digest(store)
+
+        t0 = time.perf_counter()
+        rec, info = recover_wal(tmp, model="bench", capacity=versions + 1)
+        recover_s = time.perf_counter() - t0
+        assert store_digest(rec) == digest, "recovery is not bit-identical"
+        return dict(
+            recovery_replay_us=recover_s * 1e6,
+            append_us=float(np.median(append_s)) * 1e6,
+            ckpt_version=info["ckpt_version"],
+            replayed=info["n_replayed"],
+            wal_bytes=wal.bytes_appended,
+            n_checkpoints=wal.n_checkpoints,
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(versions: int = 30, dk: int = 4, dim: int = 16,
+        checkpoint_every: int = 8, trials: int = 3,
+        out_path: str | None = None):
+    """CSV rows for benchmarks/run.py; MIN over trials per metric.
+    `versions` deliberately not a multiple of `checkpoint_every`: the
+    timed path must include delta replay, not just the image restore."""
+    results = [measure_recovery(versions, dk, dim, checkpoint_every)
+               for _ in range(trials)]
+    best = {k: min(r[k] for r in results)
+            for k in ("recovery_replay_us", "append_us")}
+    last = results[-1]
+    record = dict(bench="recovery", versions=versions, dk=dk, dim=dim,
+                  checkpoint_every=checkpoint_every, trials=trials,
+                  **best, ckpt_version=last["ckpt_version"],
+                  replayed=last["replayed"], wal_bytes=last["wal_bytes"],
+                  n_checkpoints=last["n_checkpoints"])
+    if out_path is not None:
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=2)
+    rows = [
+        ("recovery_replay", best["recovery_replay_us"],
+         f"ckpt@{last['ckpt_version']}+{last['replayed']}deltas"),
+        ("recovery_wal_append", best["append_us"],
+         f"{last['wal_bytes'] / versions:.0f}B/publish"),
+    ]
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(out_path=os.environ.get("BENCH_OUT"))

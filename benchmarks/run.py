@@ -10,6 +10,7 @@ Suites:
   validator  — precomputed (D-free) validator vs legacy per-step recompute
   serve      — cluster-serving plane: per-bucket latency + train-while-serve
   transport  — replication sockets: delta bytes/publish + commit latency
+  recovery   — crash recovery: WAL append cost + checkpoint+replay time
   kernels    — Pallas kernel microbenches
   roofline   — §Roofline summary from the dry-run artifacts
 
@@ -32,7 +33,7 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
                          "fig3,fig4,occ_engine,validator,serve,transport,"
-                         "kernels,roofline")
+                         "recovery,kernels,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
@@ -98,6 +99,12 @@ def main(argv=None) -> None:
         rows += transport.run(
             n_followers=2,
             versions=8 if args.quick else (16 if args.fast else 32),
+            trials=1 if args.quick else 3)
+    if want("recovery"):
+        from benchmarks import recovery
+        rows += recovery.run(
+            versions=10 if args.quick else (30 if args.fast else 62),
+            checkpoint_every=4 if args.quick else 8,
             trials=1 if args.quick else 3)
     if want("kernels"):
         from benchmarks import kernels

@@ -97,12 +97,27 @@ class CheckpointManager:
     def all_steps(self) -> list[int]:
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                try:
-                    out.append(int(d[5:]))
-                except ValueError:
-                    pass
+            if not d.startswith("step_") or d.endswith(".tmp"):
+                continue
+            try:
+                step = int(d[5:])
+            except ValueError:
+                continue
+            # a checkpoint exists only once its manifest parses — a torn
+            # or corrupted directory must not shadow the last good one
+            try:
+                with open(os.path.join(self.dir, d, "manifest.json")) as f:
+                    json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            out.append(step)
         return sorted(out)
+
+    def manifest(self, step: int) -> dict:
+        """The saved manifest (incl. `extra`) for one checkpoint step."""
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        with open(path) as f:
+            return json.load(f)
 
     def restore(self, like: Any, step: int | None = None,
                 shardings: Any = None) -> tuple[int, Any]:

@@ -501,8 +501,9 @@ class OCCEngine:
 
     def run_from_proposals(self, x: jnp.ndarray, propose_fn=None, *,
                            pool: CenterPool | None = None, state: Any = None,
-                           n_bootstrap: int = 0,
-                           on_commit=None) -> OCCPassResult:
+                           n_bootstrap: int = 0, on_commit=None,
+                           on_outputs=None,
+                           epoch_base: int = 0) -> OCCPassResult:
         """One pass with a PLUGGABLE proposal source — the host-driven dual
         of `run()`, bit-identical to it on the same data.
 
@@ -525,6 +526,23 @@ class OCCEngine:
         epoch's commit — the per-epoch replication hook: the cluster driver
         publishes the pool delta to followers here, so replication is
         per-epoch exactly as in the paper, not per-pass.
+
+        on_outputs(epoch, assign_e, send_e, stats_e), when given, also runs
+        after each main epoch — BEFORE on_commit, so a master that dies
+        inside its commit hook has already exported the epoch — with that
+        epoch's raw (still padded) assignment block, send mask, and
+        (proposed, accepted, cap) scalars.  The §14 audit hook: a
+        crash-recovery driver digests per-epoch outputs so runs that cross
+        a promotion can be compared bit-for-bit against an uninterrupted
+        reference.
+
+        epoch_base shifts the epoch indices reported to propose_fn /
+        on_commit / on_outputs (and nothing else): a promoted master that
+        resumes from commit watermark v passes the REMAINING points with
+        epoch_base=v, so global epoch numbering — and therefore worker
+        shard addressing and publish version numbering — continues
+        exactly where the dead master stopped.  Offsets stay relative to
+        the x of THIS call.
 
         Adaptive caps need the fused pass's observe/retry machinery and the
         mesh path shards inside the compiled scan; both are refused here.
@@ -576,10 +594,11 @@ class OCCEngine:
 
         am_parts, sm_parts, sent_l, acc_l, cap_l = [], [], [], [], []
         for e in range(t_epochs):
+            ge = epoch_base + e          # global epoch index (§14 resume)
             cut = slice(e * self.pb, (e + 1) * self.pb)
             s_, p_, a_, sf_, ve = propose_fn(
                 pool, xs[cut], jax.tree.map(lambda s: s[cut], ss),
-                valid[cut], epoch=e, offset=nb + e * self.pb)
+                valid[cut], epoch=ge, offset=nb + e * self.pb)
             pool, (ae, sde, ns, na, ce) = _finish_epoch_jit(
                 self.txn, pool, s_, p_, a_, sf_, ve,
                 validate_cap=cap, scan_mode=sm)
@@ -589,8 +608,10 @@ class OCCEngine:
             sent_l.append(ns)
             acc_l.append(na)
             cap_l.append(ce)
+            if on_outputs is not None:
+                on_outputs(ge, ae, sde, (ns, na, ce))
             if on_commit is not None:
-                on_commit(pool, e, t_epochs)
+                on_commit(pool, ge, t_epochs)
 
         unpad = lambda a: a[:n_rest]
         assign = jax.tree.map(

@@ -20,6 +20,18 @@ One frame format carries BOTH planes of the multi-process system:
               of `txn.propose` on its shard, concatenated master-side in
               worker order (== global index order)
 
+  control plane (crash recovery / promotion, §14):
+    CTRL      one coordinator/HA control message: an `op` string plus
+              op-specific scalar fields (who-is-master, orphaned-watermark
+              reports, PROMOTE/FOLLOW directives, per-epoch output digests)
+
+Term fencing (§14): HELLO, STEP, DELTA and SNAPSHOT frames carry the
+sender's `term` — the promotion epoch, bumped by every master handover.  A
+receiver that has seen term t rejects frames with term < t, so a zombie
+master that missed its own demotion cannot corrupt workers or followers;
+a server receiving a HELLO with a NEWER term than its own knows it is the
+zombie and must fence itself off.
+
 Framing: a fixed 10-byte header `!4sBBI` (magic, protocol version, frame
 type, payload length) followed by the payload: `!I` metadata length, the
 metadata as canonical JSON (sorted keys, no whitespace — byte-stable so
@@ -45,19 +57,22 @@ import numpy as np
 from repro.serving.snapshot import CenterDelta
 
 __all__ = [
-    "HELLO", "SNAPSHOT", "DELTA", "ACK", "FIN", "STEP", "PROPOSE",
+    "HELLO", "SNAPSHOT", "DELTA", "ACK", "FIN", "STEP", "PROPOSE", "CTRL",
     "FRAME_NAMES", "PROTOCOL_VERSION", "encode_frame", "decode_frame",
     "read_frame", "write_frame", "delta_frame", "frame_delta", "hello_frame",
-    "ack_frame", "fin_frame", "step_frame", "propose_frame",
+    "ack_frame", "fin_frame", "step_frame", "propose_frame", "ctrl_frame",
 ]
 
 MAGIC = b"OCC1"
-PROTOCOL_VERSION = 1
+# v2: HELLO/STEP/DELTA/SNAPSHOT carry `term` (promotion fencing, §14) and
+# the CTRL frame type joins the family.  Golden fixture regenerated.
+PROTOCOL_VERSION = 2
 _HEADER = struct.Struct("!4sBBI")   # magic, proto version, frame type, len
 
-HELLO, SNAPSHOT, DELTA, ACK, FIN, STEP, PROPOSE = range(1, 8)
+HELLO, SNAPSHOT, DELTA, ACK, FIN, STEP, PROPOSE, CTRL = range(1, 9)
 FRAME_NAMES = {HELLO: "HELLO", SNAPSHOT: "SNAPSHOT", DELTA: "DELTA",
-               ACK: "ACK", FIN: "FIN", STEP: "STEP", PROPOSE: "PROPOSE"}
+               ACK: "ACK", FIN: "FIN", STEP: "STEP", PROPOSE: "PROPOSE",
+               CTRL: "CTRL"}
 
 
 def _canonical_json(meta: dict) -> bytes:
@@ -161,16 +176,18 @@ def write_frame(sock: socket.socket, frame: bytes) -> None:
 
 # ------------------------------------------------------------ frame builders
 
-def delta_frame(delta: CenterDelta, ftype: int = DELTA) -> bytes:
+def delta_frame(delta: CenterDelta, ftype: int = DELTA,
+                term: int = 0) -> bytes:
     """A `CenterDelta` on the wire (DELTA, or SNAPSHOT for the full-prefix
-    rebase bootstrap — same layout, different frame type)."""
+    rebase bootstrap — same layout, different frame type).  `term` is the
+    sender's promotion term (§14 fencing); 0 = single-master deployment."""
     meta = dict(model=delta.model, version=delta.version, start=delta.start,
                 count=delta.count, capacity=delta.capacity,
                 rebase=bool(delta.rebase), n_seen=delta.n_seen,
                 epochs=delta.epochs, overflow=bool(delta.overflow),
                 objective=delta.objective, cap_est=delta.cap_est,
                 cap_trace=None if delta.cap_trace is None
-                else list(delta.cap_trace))
+                else list(delta.cap_trace), term=term)
     return encode_frame(ftype, meta, [("rows", np.asarray(delta.rows))])
 
 
@@ -187,9 +204,10 @@ def frame_delta(meta: dict, arrays: dict[str, np.ndarray]) -> CenterDelta:
 
 
 def hello_frame(role: str, model: str | None = None, have_version: int = 0,
-                worker: int = -1) -> bytes:
+                worker: int = -1, term: int = 0) -> bytes:
     return encode_frame(HELLO, dict(role=role, model=model,
-                                    have_version=have_version, worker=worker))
+                                    have_version=have_version, worker=worker,
+                                    term=term))
 
 
 def ack_frame(model: str | None, version: int) -> bytes:
@@ -200,10 +218,22 @@ def fin_frame(reason: str = "") -> bytes:
     return encode_frame(FIN, dict(reason=reason))
 
 
-def step_frame(epoch: int, count: int) -> bytes:
+def step_frame(epoch: int, count: int, term: int = 0) -> bytes:
     """Master → worker: start epoch `epoch`; `count` echoes the pool
-    watermark so the worker can assert its replica is in sync."""
-    return encode_frame(STEP, dict(epoch=epoch, count=count))
+    watermark so the worker can assert its replica is in sync; `term` is
+    the sender's promotion term — a worker that has already answered a
+    term-t master must reject STEPs from any term < t (§14)."""
+    return encode_frame(STEP, dict(epoch=epoch, count=count, term=term))
+
+
+def ctrl_frame(op: str, **fields) -> bytes:
+    """One control-plane message (§14): an `op` string plus op-specific
+    JSON-scalar fields.  The HA coordinator and its nodes speak only CTRL
+    frames — who-is-master queries, orphaned-watermark reports, the
+    PROMOTE/FOLLOW directives, per-epoch output digests, done/ready acks —
+    so the control protocol shares the one framed codec (and its golden
+    fixture) with the data planes."""
+    return encode_frame(CTRL, dict(op=op, **fields))
 
 
 def propose_frame(epoch: int, worker: int,

@@ -1,4 +1,5 @@
-"""Socket transport for delta replication: acks, watermark, bootstrap (§13).
+"""Socket transport for delta replication: acks, watermark, bootstrap,
+backpressure, fencing and fault injection (§13–§14).
 
 The `Transport` interface is the seam between the OCC publication path and
 the bytes that carry it: a `SnapshotStore(delta=True, wire=transport)`
@@ -6,7 +7,9 @@ calls `send(CenterDelta)` on every publish and never learns whether the
 other side is a deque in the same process (`replication.DeltaChannel`, the
 loopback backend) or follower processes on real sockets
 (`ReplicationServer` here).  Both back ends preserve the one invariant the
-stores rely on: per-model deltas arrive in publish order, exactly once.
+stores rely on: per-model deltas arrive in publish order — live deltas
+exactly once, with any loss repaired by a full-prefix SNAPSHOT rebase so
+the *state* stream is still exactly-once.
 
 `ReplicationServer` is the primary's side of the wire:
 
@@ -24,17 +27,38 @@ stores rely on: per-model deltas arrive in publish order, exactly once.
     `SnapshotStore.apply_delta` already implements rebase semantics, so
     bootstrap needs no new follower code path — the joiner applies the
     snapshot like any delta and then tails the live stream, landing
-    bit-identical to a follower that was attached from version 1.
+    bit-identical to a follower that was attached from version 1;
+  * backpressure (§14) — per-follower outbound queues are BOUNDED
+    (`max_queue`).  A follower too slow to drain its queue is lagged: its
+    queued frames are discarded and replaced by one fresh SNAPSHOT (the
+    shadow's latest as a rebase delta), so server memory per follower is
+    bounded by `max_queue` frames + 1 snapshot while the follower still
+    converges to the exact primary state — the drop-to-resync policy;
+  * term fencing (§14) — the server stamps every outbound frame with its
+    promotion `term`.  A HELLO carrying a NEWER term proves a newer
+    master has been promoted: the server marks itself `fenced` and stops
+    accepting connections — the zombie-master guard.
 
 `ReplicationClient` is the follower loop: connect → HELLO → apply
 SNAPSHOT/DELTA frames into a local delta-mode store → ACK each version →
-stop on FIN or EOF.  It runs inline (`run()`) or on a daemon thread
-(`start()`); `launch/occ_follower.py` wraps it as a process entrypoint.
+stop on FIN or EOF.  With `reconnect=True` a broken stream is retried
+with exponential backoff + seeded full jitter; the HELLO carries the
+store's latest version, so a reconnect resumes exactly where the stream
+broke (or takes a SNAPSHOT resync if it fell behind).  Duplicate frames
+(at-least-once redelivery after a reconnect race, or chaos `dup`
+injection) are ACKed but not re-applied; a sequence gap (chaos `drop`)
+raises inside `apply_delta` and is healed by the same reconnect-and-
+resync path.  Frames with a stale term are rejected without ACK.
+
+Both sides accept a `fault.FaultPlan` and consult it at named points
+(`server.writer`, `client.apply`) — the chaos tests drive delayed,
+dropped, duplicated frames and socket resets through real code paths.
 """
 from __future__ import annotations
 
 import abc
 import queue
+import random
 import socket
 import threading
 import time
@@ -42,6 +66,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.distributed.fault import FaultPlan
 from repro.distributed.protocol import (ACK, DELTA, FIN, HELLO, SNAPSHOT,
                                         ack_frame, delta_frame, fin_frame,
                                         frame_delta, hello_frame, read_frame,
@@ -56,9 +81,11 @@ class Transport(abc.ABC):
     """Delta fan-out seam between a primary store and its followers.
 
     Implementations must deliver each model's deltas to every follower in
-    publish order, exactly once.  `pump`/`pending` exist for pull-based
-    back ends (the in-process loopback lets tests control interleaving);
-    push-based back ends deliver asynchronously and leave them as no-ops.
+    publish order, exactly once at the state level (a lossy path must
+    repair itself with a rebase SNAPSHOT).  `pump`/`pending` exist for
+    pull-based back ends (the in-process loopback lets tests control
+    interleaving); push-based back ends deliver asynchronously and leave
+    them as no-ops.
     """
 
     def __init__(self) -> None:
@@ -109,38 +136,53 @@ class _FollowerConn:
     """Server-side state for one connected follower socket."""
 
     def __init__(self, sock: socket.socket, model: str | None,
-                 have_version: int):
+                 have_version: int, max_queue: int):
         self.sock = sock
         self.model = model
         self.have_version = have_version
-        self.q: "queue.SimpleQueue[bytes | None]" = queue.SimpleQueue()
+        # bounded: a slow follower triggers drop-to-resync, never unbounded
+        # server memory (max_queue=0 keeps the legacy unbounded behavior)
+        self.q: "queue.Queue[bytes | None]" = queue.Queue(maxsize=max_queue)
         self.acked = 0                      # highest version ACKed
         self.alive = True
         self.sent_ts: dict[int, float] = {}  # version → enqueue time
         self.bootstrap_version: int | None = None
+        self.resync_version: int | None = None   # pending lag-resync target
+        self.dropped = 0                    # frames discarded on overflow
 
 
 class ReplicationServer(Transport):
-    """Primary-side socket transport: fan-out, acks, watermark, bootstrap.
+    """Primary-side socket transport: fan-out, acks, watermark, bootstrap,
+    bounded-queue backpressure and term fencing.
 
     One accept thread; per follower connection one reader (ACKs, runs the
     handshake) and one writer (drains the outbound frame queue) thread.
-    `send` never blocks on a slow follower — frames queue per connection;
-    a dead connection is detected by EOF/send failure and deregistered.
+    `send` never blocks on a slow follower — frames queue per connection
+    up to `max_queue`, beyond which the queue is dropped and the follower
+    scheduled for a SNAPSHOT resync; a dead connection is detected by
+    EOF/send failure and deregistered.
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 shadow_capacity: int = 4):
+                 shadow_capacity: int = 4, max_queue: int = 1024,
+                 term: int = 0, fault: FaultPlan | None = None):
         super().__init__()
         self._lock = threading.RLock()
         self._acked_cv = threading.Condition(self._lock)
         self._shadow: dict[str | None, SnapshotStore] = {}
         self._shadow_capacity = shadow_capacity
+        self._max_queue = max_queue
+        self.term = term
+        self.fault = fault
+        self.fenced = False        # a newer-term master exists (§14)
         self._conns: list[_FollowerConn] = []
         self._local: dict[str | None, list[SnapshotStore]] = {}
         self._local_acked: dict[int, int] = {}   # id(store) → version
         self.ack_latency_s: list[float] = []
         self.n_bootstraps = 0
+        self.n_resyncs = 0         # lag-triggered SNAPSHOT resyncs
+        self.n_dropped_frames = 0  # frames discarded by backpressure
+        self.n_fenced_hellos = 0   # HELLOs carrying a newer term
         self._closing = False
         self._lsock = socket.create_server((host, port))
         self.address = self._lsock.getsockname()
@@ -153,16 +195,19 @@ class ReplicationServer(Transport):
     # ------------------------------------------------------------- sending
 
     def send(self, delta: CenterDelta) -> None:
-        frame = delta_frame(delta)
         with self._lock:
             if self._closing:
                 raise RuntimeError("transport closed")
+            if self.fenced:
+                raise RuntimeError(f"fenced: a master with term > {self.term}"
+                                   " exists")
             shadow = self._shadow.get(delta.model)
             if shadow is None:
                 shadow = SnapshotStore(capacity=self._shadow_capacity,
                                        delta=True, model=delta.model)
                 self._shadow[delta.model] = shadow
             shadow.apply_delta(delta)
+            frame = delta_frame(delta, term=self.term)
             self.n_sent += 1
             self.bytes_sent += len(frame)
             for store in self._local.get(delta.model, ()):  # loopback attach
@@ -172,8 +217,38 @@ class ReplicationServer(Transport):
             now = time.perf_counter()
             for conn in self._conns:
                 if conn.alive and conn.model == delta.model:
-                    conn.sent_ts[delta.version] = now
-                    conn.q.put(frame)
+                    self._enqueue(conn, shadow, delta, frame, now)
+
+    def _enqueue(self, conn: _FollowerConn, shadow: SnapshotStore,
+                 delta: CenterDelta, frame: bytes, now: float) -> None:
+        """Offer one live frame to a follower queue under the drop-to-
+        resync backpressure policy (§14): on overflow, discard everything
+        queued for this follower and enqueue ONE fresh SNAPSHOT instead —
+        the shadow already folded `delta`, so the snapshot covers it and
+        the next live delta continues the stream with no gap.  Per-
+        follower server memory is bounded by max_queue frames + 1
+        snapshot, and the follower still converges bit-identically."""
+        try:
+            conn.q.put_nowait(frame)
+            conn.sent_ts[delta.version] = now
+            return
+        except queue.Full:
+            pass
+        dropped = 0
+        while True:
+            try:
+                conn.q.get_nowait()
+                dropped += 1
+            except queue.Empty:
+                break
+        conn.dropped += dropped
+        self.n_dropped_frames += dropped + 1   # +1: the frame never queued
+        conn.sent_ts.clear()
+        boot = shadow.bootstrap_delta()
+        conn.q.put_nowait(delta_frame(boot, SNAPSHOT, term=self.term))
+        conn.sent_ts[boot.version] = now
+        conn.resync_version = boot.version
+        self.n_resyncs += 1
 
     def attach(self, model: str | None,
                store: SnapshotStore) -> SnapshotStore:
@@ -193,6 +268,19 @@ class ReplicationServer(Transport):
             self._local.setdefault(model, []).append(store)
         return store
 
+    def seed_shadow(self, model: str | None, store: SnapshotStore) -> None:
+        """Adopt `store`'s full prefix as this server's shadow for `model`
+        — the promotion path (§14): a promoted follower's server must
+        bootstrap late or stale joiners from its own replicated history
+        before it has published anything itself."""
+        boot = store.bootstrap_delta()
+        with self._lock:
+            shadow = SnapshotStore(capacity=self._shadow_capacity,
+                                   delta=True, model=model)
+            if boot is not None:
+                shadow.apply_delta(boot)
+            self._shadow[model] = shadow
+
     # ------------------------------------------------------------ watermark
 
     def commit_watermark(self, model: str | None = None) -> int | None:
@@ -207,10 +295,17 @@ class ReplicationServer(Transport):
                    timeout: float = 30.0) -> bool:
         """Block until every live follower of `model` has acked `version`
         (vacuously true with zero followers).  The replication barrier the
-        cluster driver uses before declaring a pass fully replicated."""
+        cluster driver uses before declaring a pass fully replicated.
+
+        Wakes promptly — never runs to the full timeout — when a follower
+        is dropped (the watermark is recomputed over the survivors) or
+        the server is closed/aborted mid-wait (returns False: the barrier
+        can no longer be met)."""
         deadline = time.monotonic() + timeout
         with self._acked_cv:
             while True:
+                if self._closing:
+                    return False
                 wm = self.commit_watermark(model)
                 if wm is None or wm >= version:
                     return True
@@ -228,6 +323,11 @@ class ReplicationServer(Transport):
         with self._lock:
             return sum(c.q.qsize() for c in self._conns if c.alive)
 
+    def max_pending_bound(self) -> int:
+        """The backpressure guarantee: queued frames per follower never
+        exceed max_queue (+1 slot headroom for the resync SNAPSHOT)."""
+        return self._max_queue + 1 if self._max_queue else 0
+
     def metrics(self) -> dict:
         with self._lock:
             lat = sorted(self.ack_latency_s)
@@ -236,6 +336,10 @@ class ReplicationServer(Transport):
             return dict(n_sent=self.n_sent, n_delivered=self.n_delivered,
                         bytes_sent=self.bytes_sent, n_acks=len(lat),
                         n_bootstraps=self.n_bootstraps,
+                        n_resyncs=self.n_resyncs,
+                        n_dropped_frames=self.n_dropped_frames,
+                        n_fenced_hellos=self.n_fenced_hellos,
+                        max_queue=self._max_queue, term=self.term,
                         ack_p50_ms=pct(0.50), ack_p99_ms=pct(0.99))
 
     # ----------------------------------------------------------- conn plumbing
@@ -265,8 +369,21 @@ class ReplicationServer(Transport):
                                             "follower-only"))
                 sock.close()
                 return
+            peer_term = int(meta.get("term", 0))
+            if peer_term > self.term:
+                # §14 zombie guard: a follower from a NEWER term proves a
+                # newer master was promoted — this server must stand down.
+                with self._acked_cv:
+                    self.fenced = True
+                    self.n_fenced_hellos += 1
+                    self._acked_cv.notify_all()
+                write_frame(sock, fin_frame(
+                    f"fenced: server term {self.term} < peer {peer_term}"))
+                sock.close()
+                return
             conn = _FollowerConn(sock, meta.get("model"),
-                                 int(meta.get("have_version", 0)))
+                                 int(meta.get("have_version", 0)),
+                                 self._max_queue)
             with self._lock:
                 if self._closing:
                     sock.close()
@@ -280,7 +397,8 @@ class ReplicationServer(Transport):
                     if conn.have_version != latest:
                         boot = shadow.bootstrap_delta()
                         conn.sent_ts[boot.version] = time.perf_counter()
-                        conn.q.put(delta_frame(boot, SNAPSHOT))
+                        conn.q.put(delta_frame(boot, SNAPSHOT,
+                                               term=self.term))
                         conn.bootstrap_version = boot.version
                         self.n_bootstraps += 1
                 self._conns.append(conn)
@@ -309,10 +427,14 @@ class ReplicationServer(Transport):
             ftype, meta, _ = fr
             if ftype == ACK:
                 with self._acked_cv:
-                    conn.acked = max(conn.acked, int(meta["version"]))
-                    ts = conn.sent_ts.pop(int(meta["version"]), None)
+                    version = int(meta["version"])
+                    conn.acked = max(conn.acked, version)
+                    ts = conn.sent_ts.pop(version, None)
                     if ts is not None:
                         self.ack_latency_s.append(time.perf_counter() - ts)
+                    if (conn.resync_version is not None
+                            and version >= conn.resync_version):
+                        conn.resync_version = None   # lagger caught up
                     self._acked_cv.notify_all()
             elif ftype == FIN:
                 return
@@ -322,8 +444,21 @@ class ReplicationServer(Transport):
             frame = conn.q.get()
             if frame is None:
                 return
+            send_n = 1
+            for rule in (self.fault.at("server.writer")
+                         if self.fault is not None else ()):
+                if rule.kind == "delay":
+                    time.sleep(rule.delay_s)
+                elif rule.kind == "drop":
+                    send_n = 0           # frame vanishes on the wire
+                elif rule.kind == "dup":
+                    send_n = 2           # at-least-once redelivery
+                elif rule.kind == "reset":
+                    self._drop(conn)     # hard socket reset, no FIN
+                    return
             try:
-                conn.sock.sendall(frame)
+                for _ in range(send_n):
+                    conn.sock.sendall(frame)
             except OSError:
                 self._drop(conn)
                 return
@@ -337,22 +472,37 @@ class ReplicationServer(Transport):
                 self._conns.remove(conn)
             # a dead follower no longer holds the watermark back
             self._acked_cv.notify_all()
-        conn.q.put(None)
+        self._put_final(conn, None)
         try:
             conn.sock.close()
         except OSError:
             pass
 
+    @staticmethod
+    def _put_final(conn: _FollowerConn, *frames: bytes | None) -> None:
+        """Queue shutdown frames even on a full bounded queue (evicting
+        stale entries — we are tearing the connection down anyway)."""
+        for fr in frames:
+            while True:
+                try:
+                    conn.q.put_nowait(fr)
+                    break
+                except queue.Full:
+                    try:
+                        conn.q.get_nowait()
+                    except queue.Empty:
+                        pass
+
     def close(self, reason: str = "shutdown") -> None:
-        with self._lock:
+        with self._acked_cv:
             if self._closing:
                 return
             self._closing = True
             conns = list(self._conns)
+            self._acked_cv.notify_all()   # wake wait_acked: barrier is off
         fin = fin_frame(reason)
         for conn in conns:
-            conn.q.put(fin)
-            conn.q.put(None)
+            self._put_final(conn, fin, None)
         try:
             self._lsock.close()
         except OSError:
@@ -362,6 +512,31 @@ class ReplicationServer(Transport):
             if t is not threading.current_thread():
                 t.join(timeout=5.0)
 
+    def abort(self) -> None:
+        """Crash the primary: close the listener and every follower socket
+        with NO FIN — followers observe a bare EOF, the §14 orphaned
+        signal that starts promotion.  Queued frames are discarded."""
+        with self._acked_cv:
+            if self._closing:
+                return
+            self._closing = True
+            conns = list(self._conns)
+            self._acked_cv.notify_all()
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        for conn in conns:
+            try:
+                conn.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+            self._put_final(conn, None)
+
 
 class ReplicationClient:
     """Follower loop over one socket: HELLO → apply deltas → ACK → FIN.
@@ -369,20 +544,46 @@ class ReplicationClient:
     `store` may be a pre-existing delta-mode store (reconnect: HELLO
     carries its latest version, and the server bootstraps only if that is
     behind) or None for a fresh joiner.
+
+    With `reconnect=True`, a broken stream (EOF, socket error, or a
+    sequence gap from a lost frame) is retried: exponential backoff
+    doubling from `backoff_s` up to `backoff_max_s`, multiplied by a
+    seeded full jitter in [1, 2) — `backoff_log` records every sleep for
+    the tests.  The failure counter resets whenever a connection made
+    progress, so `max_retries` bounds CONSECUTIVE fruitless attempts.
+    Duplicates are ACKed but not re-applied; frames with `term` below the
+    client's known term are rejected without ACK (§14 fencing).
     """
 
     def __init__(self, address: tuple[str, int], model: str | None = None,
                  store: SnapshotStore | None = None, capacity: int = 16,
-                 connect_timeout: float = 10.0):
+                 connect_timeout: float = 10.0, reconnect: bool = False,
+                 max_retries: int = 6, backoff_s: float = 0.05,
+                 backoff_max_s: float = 2.0, seed: int = 0, term: int = 0,
+                 fault: FaultPlan | None = None):
         self.address = tuple(address)
         self.model = model
         self.store = store if store is not None else SnapshotStore(
             capacity=capacity, delta=True, model=model)
         self.connect_timeout = connect_timeout
+        self.reconnect = reconnect
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_max_s = backoff_max_s
+        self.term = term
+        self.fault = fault
         self.n_applied = 0
+        self.n_duplicates = 0      # redelivered versions ACKed, not applied
+        self.n_gaps = 0            # sequence gaps healed by reconnect
+        self.n_fenced = 0          # stale-term frames rejected
+        self.n_reconnects = 0      # successful re-connections
+        self.backoff_log: list[float] = []
         self.bootstrapped = False
         self.fin_reason: str | None = None
+        self._rng = random.Random(seed)
         self._sock: socket.socket | None = None
+        self._ever_connected = False
+        self._stop = False
         self._thread: threading.Thread | None = None
         self._applied_cv = threading.Condition()
 
@@ -393,40 +594,117 @@ class ReplicationClient:
                                               timeout=self.connect_timeout)
         self._sock.settimeout(None)
         write_frame(self._sock, hello_frame("follower", self.model,
-                                            have_version=have))
+                                            have_version=have,
+                                            term=self.term))
+        if self._ever_connected:
+            self.n_reconnects += 1
+        self._ever_connected = True
 
     def run(self) -> None:
-        """Apply the stream until FIN or EOF (inline; `start` for a
-        thread).  Each applied version is ACKed immediately after the
-        store commit — the ack IS the durability signal upstream."""
-        if self._sock is None:
-            self.connect()
-        sock = self._sock
+        """Apply the stream until FIN, orderly EOF, or retry exhaustion
+        (inline; `start` for a thread).  Each applied version is ACKed
+        immediately after the store commit — the ack IS the durability
+        signal upstream."""
+        failures = 0
         try:
-            while True:
+            while not self._stop:
+                if self._sock is None:
+                    try:
+                        self.connect()
+                    except OSError:
+                        if not self._backoff(failures):
+                            return
+                        failures += 1
+                        continue
+                outcome, progressed = self._run_stream()
+                self._close_sock()
+                if outcome == "fin" or self._stop or not self.reconnect:
+                    return
+                if progressed:
+                    failures = 0
+                if not self._backoff(failures):
+                    return
+                failures += 1
+        finally:
+            self.close()
+
+    def _backoff(self, failures: int) -> bool:
+        """Sleep before retry `failures`; False when retries are off or
+        exhausted.  Exponential with seeded full jitter in [1, 2)x."""
+        if not self.reconnect or self._stop or failures >= self.max_retries:
+            return False
+        delay = min(self.backoff_max_s, self.backoff_s * (2 ** failures))
+        delay *= 1.0 + self._rng.random()
+        self.backoff_log.append(delay)
+        time.sleep(delay)
+        return True
+
+    def _run_stream(self) -> tuple[str, bool]:
+        """Drain one connection; (outcome, made-progress).  Outcomes:
+        "fin" (orderly stop — never retried), "eof"/"conn" (stream broke),
+        "gap" (lost frame detected by the store: reconnect so the server's
+        bootstrap path resyncs us)."""
+        sock = self._sock
+        progressed = False
+        try:
+            while not self._stop:
                 fr = read_frame(sock)
                 if fr is None:
-                    return
+                    return "eof", progressed
                 ftype, meta, arrays = fr
                 if ftype in (DELTA, SNAPSHOT):
+                    term = int(meta.get("term", 0))
+                    if term < self.term:
+                        # §14: a zombie master's frame — reject, no ACK
+                        self.n_fenced += 1
+                        continue
+                    self.term = max(self.term, term)
                     delta = frame_delta(meta, arrays)
-                    self.store.apply_delta(delta)
+                    if self.fault is not None:
+                        dropped = False
+                        for rule in self.fault.at("client.apply"):
+                            if rule.kind == "delay":
+                                time.sleep(rule.delay_s)
+                            elif rule.kind == "drop":
+                                dropped = True    # lost in apply: no ACK
+                            elif rule.kind == "reset":
+                                self._close_sock()
+                                return "conn", progressed
+                        if dropped:
+                            continue
+                    have = self.store.latest_meta()
+                    if have is not None and delta.version <= have.version:
+                        # at-least-once redelivery: already applied — ACK
+                        # again (the server may have lost the first ack)
+                        self.n_duplicates += 1
+                        write_frame(sock, ack_frame(self.model,
+                                                    delta.version))
+                        progressed = True
+                        continue
+                    try:
+                        self.store.apply_delta(delta)
+                    except ValueError:
+                        # sequence gap (dropped frame): reconnect; HELLO
+                        # advertises our version and the server resyncs
+                        self.n_gaps += 1
+                        return "gap", progressed
                     with self._applied_cv:
                         self.n_applied += 1
                         if ftype == SNAPSHOT:
                             self.bootstrapped = True
                         self._applied_cv.notify_all()
                     write_frame(sock, ack_frame(self.model, delta.version))
+                    progressed = True
                 elif ftype == FIN:
                     self.fin_reason = meta.get("reason", "")
-                    return
+                    return "fin", progressed
+            return "fin", progressed
         except (ConnectionError, OSError):
-            return
-        finally:
-            self.close()
+            return "conn", progressed
 
     def start(self) -> "ReplicationClient":
-        self.connect()
+        if self._sock is None and not self.reconnect:
+            self.connect()
         self._thread = threading.Thread(target=self.run, name="repl-client",
                                         daemon=True)
         self._thread.start()
@@ -445,14 +723,22 @@ class ReplicationClient:
                     return False
                 self._applied_cv.wait(min(left, 0.2))
 
+    def stop(self) -> None:
+        """Request the loop to exit (unblocks a pending read)."""
+        self._stop = True
+        self._close_sock()
+
     def join(self, timeout: float | None = None) -> None:
         if self._thread is not None:
             self._thread.join(timeout)
 
-    def close(self) -> None:
+    def _close_sock(self) -> None:
         if self._sock is not None:
             try:
                 self._sock.close()
             except OSError:
                 pass
             self._sock = None
+
+    def close(self) -> None:
+        self._close_sock()

@@ -67,6 +67,8 @@ class ClusterConfig:
     late_join_frac: float = 0.5     # ...after this fraction of the epochs
     worker_timeout_s: float = 120.0  # heartbeat timeout (EOF detects deaths)
     spawn_timeout_s: float = 120.0   # worker connect + follower join budget
+    straggler_threshold: float = 3.0  # epoch slower than this x EWMA → event
+    straggler_warmup: int = 3        # ignore compile-dominated first epochs
     # chaos knobs (tests/test_occ_cluster.py pins their outcomes)
     die_worker: int | None = None    # this worker exits without proposing...
     die_epoch: int | None = None     # ...upon receiving STEP for this epoch
@@ -107,55 +109,52 @@ def _padded_epochs(cfg: ClusterConfig, x, state):
 
 # --------------------------------------------------------------- worker side
 
-def worker_main(cfg_kw: dict, worker_id: int, port: int) -> None:
-    """One propose worker (spawned process): tail pool deltas, answer STEP
-    frames with the jitted shard propose, exit on FIN.
+def _serve_master(sock: socket.socket, cfg: ClusterConfig, worker_id: int,
+                  txn, xp, sp, replica: dict) -> str:
+    """Serve ONE master connection until FIN ("fin") or a broken stream
+    ("eof" — the §14 orphaned signal for the HA worker's reconnect loop).
 
-    The pool replica is rebuilt from broadcast deltas only — the worker
-    never sees the master's pool object, yet proposes against bit-equal
-    state C^{t-1} (append-only pool + prefix mask ⇒ the replica IS the
-    pool).  If cfg.die_epoch targets this worker it exits hard (os._exit)
-    upon the STEP, before proposing — the chaos tests' mid-epoch death.
+    `replica` (centers ndarray / count / term) persists across calls so a
+    reconnecting HA worker keeps its pool between masters; a promoted
+    master's first broadcast is a rebase delta that resets it anyway.
+    Term fencing (§14): DELTA/SNAPSHOT/STEP frames below the replica's
+    known term are zombie-master traffic and are ignored outright.
     """
-    os.environ.setdefault("JAX_PLATFORMS", "cpu")
     import jax
     import jax.numpy as jnp
     from repro.core.engine import _propose_epoch_jit
     from repro.core.occ import CenterPool
     from repro.distributed.protocol import (
-        DELTA, FIN, SNAPSHOT, STEP, frame_delta, hello_frame, propose_frame,
+        DELTA, FIN, SNAPSHOT, STEP, frame_delta, propose_frame,
         read_frame, write_frame)
 
-    cfg = ClusterConfig(**cfg_kw)
-    x = _cluster_data(cfg)
-    txn = _cluster_txn(cfg)
     spb = cfg.pb // cfg.n_workers
-    state = txn.make_state(x, 0)
-    _, xp, sp = _padded_epochs(cfg, x, state)
-
-    centers = np.zeros((cfg.k_max, cfg.dim), np.float32)
-    count = 0
-    sock = socket.create_connection(("127.0.0.1", port), timeout=30.0)
-    sock.settimeout(None)
-    write_frame(sock, hello_frame("worker", cfg.model, worker=worker_id))
+    centers = replica["centers"]
     try:
         while True:
             fr = read_frame(sock)
             if fr is None:
-                return
+                return "eof"
             ftype, meta, arrays = fr
+            if ftype in (DELTA, SNAPSHOT, STEP):
+                term = int(meta.get("term", 0))
+                if term < replica["term"]:
+                    continue            # §14 fencing: stale-term frame
+                replica["term"] = term
             if ftype in (DELTA, SNAPSHOT):
                 delta = frame_delta(meta, arrays)
                 if delta.rebase:
                     centers[:] = 0.0
-                    count = 0
-                assert delta.start == count, "pool delta gap at worker"
+                    replica["count"] = 0
+                assert delta.start == replica["count"], \
+                    "pool delta gap at worker"
                 centers[delta.start:delta.count] = delta.rows
-                count = delta.count
+                replica["count"] = delta.count
             elif ftype == STEP:
                 e = int(meta["epoch"])
                 if cfg.die_epoch == e and cfg.die_worker == worker_id:
                     os._exit(3)          # hard mid-epoch death, no FIN
+                count = replica["count"]
                 assert int(meta["count"]) == count, "replica out of sync"
                 pool = CenterPool(
                     jnp.asarray(centers),
@@ -168,9 +167,37 @@ def worker_main(cfg_kw: dict, worker_id: int, port: int) -> None:
                 leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(out)]
                 write_frame(sock, propose_frame(e, worker_id, leaves))
             elif ftype == FIN:
-                return
+                return "fin"
+    except (ConnectionError, OSError):
+        return "eof"
     finally:
         sock.close()
+
+
+def worker_main(cfg_kw: dict, worker_id: int, port: int) -> None:
+    """One propose worker (spawned process): tail pool deltas, answer STEP
+    frames with the jitted shard propose, exit on FIN.
+
+    The pool replica is rebuilt from broadcast deltas only — the worker
+    never sees the master's pool object, yet proposes against bit-equal
+    state C^{t-1} (append-only pool + prefix mask ⇒ the replica IS the
+    pool).  If cfg.die_epoch targets this worker it exits hard (os._exit)
+    upon the STEP, before proposing — the chaos tests' mid-epoch death.
+    """
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.distributed.protocol import hello_frame, write_frame
+
+    cfg = ClusterConfig(**cfg_kw)
+    x = _cluster_data(cfg)
+    txn = _cluster_txn(cfg)
+    state = txn.make_state(x, 0)
+    _, xp, sp = _padded_epochs(cfg, x, state)
+    replica = dict(centers=np.zeros((cfg.k_max, cfg.dim), np.float32),
+                   count=0, term=0)
+    sock = socket.create_connection(("127.0.0.1", port), timeout=30.0)
+    sock.settimeout(None)
+    write_frame(sock, hello_frame("worker", cfg.model, worker=worker_id))
+    _serve_master(sock, cfg, worker_id, txn, xp, sp, replica)
 
 
 # --------------------------------------------------------------- master side
@@ -193,7 +220,6 @@ class _WorkerPlane:
         self._readers: list[threading.Thread] = []
 
     def spawn(self) -> None:
-        from repro.distributed.protocol import HELLO, read_frame
         ctx = mp.get_context("spawn")
         cfg_kw = {**self.cfg.__dict__, "out_path": None}
         for w in range(self.cfg.n_workers):
@@ -201,6 +227,13 @@ class _WorkerPlane:
                             daemon=True)
             p.start()
             self.procs.append(p)
+        self.accept_workers()
+
+    def accept_workers(self) -> None:
+        """Accept `n_workers` HELLO handshakes — from children this plane
+        spawned, or from §14 HA workers reconnecting to a promoted master
+        (the plane does not care who forked them)."""
+        from repro.distributed.protocol import HELLO, read_frame
         self.lsock.settimeout(self.cfg.spawn_timeout_s)
         for _ in range(self.cfg.n_workers):
             sock, _addr = self.lsock.accept()
@@ -281,11 +314,15 @@ class _ClusterProposer:
     worker plane: broadcast the epoch-start pool delta + STEP, gather the
     PROPOSE blocks, reassemble leaves in worker order, mask dead shards."""
 
-    def __init__(self, cfg: ClusterConfig, txn, plane: _WorkerPlane):
+    def __init__(self, cfg: ClusterConfig, txn, plane: _WorkerPlane,
+                 term: int = 0, rebase_first: bool = False):
         self.cfg = cfg
         self.txn = txn
         self.plane = plane
+        self.term = term                # §14: stamped on every broadcast
         self.last_count = 0
+        self._force_rebase = rebase_first   # promoted master: the workers'
+        #   replicas come from a DEAD master's stream — rebase them first
         self._template = None           # (treedef, shard leaf specs)
         self.dead_from: dict[int, int] = {}   # worker → first masked epoch
 
@@ -302,7 +339,8 @@ class _ClusterProposer:
         from repro.serving.snapshot import CenterDelta
         cnp = np.asarray(pool.centers)
         count = int(pool.count)
-        rebase = epoch == 0
+        rebase = epoch == 0 or self._force_rebase
+        self._force_rebase = False
         start = 0 if rebase else self.last_count
         self.last_count = count
         return CenterDelta(model=self.cfg.model, version=epoch, start=start,
@@ -316,8 +354,10 @@ class _ClusterProposer:
         if self._template is None:
             self._template = self._shard_template(pool, x_e, state_e)
         treedef, specs = self._template
-        self.plane.broadcast(delta_frame(self._pool_delta(pool, epoch)))
-        self.plane.broadcast(step_frame(epoch, self.last_count))
+        self.plane.broadcast(delta_frame(self._pool_delta(pool, epoch),
+                                         term=self.term))
+        self.plane.broadcast(step_frame(epoch, self.last_count,
+                                        term=self.term))
         blocks = self.plane.gather(epoch)
         spb = self.cfg.pb // self.cfg.n_workers
         cat = []
@@ -406,8 +446,19 @@ def run_cluster(cfg: ClusterConfig) -> dict:
     engine = OCCEngine(txn, pb=cfg.pb, validate_cap=cfg.validate_cap)
 
     killed = {"done": False}
+    # straggler watchdog on the master's epoch loop: a slow epoch (a hung
+    # or lagging worker that still answers before the heartbeat timeout)
+    # emits a StragglerEvent into the run's metrics instead of passing
+    # silently — the observability half of §13's failure semantics.
+    from repro.distributed.fault import StepWatchdog
+    watchdog = StepWatchdog(threshold=cfg.straggler_threshold,
+                            warmup_steps=cfg.straggler_warmup)
+    last_commit = [time.perf_counter()]
 
     def on_commit(pool, epoch, t_epochs):
+        now = time.perf_counter()
+        watchdog.observe(epoch, now - last_commit[0])
+        last_commit[0] = now
         store.publish_pool(pool, n_seen=min(cfg.n, (epoch + 1) * cfg.pb),
                            epochs=epoch + 1)
         if (cfg.kill_follower_at_epoch == epoch and not killed["done"]
@@ -489,6 +540,9 @@ def run_cluster(cfg: ClusterConfig) -> dict:
         "late_joiners_bootstrapped": boot_ok,
         "full_stream_versions_match": full_stream_ok,
         "worker_deaths": proposer.dead_from,
+        "straggler_events": [
+            dict(step=ev.step, elapsed_s=ev.elapsed, ratio=ev.ratio)
+            for ev in watchdog.events],
         "wall_s": time.perf_counter() - t0,
     }
     assert all(bit.values()), f"multi-process run diverged: {bit}"

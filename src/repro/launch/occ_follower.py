@@ -23,10 +23,20 @@ __all__ = ["follower_main"]
 
 def follower_main(host: str, port: int, model: str | None,
                   result_path: str | None = None,
-                  capacity: int = 128) -> dict:
+                  capacity: int = 128, reconnect: bool = False,
+                  max_retries: int = 6, backoff_s: float = 0.05,
+                  backoff_max_s: float = 2.0) -> dict:
     """Run the follower loop to FIN/EOF; return (and optionally write) the
-    state report.  Spawnable as a `multiprocessing` target."""
-    client = ReplicationClient((host, port), model=model, capacity=capacity)
+    state report.  Spawnable as a `multiprocessing` target.
+
+    With `reconnect=True` a broken stream is retried with exponential
+    backoff + jitter (§14) up to `max_retries` consecutive failures; the
+    re-HELLO carries the follower's watermark, so a retry resumes with the
+    missing suffix (or a SNAPSHOT resync) rather than the full history."""
+    client = ReplicationClient((host, port), model=model, capacity=capacity,
+                               reconnect=reconnect, max_retries=max_retries,
+                               backoff_s=backoff_s,
+                               backoff_max_s=backoff_max_s)
     client.connect()
     client.run()
     store = client.store
@@ -40,6 +50,7 @@ def follower_main(host: str, port: int, model: str | None,
         digest=store_digest(store),
         bootstrapped=client.bootstrapped,
         n_applied=client.n_applied,
+        n_reconnects=client.n_reconnects,
         fin_reason=client.fin_reason,
     )
     if result_path is not None:
@@ -55,10 +66,21 @@ def main(argv=None):
     ap.add_argument("--out", default=None, help="write the JSON report here")
     ap.add_argument("--capacity", type=int, default=128,
                     help="follower snapshot-ring capacity")
+    ap.add_argument("--reconnect", action="store_true",
+                    help="retry a broken stream with backoff + jitter")
+    ap.add_argument("--max-retries", type=int, default=6,
+                    help="consecutive failures before giving up")
+    ap.add_argument("--backoff", type=float, default=0.05,
+                    help="initial reconnect backoff (seconds)")
+    ap.add_argument("--backoff-max", type=float, default=2.0,
+                    help="backoff ceiling (seconds)")
     args = ap.parse_args(argv)
     host, port = args.connect.rsplit(":", 1)
     report = follower_main(host, int(port), args.model, args.out,
-                           args.capacity)
+                           args.capacity, reconnect=args.reconnect,
+                           max_retries=args.max_retries,
+                           backoff_s=args.backoff,
+                           backoff_max_s=args.backoff_max)
     print(json.dumps(report))
 
 

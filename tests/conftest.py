@@ -7,3 +7,16 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--inject-seed", type=int, default=0,
+        help="seed for probabilistic fault-injection schedules — the CI "
+             "chaos job sweeps several so convergence claims are not "
+             "overfitted to one lucky schedule")
+
+
+@pytest.fixture
+def inject_seed(request):
+    return request.config.getoption("--inject-seed")

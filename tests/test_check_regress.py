@@ -1,0 +1,97 @@
+"""Regression-gate math: rolling-tolerance tightening + history loading.
+
+Pure-function tests for benchmarks/check_regress.py — the gate's policy
+(when does history tighten the blanket 30% tolerance, and by how much)
+must be pinned independently of any actual timing run.
+"""
+import json
+
+import pytest
+
+from benchmarks.check_regress import (KEY_METRICS, check, load_history,
+                                      rolling_tolerance)
+
+TOL = 0.30
+
+
+def test_short_history_keeps_default():
+    assert rolling_tolerance([], 1.0, TOL) == TOL
+    assert rolling_tolerance([1.0, 1.01], 1.0, TOL) == TOL      # < min_points
+    assert rolling_tolerance([1.0] * 3, 0.0, TOL) == TOL        # bad baseline
+
+
+def test_tight_history_tightens_to_floor():
+    # five essentially identical green runs: spread ~0 → the floor, never 0
+    hist = [1.000, 1.001, 0.999, 1.002, 1.000]
+    tol = rolling_tolerance(hist, 1.0, TOL)
+    assert tol == pytest.approx(0.10)
+    assert tol < TOL
+
+
+def test_noisy_history_keeps_default_cap():
+    # run-to-run spread worse than the default: the gate must NOT loosen
+    hist = [0.5, 1.0, 1.5, 2.0, 0.8]
+    assert rolling_tolerance(hist, 1.0, TOL) == TOL
+
+
+def test_intermediate_spread_lands_between_floor_and_cap():
+    hist = [1.00, 1.05, 0.95, 1.04, 0.97, 1.02, 1.05]
+    tol = rolling_tolerance(hist, 1.0, TOL)
+    assert 0.10 < tol < TOL
+
+
+def test_single_outlier_does_not_widen():
+    # MAD, not stdev: one wild historical run leaves the tolerance tight
+    calm = [1.000, 1.001, 0.999, 1.002, 1.000, 1.001]
+    spiked = calm + [3.0]
+    assert (rolling_tolerance(spiked, 1.0, TOL)
+            == pytest.approx(rolling_tolerance(calm, 1.0, TOL), rel=0.5))
+    assert rolling_tolerance(spiked, 1.0, TOL) < TOL
+
+
+def test_systematic_offset_reserved_before_noise():
+    # history hovering at 1.2x baseline: the offset term must keep the
+    # tolerance above the offset itself (a fresh 1.2x run is NORMAL here)
+    hist = [1.20, 1.21, 1.19, 1.20, 1.22]
+    tol = rolling_tolerance(hist, 1.0, TOL)
+    assert tol >= 0.20
+
+
+def _rec(norm):
+    return {"bench": "regress_quick",
+            "metrics": {k: 100.0 * v for k, v in norm.items()},
+            "normalized": dict(norm)}
+
+
+def test_load_history_skips_torn_and_foreign(tmp_path):
+    good = {k: 1.0 for k in KEY_METRICS}
+    (tmp_path / "BENCH_a.json").write_text(json.dumps(_rec(good)))
+    (tmp_path / "BENCH_b.json").write_text('{"bench": "regress_q')  # torn
+    (tmp_path / "BENCH_c.json").write_text(json.dumps({"bench": "other"}))
+    (tmp_path / "notes.txt").write_text("not an artifact")
+    hist = load_history(str(tmp_path))
+    assert all(hist[k] == [1.0] for k in KEY_METRICS)
+    assert load_history(str(tmp_path / "missing")) == {
+        k: [] for k in KEY_METRICS}
+
+
+def test_check_applies_per_metric_history(capsys):
+    """End-to-end policy: a 15% slip passes the blanket 30% gate but FAILS
+    once a tight history shrinks that metric's tolerance to the floor."""
+    base = _rec({k: 1.0 for k in KEY_METRICS})
+    fresh = _rec({k: (1.15 if k == "validator_pass_us" else 1.0)
+                  for k in KEY_METRICS})
+    assert check(base, fresh, TOL, history=None) == []
+    hist = {k: [1.000, 1.001, 0.999, 1.002] for k in KEY_METRICS}
+    failures = check(base, fresh, TOL, history=hist)
+    assert len(failures) == 1 and "validator_pass_us" in failures[0]
+    assert "10% tolerance" in failures[0]
+
+
+def test_check_skips_metric_missing_from_baseline():
+    base = _rec({k: 1.0 for k in KEY_METRICS})
+    del base["normalized"]["recovery_replay_us"]
+    fresh = _rec({k: 5.0 for k in KEY_METRICS})     # huge slip everywhere
+    failures = check(base, fresh, TOL)
+    assert not any("recovery_replay_us" in f for f in failures)
+    assert len(failures) == len(KEY_METRICS) - 1

@@ -1,0 +1,238 @@
+"""CheckpointManager + DeltaWAL tests (§7, §14).
+
+The manager ships with the WAL depending on it, so both layers are pinned
+here: atomic save/restore, keep-k GC, async writes, corrupt-checkpoint
+tolerance; then the WAL's append/checkpoint/replay cycle including torn
+tails and the headline crash-resume bit-identity.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.wal import DeltaWAL, WireTee, recover_wal
+from repro.core import DPMeansTransaction, OCCEngine
+from repro.core.occ import CenterPool
+from repro.data import dp_stick_breaking_data
+from repro.distributed.transport import store_digest
+from repro.serving.snapshot import SnapshotStore
+
+LAM = 4.0
+
+
+def _pool(rows: np.ndarray, k_max: int = 16) -> CenterPool:
+    rows = np.asarray(rows, np.float32)
+    k = rows.shape[0]
+    c = jnp.zeros((k_max, rows.shape[1]), jnp.float32).at[:k].set(rows)
+    return CenterPool(c, jnp.arange(k_max) < k,
+                      jnp.asarray(k, jnp.int32), jnp.asarray(False))
+
+
+def _publish_chain(store, n, rng, k_max=64):
+    """n genuinely append-only versions (1 new row each)."""
+    base = rng.normal(size=(n, 4)).astype(np.float32)
+    for k in range(1, n + 1):
+        store.publish_pool(_pool(base[:k], k_max=k_max))
+
+
+# --------------------------------------------------------- CheckpointManager
+
+def test_save_restore_roundtrip_nested_tree(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"pool": {"centers": np.arange(12, dtype=np.float32).reshape(3, 4),
+                     "count": np.asarray(3, np.int32)},
+            "flags": [np.array([True, False]), np.asarray(2.5, np.float32)]}
+    path = mgr.save(7, tree, extra={"note": "x"})
+    assert os.path.isdir(path)
+    step, back = mgr.restore(tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(back["pool"]["centers"]),
+                                  tree["pool"]["centers"])
+    assert int(back["pool"]["count"]) == 3
+    np.testing.assert_array_equal(np.asarray(back["flags"][0]),
+                                  tree["flags"][0])
+    assert float(back["flags"][1]) == 2.5
+    assert mgr.manifest(7)["extra"] == {"note": "x"}
+
+
+def test_restore_rejects_missing_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": np.zeros(2)})
+    with pytest.raises(KeyError, match="missing leaf"):
+        mgr.restore({"a": np.zeros(2), "b": np.zeros(2)})
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty")).restore({"a": np.zeros(2)})
+
+
+def test_keep_gc_prunes_oldest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"a": np.full(3, s, np.float32)})
+    assert mgr.all_steps() == [3, 4]
+    step, back = mgr.restore({"a": np.zeros(3)})
+    assert step == 4 and float(back["a"][0]) == 4.0
+
+
+def test_async_write_overlaps_and_waits(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    a = np.arange(8, dtype=np.float32)
+    mgr.save(1, {"a": a})
+    a = a + 100.0                     # mutate AFTER save: must not leak in
+    mgr.save(2, {"a": a})             # implicit wait() for the first write
+    mgr.wait()
+    assert mgr.all_steps() == [1, 2]
+    _, t1 = mgr.restore({"a": np.zeros(8)}, step=1)
+    np.testing.assert_array_equal(np.asarray(t1["a"]),
+                                  np.arange(8, dtype=np.float32))
+
+
+def test_latest_step_tolerates_corruption(tmp_path):
+    """Satellite: torn/garbage checkpoint dirs must not shadow the last
+    good image — `latest_step` sees only checkpoints whose manifest
+    parses."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": np.zeros(2)})
+    # a crash mid-write leaves a .tmp dir: ignored
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    # a dir with a torn manifest: ignored
+    os.makedirs(tmp_path / "step_00000003")
+    with open(tmp_path / "step_00000003" / "manifest.json", "w") as f:
+        f.write('{"step": 3, "lea')
+    # a dir with NO manifest at all: ignored
+    os.makedirs(tmp_path / "step_00000004")
+    # an unrelated dir: ignored
+    os.makedirs(tmp_path / "step_nonsense")
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    step, _ = mgr.restore({"a": np.zeros(2)})
+    assert step == 1
+
+
+# ------------------------------------------------------------------ DeltaWAL
+
+def test_wal_recover_bit_identical_and_version_continuity(tmp_path):
+    wal = DeltaWAL(str(tmp_path), model="m", checkpoint_every=0, fsync=False)
+    store = SnapshotStore(capacity=32, delta=True, model="m", wire=wal)
+    rng = np.random.default_rng(0)
+    _publish_chain(store, 10, rng)
+    wal.close()
+    rec, info = recover_wal(str(tmp_path), model="m", capacity=32)
+    assert info == dict(ckpt_version=0, n_replayed=10, n_skipped=0)
+    assert rec.latest_meta().version == 10
+    assert store_digest(rec) == store_digest(store)
+    # version numbering continues — a recovered store can become the new
+    # primary without colliding with already-replicated versions
+    snap = rec.publish_pool(_pool(rng.normal(size=(11, 4)), k_max=64))
+    assert snap.version == 11
+
+
+def test_wal_checkpoint_cadence_bounds_replay(tmp_path):
+    wal = DeltaWAL(str(tmp_path), model="m", checkpoint_every=4, fsync=False)
+    store = SnapshotStore(capacity=32, delta=True, model="m", wire=wal)
+    rng = np.random.default_rng(1)
+    _publish_chain(store, 10, rng)
+    assert wal.n_checkpoints == 2 and wal.ckpt.all_steps() == [4, 8]
+    wal.close()
+    rec, info = recover_wal(str(tmp_path), model="m", capacity=32)
+    # replay work is bounded by one checkpoint interval: only 9, 10 replay
+    assert info["ckpt_version"] == 8 and info["n_replayed"] == 2
+    assert store_digest(rec) == store_digest(store)
+    # metadata survives the checkpoint image, not just rows
+    assert rec.latest_meta().n_seen == store.latest_meta().n_seen
+
+
+def test_wal_torn_tail_recovers_last_complete_frame(tmp_path):
+    wal = DeltaWAL(str(tmp_path), model="m", checkpoint_every=0, fsync=False)
+    store = SnapshotStore(capacity=32, delta=True, model="m", wire=wal)
+    rng = np.random.default_rng(2)
+    _publish_chain(store, 6, rng)
+    wal.close()
+    seg = os.path.join(str(tmp_path), "seg_00000000.log")
+    size = os.path.getsize(seg)
+    with open(seg, "r+b") as f:
+        f.truncate(size - 7)          # crash mid-append: torn last frame
+    rec, info = recover_wal(str(tmp_path), model="m")
+    assert rec.latest_meta().version == 5      # the torn v6 is dropped
+    assert info["n_replayed"] == 5
+    # garbage appended past a good tail is also tolerated
+    with open(seg, "ab") as f:
+        f.write(b"\x00garbage-not-a-frame-header\xff" * 3)
+    rec2, info2 = recover_wal(str(tmp_path), model="m")
+    assert rec2.latest_meta().version == 5
+    assert store_digest(rec2) == store_digest(rec)
+
+
+def test_wal_segment_gc_follows_checkpoint_keep(tmp_path):
+    wal = DeltaWAL(str(tmp_path), model="m", checkpoint_every=2, keep=2,
+                   fsync=False)
+    store = SnapshotStore(capacity=64, delta=True, model="m", wire=wal)
+    rng = np.random.default_rng(3)
+    _publish_chain(store, 12, rng)
+    # checkpoints kept: [10, 12]; live segments must not predate step 10
+    assert wal.ckpt.all_steps() == [10, 12]
+    assert all(b >= 10 for b in wal.segment_bases())
+    wal.close()
+    rec, _ = recover_wal(str(tmp_path), model="m")
+    assert store_digest(rec) == store_digest(store)
+
+
+def test_wal_rejects_foreign_model(tmp_path):
+    wal = DeltaWAL(str(tmp_path), model="m", fsync=False)
+    store = SnapshotStore(capacity=8, delta=True, model="other", wire=wal)
+    with pytest.raises(ValueError, match="WAL for 'm'"):
+        store.publish_pool(_pool(np.ones((2, 4))))
+    wal.close()
+
+
+def test_wire_tee_fans_out_to_wal_and_followers(tmp_path):
+    """One publish stream → socket followers AND the durable log."""
+    from repro.distributed.replication import DeltaChannel, make_follower
+    wal = DeltaWAL(str(tmp_path), model="m", checkpoint_every=0, fsync=False)
+    chan = DeltaChannel()
+    follower = make_follower(chan, "m", capacity=8)
+    store = SnapshotStore(capacity=8, delta=True, model="m",
+                          wire=WireTee(chan, wal))
+    rng = np.random.default_rng(4)
+    _publish_chain(store, 3, rng, k_max=16)
+    chan.pump()
+    wal.close()
+    rec, _ = recover_wal(str(tmp_path), model="m")
+    assert (store_digest(follower) == store_digest(rec)
+            == store_digest(store))
+
+
+def test_trainer_crash_wal_replay_resumes_bit_identical(tmp_path):
+    """Acceptance: WAL replay after a simulated trainer crash restores the
+    stream bit-identically — the resumed trainer's final pool equals the
+    uninterrupted run's, element for element."""
+    x = jnp.asarray(dp_stick_breaking_data(1024, 8, seed=5)[0])
+
+    # uninterrupted reference
+    ref = OCCEngine(DPMeansTransaction(LAM, k_max=64), pb=64)
+    ref.partial_fit(x[:512])
+    ref.partial_fit(x[512:])
+    ref.flush()
+
+    # trainer publishing every pass through a WAL... then it "crashes"
+    wal = DeltaWAL(str(tmp_path), model="m", checkpoint_every=2, fsync=False)
+    store = SnapshotStore(capacity=16, delta=True, model="m", wire=wal)
+    crashy = OCCEngine(DPMeansTransaction(LAM, k_max=64), pb=64,
+                       publish=store.publish_pass)
+    crashy.partial_fit(x[:512])
+    wal.close()                        # process dies here; only disk remains
+
+    rec, info = recover_wal(str(tmp_path), model="m", capacity=16)
+    assert store_digest(rec) == store_digest(store)
+    snap = rec.latest().materialize()
+    assert snap.n_seen == 512          # resume point == published watermark
+
+    resumed = OCCEngine(DPMeansTransaction(LAM, k_max=64), pb=64)
+    resumed.restore(snap, k_max=64)
+    resumed.partial_fit(x[snap.n_seen:])
+    resumed.flush()
+    assert int(resumed.pool.count) == int(ref.pool.count)
+    np.testing.assert_array_equal(np.asarray(resumed.pool.centers),
+                                  np.asarray(ref.pool.centers))

@@ -1,0 +1,111 @@
+"""Fault machinery unit tests: watchdog, heartbeats, FaultPlan (§14).
+
+All synthetic — no sockets, no sleeps beyond microseconds.  The chaos
+tests that drive `FaultPlan` through real transport paths live in
+`test_transport.py` (frame-level) and `test_occ_cluster.py` (process-
+level kill/promotion).
+"""
+import pytest
+
+from repro.distributed.fault import (FaultEvent, FaultPlan, FaultRule,
+                                     HeartbeatTracker, StepWatchdog)
+
+
+# -------------------------------------------------------------- StepWatchdog
+
+def test_watchdog_flags_straggler_after_warmup():
+    wd = StepWatchdog(threshold=3.0, alpha=0.5, warmup_steps=2)
+    # warmup steps never fire, whatever their timing
+    assert wd.observe(0, 100.0) is None
+    assert wd.observe(1, 100.0) is None
+    assert wd.observe(2, 1.0) is None        # first post-warmup seeds EWMA
+    assert wd.observe(3, 1.0) is None        # 1.0x: quiet
+    ev = wd.observe(4, 10.0)                 # 10x the EWMA: straggler
+    assert ev is not None and ev.step == 4 and ev.ratio > 3.0
+    assert wd.events == [ev]
+
+
+def test_watchdog_outliers_not_folded_into_ewma():
+    wd = StepWatchdog(threshold=2.0, alpha=0.5, warmup_steps=0)
+    wd.observe(0, 1.0)
+    wd.observe(1, 50.0)                      # fires, EWMA must stay 1.0
+    assert wd.ewma == 1.0
+    assert wd.observe(2, 1.5) is None        # normal step still judged vs 1.0
+    assert len(wd.events) == 1
+
+
+def test_watchdog_ewma_tracks_gradual_drift_quietly():
+    wd = StepWatchdog(threshold=3.0, alpha=0.3, warmup_steps=0)
+    t = 1.0
+    for step in range(30):                   # 10% slower every step
+        t *= 1.10
+        assert wd.observe(step, t) is None, "gradual drift must not fire"
+    assert wd.ewma > 1.0
+
+
+# ---------------------------------------------------------- HeartbeatTracker
+
+def test_heartbeat_dead_hosts_synthetic_clock():
+    hb = HeartbeatTracker(timeout=10.0)
+    hb.beat(0, now=100.0)
+    hb.beat(1, now=100.0)
+    hb.beat(2, now=105.0)
+    assert hb.dead_hosts(now=109.0) == []
+    assert hb.dead_hosts(now=111.0) == [0, 1]      # 2 beat at 105
+    hb.beat(0, now=112.0)                          # resurrection
+    assert hb.dead_hosts(now=113.0) == [1]
+
+
+# -------------------------------------------------------------- FaultPlan
+
+def test_fault_rule_validates_kind_and_trigger():
+    with pytest.raises(ValueError, match="kind"):
+        FaultRule("p", "explode", nth=1)
+    with pytest.raises(ValueError, match="trigger"):
+        FaultRule("p", "drop")
+
+
+def test_fault_plan_nth_and_every_triggers_are_exact():
+    plan = FaultPlan([FaultRule("a", "drop", nth=3),
+                      FaultRule("a", "delay", every=2, delay_s=0.0)])
+    fired = [tuple(r.kind for r in plan.at("a")) for _ in range(6)]
+    assert fired == [(), ("delay",), ("drop",), ("delay",), (),
+                     ("delay",)]
+    assert plan.hits("a") == 6
+    assert [e.hit for e in plan.events if e.kind == "drop"] == [3]
+
+
+def test_fault_plan_points_are_independent():
+    plan = FaultPlan([FaultRule("a", "drop", nth=1)])
+    assert plan.at("b") == []                # other points never trigger
+    assert [r.kind for r in plan.at("a")] == ["drop"]
+    assert plan.hits("a") == 1 and plan.hits("b") == 1
+
+
+def test_fault_plan_count_caps_total_fires():
+    plan = FaultPlan([FaultRule("a", "dup", every=1, count=2)])
+    kinds = [len(plan.at("a")) for _ in range(5)]
+    assert kinds == [1, 1, 0, 0, 0]
+
+
+def test_fault_plan_prob_is_seed_deterministic():
+    mk = lambda seed: FaultPlan([FaultRule("a", "drop", prob=0.5)],
+                                seed=seed)
+    run = lambda plan: [bool(plan.at("a")) for _ in range(64)]
+    a, b = run(mk(7)), run(mk(7))
+    assert a == b, "same seed must replay the same schedule"
+    assert run(mk(8)) != a                   # and a different seed differs
+    assert 10 < sum(a) < 54                  # actually probabilistic
+
+
+def test_fault_plan_kill_requires_opt_in():
+    plan = FaultPlan([FaultRule("a", "kill", nth=1)])   # allow_kill=False
+    with pytest.raises(RuntimeError, match="allow_kill"):
+        plan.at("a")
+
+
+def test_fault_plan_audit_trail():
+    plan = FaultPlan([FaultRule("x", "reset", nth=2)])
+    plan.at("x")
+    plan.at("x")
+    assert plan.events == [FaultEvent("x", "reset", 2)]

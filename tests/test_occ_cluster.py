@@ -187,3 +187,24 @@ def test_multiproc_follower_kill_replacement_bootstraps():
     assert all(rec["bit_identical"].values())
     assert rec["follower_digests_match"] and all(rec["follower_digests_match"])
     assert rec["late_joiners_bootstrapped"]
+
+
+@pytest.mark.slow
+def test_ha_kill_master_promotes_resumes_bit_identical():
+    """Acceptance (§14 tentpole): SIGKILL the master right after version 6
+    is fully replicated.  The follower with the highest commit watermark
+    is promoted with a fenced term, workers reconnect, the pass resumes
+    from epoch 6 — and every per-epoch digest, every OCCStats triple, the
+    final store and every surviving follower are bit-identical to an
+    uninterrupted single-process run."""
+    from repro.launch.ha_cluster import HAConfig, run_ha_cluster
+    rec = run_ha_cluster(HAConfig(n=1024, dim=8, pb=64, k_max=128, lam=3.0,
+                                  n_workers=2, n_nodes=3,
+                                  kill_master_after_version=6, quiet=True))
+    assert rec["promotions"] == 1 and rec["terms"] == [1, 2]
+    assert rec["resume_epoch"] == 6          # == the acked kill version
+    assert rec["master_node_final"] == 1     # watermark tie → lowest node id
+    assert rec["epoch_digests_match"] and rec["epoch_stats_match"]
+    assert rec["final_digest_match"]
+    assert rec["follower_digests_match"] and all(rec["follower_digests_match"])
+    assert rec["recomputed_overlap_epochs"] == []   # no epoch ran twice

@@ -55,15 +55,17 @@ def _golden_frames() -> list[bytes]:
         count=3, capacity=8, rebase=False, n_seen=128, epochs=2,
         overflow=True, objective=float("inf"), cap_est=None, cap_trace=(64,))
     return [
-        proto.hello_frame("follower", "m", have_version=3, worker=-1),
-        proto.delta_frame(boot, proto.SNAPSHOT),
-        proto.delta_frame(tail),
+        proto.hello_frame("follower", "m", have_version=3, worker=-1,
+                          term=2),
+        proto.delta_frame(boot, proto.SNAPSHOT, term=2),
+        proto.delta_frame(tail),                    # term defaults to 0
         proto.delta_frame(ovf),
         proto.ack_frame("m", 5),
-        proto.step_frame(7, 8),
+        proto.step_frame(7, 8, term=2),
         proto.propose_frame(7, 1, [np.array([True, False, True]),
                                    np.arange(6, dtype=np.float32).reshape(3, 2),
                                    np.array([2, -1, 0], np.int32)]),
+        proto.ctrl_frame("promote", node=1, term=3, watermark=5),
         proto.fin_frame("bye"),
     ]
 
@@ -101,19 +103,22 @@ def test_golden_fixture_decodes_back():
         frames = _split_frames(f.read())
     decoded = [proto.decode_frame(fr) for fr in frames]
     assert decoded[0][1] == dict(role="follower", model="m", have_version=3,
-                                 worker=-1)
+                                 worker=-1, term=2)
     boot = proto.frame_delta(decoded[1][1], decoded[1][2])
     assert boot.rebase and boot.start == 0 and boot.count == 5
+    assert decoded[1][1]["term"] == 2 and decoded[2][1]["term"] == 0
     ovf = proto.frame_delta(decoded[3][1], decoded[3][2])
     assert ovf.overflow and ovf.rows.shape == (0, 4)
     assert ovf.objective is None      # inf is not JSON-representable
     assert decoded[4][1]["version"] == 5                       # ACK
-    assert decoded[5][1] == dict(epoch=7, count=8)             # STEP
+    assert decoded[5][1] == dict(epoch=7, count=8, term=2)     # STEP
     ep, meta, arrays = decoded[6]                              # PROPOSE
     assert meta["epoch"] == 7 and meta["n_leaves"] == 3
     assert arrays["leaf0"].dtype == np.bool_
     assert arrays["leaf2"].dtype == np.int32
-    assert decoded[7][1]["reason"] == "bye"                    # FIN
+    assert decoded[7][1] == dict(op="promote", node=1, term=3,  # CTRL
+                                 watermark=5)
+    assert decoded[8][1]["reason"] == "bye"                    # FIN
 
 
 # ------------------------------------------------------------- codec basics
@@ -384,6 +389,286 @@ def test_publish_verify_catches_deep_prefix_rewrite():
     assert store_digest(follower) == store_digest(primary)
 
 
+# ------------------------- backpressure, reconnect, fencing (§14 transport)
+
+def test_ctrl_frame_roundtrip_and_positional_op():
+    ftype, meta, _ = proto.decode_frame(
+        proto.ctrl_frame("orphaned", node=2, watermark=7))
+    assert ftype == proto.CTRL
+    assert meta == dict(op="orphaned", node=2, watermark=7)
+    with pytest.raises(TypeError):       # op is positional-only in spirit
+        proto.ctrl_frame("x", op="y")
+
+
+def test_slow_follower_bounded_queue_snapshot_resync():
+    """Backpressure (§14): a WAN-slow link (the server writer is rate-
+    limited, so frames back up in the per-follower queue) must not grow
+    server memory — the queue stays bounded, overflow drops the backlog
+    to ONE SNAPSHOT, and the follower still converges bit-identically."""
+    from repro.distributed.fault import FaultPlan, FaultRule
+    plan = FaultPlan([FaultRule("server.writer", "delay", every=1,
+                                delay_s=0.05)])
+    srv = ReplicationServer(max_queue=4, fault=plan)
+    store = SnapshotStore(capacity=64, delta=True, model="m", wire=srv)
+    rng = np.random.default_rng(6)
+    base = rng.normal(size=(40, 4)).astype(np.float32)
+    try:
+        c = ReplicationClient(srv.address, model="m", capacity=64)
+        c.start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        bound = srv.max_pending_bound()
+        for k in range(1, 41):          # 40 versions into a throttled pipe
+            store.publish_pool(_pool(base[:k], k_max=64))
+            assert srv.pending() <= bound, "server queue memory unbounded"
+        assert srv.wait_acked(40, "m", timeout=20)
+        m = srv.metrics()
+        assert m["n_resyncs"] >= 1 and m["n_dropped_frames"] > 0
+        assert store_digest(c.store) == store_digest(store)
+        # versions lost to backpressure were rebased away, not corrupted
+        assert c.store.latest_meta().version == 40
+    finally:
+        srv.close()
+    c.join(10)
+
+
+def test_client_reconnects_with_backoff_after_stream_break():
+    """Kill the follower's socket server-side mid-stream: the client must
+    reconnect (with recorded jittered backoff), resume from its last
+    applied version, and land bit-identical."""
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=16, delta=True, model="m", wire=srv)
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=(8, 4)).astype(np.float32)
+    try:
+        store.publish_pool(_pool(base[:2]))
+        c = ReplicationClient(srv.address, model="m", capacity=16,
+                              reconnect=True, backoff_s=0.01, seed=1)
+        c.start()
+        assert c.wait_version(1)
+        # hard-reset the server side of the link (no FIN)
+        with srv._lock:
+            conn = srv._conns[0]
+        conn.sock.shutdown(1)           # SHUT_WR: client sees EOF
+        deadline = time.monotonic() + 10
+        while c.n_reconnects < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        for k in (4, 6):
+            store.publish_pool(_pool(base[:k]))
+        assert c.wait_version(3)
+        assert c.n_reconnects >= 1 and len(c.backoff_log) >= 1
+        assert all(d > 0 for d in c.backoff_log)
+        assert store_digest(c.store) == store_digest(store)
+    finally:
+        srv.close()
+    c.join(10)
+
+
+def test_dropped_frame_heals_by_reconnect_resync():
+    """Chaos `drop` on the server writer loses one live delta; the client
+    detects the sequence gap, reconnects, and the server's bootstrap path
+    resyncs it — zero corruption, bit-identical final state."""
+    from repro.distributed.fault import FaultPlan, FaultRule
+    plan = FaultPlan([FaultRule("server.writer", "drop", nth=2)])
+    srv = ReplicationServer(fault=plan)
+    store = SnapshotStore(capacity=16, delta=True, model="m", wire=srv)
+    rng = np.random.default_rng(8)
+    base = rng.normal(size=(8, 4)).astype(np.float32)
+    try:
+        c = ReplicationClient(srv.address, model="m", capacity=16,
+                              reconnect=True, backoff_s=0.01, seed=2)
+        c.start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        for k in (2, 4, 6):             # frame 2 (version 2) is dropped
+            store.publish_pool(_pool(base[:k]))
+        assert c.wait_version(3, timeout=20)
+        assert c.n_gaps >= 1
+        assert c.bootstrapped           # healed via SNAPSHOT resync
+        assert store_digest(c.store) == store_digest(store)
+        assert len(plan.events) >= 1 and plan.events[0].kind == "drop"
+    finally:
+        srv.close()
+    c.join(10)
+
+
+def test_duplicated_frame_acked_not_reapplied():
+    from repro.distributed.fault import FaultPlan, FaultRule
+    plan = FaultPlan([FaultRule("server.writer", "dup", nth=2)])
+    srv = ReplicationServer(fault=plan)
+    store = SnapshotStore(capacity=16, delta=True, model="m", wire=srv)
+    rng = np.random.default_rng(9)
+    base = rng.normal(size=(6, 4)).astype(np.float32)
+    try:
+        c = ReplicationClient(srv.address, model="m", capacity=16)
+        c.start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        for k in (2, 4, 6):
+            store.publish_pool(_pool(base[:k]))
+        assert c.wait_version(3, timeout=20)
+        assert srv.wait_acked(3, "m", timeout=20)
+        assert c.n_duplicates == 1      # redelivery ACKed, applied once
+        assert c.store.versions() == [1, 2, 3]
+        assert store_digest(c.store) == store_digest(store)
+    finally:
+        srv.close()
+    c.join(10)
+
+
+def test_zombie_master_fenced_by_newer_term_hello():
+    """§14 fencing, server side: a HELLO carrying a newer term marks the
+    server fenced; its next publish raises instead of corrupting
+    followers of the new master."""
+    srv = ReplicationServer(term=1)
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    try:
+        store.publish_pool(_pool(np.ones((2, 4))))
+        c = ReplicationClient(srv.address, model="m", term=3)
+        c.connect()
+        c.run()                         # server FINs us immediately
+        assert c.fin_reason is not None and "fenced" in c.fin_reason
+        deadline = time.monotonic() + 10
+        while not srv.fenced:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        with pytest.raises(RuntimeError, match="fenced"):
+            store.publish_pool(_pool(np.ones((3, 4))))
+        assert srv.metrics()["n_fenced_hellos"] == 1
+    finally:
+        srv.close()
+
+
+def test_client_rejects_stale_term_frames():
+    """§14 fencing, client side: frames stamped with an OLDER term than
+    the client has seen are discarded without ACK."""
+    srv = ReplicationServer(term=0)      # the zombie: still at term 0
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    try:
+        c = ReplicationClient(srv.address, model="m", term=2)
+        # client term 2 > server term 0: server accepts (peer_term > term
+        # only fences when the PEER is newer — here the client is newer,
+        # which fences the server; so use a fresh un-fenced server below)
+        srv.term = 2                     # handshake passes at equal term
+        c.start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        srv.term = 1                     # demote AFTER handshake: zombie
+        store.publish_pool(_pool(np.ones((2, 4))))
+        deadline = time.monotonic() + 10
+        while c.n_fenced < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        assert c.store.latest_meta() is None     # nothing applied
+        assert c.n_applied == 0
+    finally:
+        srv.close()
+
+
+def test_wait_acked_wakes_on_follower_drop():
+    """Satellite: a caller blocked in wait_acked must wake promptly when
+    the lagging follower is dropped — not run out the full timeout."""
+    from repro.distributed.fault import FaultPlan, FaultRule
+    # follower stalls forever on its first apply: never acks version 1
+    plan = FaultPlan([FaultRule("client.apply", "delay", nth=1,
+                                delay_s=60.0)])
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    try:
+        c = ReplicationClient(srv.address, model="m", fault=plan)
+        c.start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        store.publish_pool(_pool(np.ones((2, 4))))
+        result = {}
+
+        def waiter():
+            t0 = time.monotonic()
+            ok = srv.wait_acked(1, "m", timeout=30.0)
+            result.update(ok=ok, took=time.monotonic() - t0)
+
+        import threading
+        t = threading.Thread(target=waiter, daemon=True)
+        t.start()
+        time.sleep(0.3)                  # waiter is blocked on the ack
+        with srv._lock:
+            conn = srv._conns[0]
+        srv._drop(conn)                  # follower dies mid-wait
+        t.join(10)
+        assert result, "wait_acked never returned"
+        # zero live followers: barrier is vacuous over the survivors
+        assert result["ok"] is True
+        assert result["took"] < 5.0, "waiter ran toward the full timeout"
+    finally:
+        c.stop()
+        srv.close()
+
+
+def test_wait_acked_wakes_on_close():
+    """Satellite: closing the server mid-wait returns False promptly."""
+    from repro.distributed.fault import FaultPlan, FaultRule
+    plan = FaultPlan([FaultRule("client.apply", "delay", nth=1,
+                                delay_s=60.0)])
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    c = ReplicationClient(srv.address, model="m", fault=plan)
+    c.start()
+    deadline = time.monotonic() + 10
+    while srv.followers("m") < 1:
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    store.publish_pool(_pool(np.ones((2, 4))))
+    result = {}
+
+    def waiter():
+        t0 = time.monotonic()
+        ok = srv.wait_acked(1, "m", timeout=30.0)
+        result.update(ok=ok, took=time.monotonic() - t0)
+
+    import threading
+    t = threading.Thread(target=waiter, daemon=True)
+    t.start()
+    time.sleep(0.3)
+    srv.close()
+    t.join(10)
+    assert result, "wait_acked never returned"
+    assert result["ok"] is False         # barrier abandoned, not vacuous
+    assert result["took"] < 5.0
+
+
+def test_server_abort_sends_no_fin():
+    """abort() is the crash path: followers see bare EOF (the orphaned
+    signal), never an orderly FIN."""
+    srv = ReplicationServer()
+    store = SnapshotStore(capacity=8, delta=True, model="m", wire=srv)
+    c = ReplicationClient(srv.address, model="m")
+    c.start()
+    deadline = time.monotonic() + 10
+    while srv.followers("m") < 1:
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    store.publish_pool(_pool(np.ones((2, 4))))
+    assert srv.wait_acked(1, "m", timeout=20)
+    srv.abort()
+    c.join(10)
+    assert c.fin_reason is None          # EOF, not FIN
+    assert c.store.latest_meta().version == 1
+
+
 if __name__ == "__main__":
     import sys
     if "--regen" in sys.argv:
@@ -391,3 +676,46 @@ if __name__ == "__main__":
         with open(GOLDEN, "wb") as f:
             f.write(b"".join(_golden_frames()))
         print(f"wrote {GOLDEN}")
+
+
+def test_chaotic_stream_converges_for_any_seed(inject_seed):
+    """Probabilistic chaos sweep (the CI chaos job re-runs this under
+    several ``--inject-seed`` values): random drops, duplicates and
+    delays on the server writer, a reconnecting client — for ANY seed the
+    follower must converge to the primary's exact store.  The gap/resync
+    and duplicate-suppression machinery is what's under test; the seed
+    only decides which frames get hit."""
+    from repro.distributed.fault import FaultPlan, FaultRule
+    plan = FaultPlan([FaultRule("server.writer", "drop", prob=0.25),
+                      FaultRule("server.writer", "dup", prob=0.25),
+                      FaultRule("server.writer", "delay", prob=0.25,
+                                delay_s=0.002)],
+                     seed=inject_seed)
+    srv = ReplicationServer(fault=plan)
+    store = SnapshotStore(capacity=64, delta=True, model="m", wire=srv)
+    rng = np.random.default_rng(10)
+    base = rng.normal(size=(48, 4)).astype(np.float32)
+    try:
+        c = ReplicationClient(srv.address, model="m", capacity=64,
+                              reconnect=True, max_retries=100,
+                              backoff_s=0.01, seed=inject_seed)
+        c.start()
+        deadline = time.monotonic() + 10
+        while srv.followers("m") < 1:
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        for k in range(1, 9):
+            store.publish_pool(_pool(base[:k], k_max=64))
+        # a DROPPED tail frame is only detectable when a later frame
+        # arrives — nudge with fresh versions until the follower caught up
+        # (each nudge is a real publish, so convergence stays bit-exact)
+        k = 9
+        while not c.wait_version(store.latest_meta().version, timeout=1.0):
+            assert k < 48, "follower failed to converge under chaos"
+            store.publish_pool(_pool(base[:k], k_max=64))
+            k += 1
+        assert store_digest(c.store) == store_digest(store)
+        assert c.store.latest_meta().count == store.latest_meta().count
+    finally:
+        srv.close()
+    c.join(10)
