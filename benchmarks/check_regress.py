@@ -55,43 +55,57 @@ SIZES = dict(n=1024, dim=16, pb=64, k_max=256, lam=4.0,
              wal_versions=30, wal_dk=4, wal_ckpt_every=8, wal_trials=3)
 
 
-def _reference_us(trials: int = 7, reps: int = 50) -> float:
-    """Warm jitted matmul on this machine: the speed normalizer."""
+def _reference_us(obs, trials: int = 7, reps: int = 50) -> float:
+    """Warm jitted matmul on this machine: the speed normalizer (timed
+    through the registry like every other metric here)."""
     a = jnp.asarray(np.random.default_rng(0).normal(
         size=(512, 512)).astype(np.float32))
     f = jax.jit(lambda a: a @ a)
     f(a).block_until_ready()
-    best = float("inf")
     for _ in range(trials):
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            f(a).block_until_ready()
-        best = min(best, (time.perf_counter() - t0) / reps)
-    return best * 1e6
+        with obs.metrics.timer("bench_reference_s"):
+            for _ in range(reps):
+                f(a).block_until_ready()
+    return obs.metrics.get_histogram("bench_reference_s").min / reps * 1e6
+
+
+def _hist_summary(obs, name: str, **labels) -> dict | None:
+    h = obs.metrics.get_histogram(name, **labels)
+    if h is None or not h.count:
+        return None
+    return dict(count=h.count, p50=float(h.percentile(50)),
+                p99=float(h.percentile(99)))
 
 
 def measure(inject_sleep_ms: float = 0.0) -> dict:
+    """Every number below is read back from ONE shared `MetricsRegistry`:
+    the gate's own timers (``bench_*_s`` histograms; sleep injection lands
+    INSIDE the timed blocks, so the self-test exercises the registry
+    measurement path) plus the components' internal histograms
+    (engine_pass_s, serve_request_s, transport_ack_rtt_s, wal_*_s), which
+    ride along in the artifact as `component_metrics`."""
     from repro.core import DPMeansTransaction, OCCEngine
     from repro.data import dp_stick_breaking_data
+    from repro.obs import Obs
     from repro.serving import ClusterService, SnapshotStore
 
     s = SIZES
+    obs = Obs()
+    m = obs.metrics
     x, _, _ = dp_stick_breaking_data(s["n"], seed=0, dim=s["dim"])
     x = jnp.asarray(x)
     inject = inject_sleep_ms / 1e3
 
     # --- validator pass: one compiled pass, warm ------------------------
     eng = OCCEngine(DPMeansTransaction(s["lam"], k_max=s["k_max"]),
-                    pb=s["pb"])
+                    pb=s["pb"], obs=obs)
     eng.run(x).pool.count.block_until_ready()        # compile + warm
-    best = float("inf")
     for _ in range(s["trials"]):
-        t0 = time.perf_counter()
-        eng.run(x).pool.count.block_until_ready()
-        if inject:
-            time.sleep(inject)       # --inject-sleep-ms self-test hook
-        best = min(best, time.perf_counter() - t0)
-    validator_pass_us = best * 1e6
+        with m.timer("bench_validator_pass_s"):
+            eng.run(x).pool.count.block_until_ready()
+            if inject:
+                time.sleep(inject)   # --inject-sleep-ms self-test hook
+    validator_pass_us = m.get_histogram("bench_validator_pass_s").min * 1e6
 
     # --- service latency: warm solo requests ----------------------------
     store = SnapshotStore()
@@ -99,42 +113,36 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
                      pb=s["pb"], publish=store.publish_pass)
     eng2.partial_fit(x)
     eng2.flush()
-    svc = ClusterService(store)
+    svc = ClusterService(store, obs=obs)
     q = x[:s["request"]]
     svc.score(q)                                     # warm (bucket, cap)
     p50s, p99s = [], []
-    for _ in range(s["trials"]):
-        lat = np.empty(s["n_requests"])
-        for i in range(s["n_requests"]):
-            t0 = time.perf_counter()
-            svc.score(q)
-            if inject:
-                time.sleep(inject)
-            lat[i] = time.perf_counter() - t0
-        p50s.append(np.percentile(lat, 50))
-        p99s.append(np.percentile(lat, 99))
+    for t in range(s["trials"]):
+        for _ in range(s["n_requests"]):
+            with m.timer("bench_service_request_s", trial=t):
+                svc.score(q)
+                if inject:
+                    time.sleep(inject)
+        h = m.get_histogram("bench_service_request_s", trial=t)
+        p50s.append(h.percentile(50))    # n_requests < sample_limit:
+        p99s.append(h.percentile(99))    # exact, numpy-compatible
     # --- replication commit: publish → all followers acked ---------------
     from benchmarks.transport import measure_commit
     transport_commit_us = min(
         measure_commit(s["repl_followers"], s["repl_versions"], dk=4,
-                       dim=s["dim"],
-                       inject_sleep_s=inject)["commit_p50_us"]
-        for _ in range(s["repl_trials"]))
+                       dim=s["dim"], inject_sleep_s=inject,
+                       obs=obs, trial=t)["commit_p50_us"]
+        for t in range(s["repl_trials"]))
 
     # --- crash recovery: checkpoint restore + WAL delta replay -----------
     from benchmarks.recovery import measure_recovery
+    recovery_replay_us = min(
+        measure_recovery(s["wal_versions"], s["wal_dk"], s["dim"],
+                         s["wal_ckpt_every"], inject_sleep_s=inject,
+                         obs=obs, trial=t)["recovery_replay_us"]
+        for t in range(s["wal_trials"]))
 
-    def _recovery_once():
-        us = measure_recovery(s["wal_versions"], s["wal_dk"], s["dim"],
-                              s["wal_ckpt_every"])["recovery_replay_us"]
-        if inject:
-            time.sleep(inject)
-            us += inject * 1e6
-        return us
-    recovery_replay_us = min(_recovery_once()
-                             for _ in range(s["wal_trials"]))
-
-    ref_us = _reference_us()
+    ref_us = _reference_us(obs)
     metrics = {
         "validator_pass_us": validator_pass_us,
         "service_p50_ms": float(min(p50s) * 1e3),
@@ -148,6 +156,16 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
         "reference_us": ref_us,
         "metrics": metrics,
         "normalized": {k: v / ref_us for k, v in metrics.items()},
+        # supplementary: what the instrumented components measured about
+        # themselves during the same run (same registry, free to export)
+        "component_metrics": {
+            "engine_pass_s": _hist_summary(obs, "engine_pass_s"),
+            "serve_request_s": _hist_summary(obs, "serve_request_s",
+                                             model=""),
+            "transport_ack_rtt_s": _hist_summary(obs, "transport_ack_rtt_s"),
+            "wal_append_s": _hist_summary(obs, "wal_append_s"),
+            "wal_recover_s": _hist_summary(obs, "wal_recover_s"),
+        },
     }
 
 

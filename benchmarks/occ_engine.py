@@ -25,6 +25,12 @@ from repro.core import DPMeansTransaction, OCCEngine
 from repro.core.engine import _epoch_body
 from repro.core.occ import block_epochs
 from repro.data import dp_stick_breaking_data
+from repro.obs import Obs, Tracer
+
+#: hard budget for telemetry on the fused pass (obs=None must stay free;
+#: obs-on pays one post-pass stats export — asserted below, recorded in
+#: BENCH_occ_engine.json and quoted in DESIGN.md §15)
+OBS_OVERHEAD_LIMIT_PCT = 2.0
 
 
 @partial(jax.jit, static_argnames=("cap",))
@@ -80,6 +86,32 @@ def run(n: int = 8192, pb: int = 256, repeats: int = 5, lam: float = 4.0,
         jax.block_until_ready(eng.run(x))
     engine_s = (time.time() - t0) / repeats
 
+    # --- telemetry overhead: the SAME fused pass with full obs (registry
+    # + tracer) vs obs=None.  The real effect is sub-1% (one post-pass
+    # stats export on a ONE-dispatch pass), far below scheduler noise on a
+    # shared runner, so the A/B alternates run order per iteration, takes
+    # min-of-many per side, and re-measures before declaring a breach.
+    eng_obs = OCCEngine(txn, pb, obs=Obs(tracer=Tracer("bench")))
+    jax.block_until_ready(eng_obs.run(x))            # warm
+    for attempt in range(3):
+        best_plain = best_obs = float("inf")
+        for i in range(max(repeats, 15)):
+            pair = [eng, eng_obs] if i % 2 == 0 else [eng_obs, eng]
+            for e in pair:
+                t0 = time.perf_counter()
+                jax.block_until_ready(e.run(x))
+                dt = time.perf_counter() - t0
+                if e is eng:
+                    best_plain = min(best_plain, dt)
+                else:
+                    best_obs = min(best_obs, dt)
+        obs_overhead_pct = 100.0 * (best_obs - best_plain) / best_plain
+        if obs_overhead_pct < OBS_OVERHEAD_LIMIT_PCT:
+            break
+    assert obs_overhead_pct < OBS_OVERHEAD_LIMIT_PCT, (
+        f"tracing overhead {obs_overhead_pct:.2f}% exceeds the "
+        f"{OBS_OVERHEAD_LIMIT_PCT}% budget on the fused pass")
+
     record = {
         "bench": "occ_engine",
         "n": n, "pb": pb, "t_epochs": t_epochs, "repeats": repeats,
@@ -90,6 +122,10 @@ def run(n: int = 8192, pb: int = 256, repeats: int = 5, lam: float = 4.0,
         "legacy_host_syncs_per_pass": 2 * t_epochs,
         "engine_dispatches_per_pass": 1,
         "engine_host_syncs_per_pass": 0,
+        "engine_obs_wall_s": best_obs,
+        "engine_plain_wall_s": best_plain,
+        "obs_overhead_pct": obs_overhead_pct,
+        "obs_overhead_limit_pct": OBS_OVERHEAD_LIMIT_PCT,
     }
     # Only persist when a path is given (the __main__ canonical run does);
     # suite/CI fast-mode invocations must not clobber the tracked record.
@@ -102,6 +138,9 @@ def run(n: int = 8192, pb: int = 256, repeats: int = 5, lam: float = 4.0,
          f"dispatches={t_epochs};host_syncs={2 * t_epochs}"),
         (f"occ_engine_scan_n{n}_pb{pb}", engine_s * 1e6,
          f"dispatches=1;host_syncs=0;speedup={legacy_s / engine_s:.2f}x"),
+        (f"occ_engine_obs_n{n}_pb{pb}", best_obs * 1e6,
+         f"obs_overhead_pct={obs_overhead_pct:.2f};"
+         f"limit={OBS_OVERHEAD_LIMIT_PCT}"),
     ]
     if not quiet:
         for r in rows:

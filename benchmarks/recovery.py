@@ -35,6 +35,7 @@ import numpy as np
 from repro.checkpoint.wal import DeltaWAL, recover_wal
 from repro.core.occ import CenterPool
 from repro.distributed.transport import store_digest
+from repro.obs import Obs
 from repro.serving.snapshot import SnapshotStore
 
 
@@ -54,30 +55,40 @@ def _pools(versions: int, dk: int, dim: int):
 
 
 def measure_recovery(versions: int, dk: int, dim: int,
-                     checkpoint_every: int) -> dict:
-    """One trial: write the WAL, crash, time `recover_wal` end to end."""
+                     checkpoint_every: int, inject_sleep_s: float = 0.0,
+                     obs: Obs | None = None, trial: int = 0) -> dict:
+    """One trial: write the WAL, crash, time `recover_wal` end to end.
+
+    Timing is registry-sourced: per-publish append cost observes into
+    ``bench_wal_append_s{trial=..}`` and the recovery wall time into
+    ``bench_recovery_s{trial=..}`` (sleep injection INSIDE the timed
+    block); the WAL's own fsync/append histograms land in the same
+    registry when the caller passes `obs`."""
+    obs = obs if obs is not None else Obs()
     pools = _pools(versions, dk, dim)
     tmp = tempfile.mkdtemp(prefix="occ-recovery-bench-")
     try:
         wal = DeltaWAL(tmp, model="bench", checkpoint_every=checkpoint_every,
-                       fsync=False)
+                       fsync=False, obs=obs)
         store = SnapshotStore(capacity=versions + 1, delta=True,
                               model="bench", wire=wal)
-        append_s = []
         for pool in pools:
-            t0 = time.perf_counter()
-            store.publish_pool(pool)
-            append_s.append(time.perf_counter() - t0)
+            with obs.metrics.timer("bench_wal_append_s", trial=trial):
+                store.publish_pool(pool)
         wal.close()
         digest = store_digest(store)
 
-        t0 = time.perf_counter()
-        rec, info = recover_wal(tmp, model="bench", capacity=versions + 1)
-        recover_s = time.perf_counter() - t0
+        with obs.metrics.timer("bench_recovery_s", trial=trial):
+            rec, info = recover_wal(tmp, model="bench",
+                                    capacity=versions + 1, obs=obs)
+            if inject_sleep_s:
+                time.sleep(inject_sleep_s)
+        h_rec = obs.metrics.get_histogram("bench_recovery_s", trial=trial)
+        h_app = obs.metrics.get_histogram("bench_wal_append_s", trial=trial)
         assert store_digest(rec) == digest, "recovery is not bit-identical"
         return dict(
-            recovery_replay_us=recover_s * 1e6,
-            append_us=float(np.median(append_s)) * 1e6,
+            recovery_replay_us=float(h_rec.max * 1e6),
+            append_us=float(h_app.percentile(50)) * 1e6,
             ckpt_version=info["ckpt_version"],
             replayed=info["n_replayed"],
             wal_bytes=wal.bytes_appended,

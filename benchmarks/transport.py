@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.occ import CenterPool
 from repro.distributed.transport import (ReplicationClient, ReplicationServer,
                                          store_digest)
+from repro.obs import Obs
 from repro.serving.snapshot import SnapshotStore
 
 
@@ -47,25 +48,32 @@ def _pools(versions: int, dk: int, dim: int):
 
 
 def measure_commit(n_followers: int, versions: int, dk: int, dim: int,
-                   inject_sleep_s: float = 0.0) -> dict:
+                   inject_sleep_s: float = 0.0, obs: Obs | None = None,
+                   trial: int = 0) -> dict:
     """One trial: fresh server + followers, publish the whole chain with a
-    commit barrier per version; returns latency stats and wire metrics."""
+    commit barrier per version; returns latency stats and wire metrics.
+
+    All timing goes through the registry: per-commit latency is observed
+    into the ``bench_transport_commit_s{trial=..}`` histogram (the sleep
+    injection lands INSIDE the timed block, so the regression gate's
+    self-test exercises the registry measurement path itself), and the
+    server's own ack RTT histogram shares the registry when a caller
+    passes its `obs`."""
+    obs = obs if obs is not None else Obs()
     pools = _pools(versions, dk, dim)
-    srv = ReplicationServer()
+    srv = ReplicationServer(obs=obs)
     store = SnapshotStore(capacity=versions + 1, delta=True, model="bench",
                           wire=srv)
     clients = [ReplicationClient(srv.address, model="bench",
                                  capacity=versions + 1).start()
                for _ in range(n_followers)]
-    commit_s = []
     try:
         for v, pool in enumerate(pools, start=1):
-            t0 = time.perf_counter()
-            store.publish_pool(pool)
-            assert srv.wait_acked(v, "bench", timeout=30.0)
-            if inject_sleep_s:
-                time.sleep(inject_sleep_s)
-            commit_s.append(time.perf_counter() - t0)
+            with obs.metrics.timer("bench_transport_commit_s", trial=trial):
+                store.publish_pool(pool)
+                assert srv.wait_acked(v, "bench", timeout=30.0)
+                if inject_sleep_s:
+                    time.sleep(inject_sleep_s)
         assert all(store_digest(c.store) == store_digest(store)
                    for c in clients)
         m = srv.metrics()
@@ -73,9 +81,9 @@ def measure_commit(n_followers: int, versions: int, dk: int, dim: int,
         srv.close()
     for c in clients:
         c.join(10.0)
-    lat = np.asarray(commit_s)
-    return dict(commit_p50_us=float(np.percentile(lat, 50) * 1e6),
-                commit_p99_us=float(np.percentile(lat, 99) * 1e6),
+    h = obs.metrics.get_histogram("bench_transport_commit_s", trial=trial)
+    return dict(commit_p50_us=float(h.percentile(50) * 1e6),
+                commit_p99_us=float(h.percentile(99) * 1e6),
                 bytes_per_publish=m["bytes_sent"] / max(1, m["n_sent"]),
                 ack_p50_ms=m["ack_p50_ms"], ack_p99_ms=m["ack_p99_ms"],
                 n_acks=m["n_acks"])

@@ -44,6 +44,8 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.distributed.protocol import (DELTA, MAGIC, PROTOCOL_VERSION,
                                         decode_frame, delta_frame,
                                         frame_delta)
+from repro.obs import Obs
+from repro.obs.metrics import now as _now
 from repro.serving.snapshot import CenterDelta, SnapshotStore
 
 __all__ = ["DeltaWAL", "WireTee", "recover_wal"]
@@ -85,11 +87,20 @@ class DeltaWAL:
 
     def __init__(self, directory: str, model: str | None = None,
                  checkpoint_every: int = 8, keep: int = 3,
-                 fsync: bool = True, shadow_capacity: int = 4):
+                 fsync: bool = True, shadow_capacity: int = 4,
+                 obs: Obs | None = None):
         self.dir = directory
         self.model = model
         self.checkpoint_every = checkpoint_every
         self.fsync = fsync
+        self.obs = obs if obs is not None else Obs()
+        m = self.obs.metrics
+        self._c_appended = m.counter("wal_appends")
+        self._c_bytes = m.counter("wal_bytes_appended")
+        self._c_checkpoints = m.counter("wal_checkpoints")
+        self._c_rotations = m.counter("wal_segment_rotations")
+        self._h_append = m.histogram("wal_append_s")
+        self._h_fsync = m.histogram("wal_fsync_s")
         os.makedirs(directory, exist_ok=True)
         self.ckpt = CheckpointManager(os.path.join(directory, "ckpt"),
                                       keep=keep)
@@ -97,9 +108,6 @@ class DeltaWAL:
         # bootstrap_delta away — same trick as the ReplicationServer
         self._shadow = SnapshotStore(capacity=shadow_capacity, delta=True,
                                      model=model)
-        self.n_appended = 0
-        self.n_checkpoints = 0
-        self.bytes_appended = 0
         steps = self.ckpt.all_steps()
         self._seg_base = steps[-1] if steps else 0
         self._seg = open(self._seg_path(self._seg_base), "ab")
@@ -109,19 +117,36 @@ class DeltaWAL:
 
     # ------------------------------------------------------------- the wire
 
+    @property
+    def n_appended(self) -> int:
+        return int(self._c_appended.value)
+
+    @property
+    def n_checkpoints(self) -> int:
+        return int(self._c_checkpoints.value)
+
+    @property
+    def bytes_appended(self) -> int:
+        return int(self._c_bytes.value)
+
     def send(self, delta: CenterDelta) -> None:
-        if delta.model != self.model:
-            raise ValueError(f"WAL for {self.model!r} got a delta for "
-                             f"{delta.model!r}")
-        self._shadow.apply_delta(delta)
-        frame = delta_frame(delta)
-        record = frame + struct.pack("!I", zlib.crc32(frame))
-        self._seg.write(record)
-        self._seg.flush()
-        if self.fsync:
-            os.fsync(self._seg.fileno())
-        self.n_appended += 1
-        self.bytes_appended += len(record)
+        t0 = _now()
+        with self.obs.span("wal.append", cat="wal", version=delta.version):
+            if delta.model != self.model:
+                raise ValueError(f"WAL for {self.model!r} got a delta for "
+                                 f"{delta.model!r}")
+            self._shadow.apply_delta(delta)
+            frame = delta_frame(delta)
+            record = frame + struct.pack("!I", zlib.crc32(frame))
+            self._seg.write(record)
+            self._seg.flush()
+            if self.fsync:
+                tf = _now()
+                os.fsync(self._seg.fileno())
+                self._h_fsync.observe(_now() - tf)
+            self._c_appended.inc()
+            self._c_bytes.inc(len(record))
+        self._h_append.observe(_now() - t0)
         if (self.checkpoint_every
                 and delta.version % self.checkpoint_every == 0):
             self._checkpoint(delta.version)
@@ -134,13 +159,17 @@ class DeltaWAL:
                     objective=boot.objective, cap_est=boot.cap_est,
                     cap_trace=None if boot.cap_trace is None
                     else list(boot.cap_trace))
-        self.ckpt.save(version, {"rows": np.asarray(boot.rows)}, extra=meta)
-        self.n_checkpoints += 1
-        # rotate: later frames land in a fresh segment keyed to this image
-        self._seg.close()
-        self._seg = open(self._seg_path(version), "ab")
-        self._seg_base = version
-        self._gc_segments()
+        with self.obs.span("wal.checkpoint", cat="wal", version=version):
+            self.ckpt.save(version, {"rows": np.asarray(boot.rows)},
+                           extra=meta)
+            self._c_checkpoints.inc()
+            # rotate: later frames land in a fresh segment keyed to this
+            # image
+            self._seg.close()
+            self._seg = open(self._seg_path(version), "ab")
+            self._seg_base = version
+            self._c_rotations.inc()
+            self._gc_segments()
 
     def _gc_segments(self) -> None:
         """Segments entirely covered by the oldest KEPT checkpoint are
@@ -210,7 +239,8 @@ def _iter_segment_frames(path: str):
 
 
 def recover_wal(directory: str, model: str | None = None,
-                capacity: int = 16) -> tuple[SnapshotStore, dict]:
+                capacity: int = 16,
+                obs: Obs | None = None) -> tuple[SnapshotStore, dict]:
     """Rebuild a delta store from a `DeltaWAL` directory.
 
     Newest checkpoint image (if any) applies first as a rebase delta, then
@@ -218,6 +248,8 @@ def recover_wal(directory: str, model: str | None = None,
     in version order.  Returns (store, info) where info reports
     `ckpt_version` (0 = no checkpoint), `n_replayed`, and `n_skipped`
     (frames already covered by the checkpoint)."""
+    obs = obs if obs is not None else Obs()
+    t0 = _now()
     store = SnapshotStore(capacity=capacity, delta=True, model=model)
     ckpt = CheckpointManager(os.path.join(directory, "ckpt"))
     step = ckpt.latest_step()
@@ -246,5 +278,13 @@ def recover_wal(directory: str, model: str | None = None,
                 continue
             store.apply_delta(delta)
             n_replayed += 1
+    dur = _now() - t0
+    obs.metrics.histogram("wal_recover_s").observe(dur)
+    obs.metrics.counter("wal_frames_replayed").inc(n_replayed)
+    if obs.tracer is not None:
+        obs.tracer.complete("wal.recover", t0 * 1e6, dur * 1e6, cat="wal",
+                            args=dict(ckpt_version=step or 0,
+                                      n_replayed=n_replayed,
+                                      n_skipped=n_skipped))
     return store, dict(ckpt_version=step or 0, n_replayed=n_replayed,
                        n_skipped=n_skipped)

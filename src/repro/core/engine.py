@@ -66,6 +66,7 @@ the trainer keeps streaming — trainer and service share no mutable state.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
@@ -76,6 +77,7 @@ from repro.core.occ import (
     CenterPool, OCCStats, ValidatePre, block_epochs, effective_cap,
     next_pow2, precomputed_gather_validate,
 )
+from repro.obs.metrics import now as _obs_now
 
 __all__ = ["OCCTransaction", "OCCEngine", "OCCPassResult",
            "resolve_assignments", "accumulate_pass_stats"]
@@ -378,8 +380,13 @@ class OCCEngine:
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data",
                  scan_mode: str = "serial",
-                 publish: Callable[..., Any] | None = None):
+                 publish: Callable[..., Any] | None = None,
+                 obs: Any = None):
         self.txn = transaction
+        # Optional telemetry (`repro.obs.Obs`).  None ⇒ ZERO instrumentation
+        # cost: no clock reads, no device syncs beyond the caller's own —
+        # the occ_engine overhead benchmark A/Bs exactly this switch.
+        self.obs = obs
         self.pb = int(pb)
         if isinstance(validate_cap, str) and validate_cap != "adaptive":
             raise ValueError(f"unknown validate_cap {validate_cap!r}")
@@ -435,12 +442,55 @@ class OCCEngine:
             est = max(est, self._cap_est // 2)
         self._cap_est = None if est >= self.pb else est
 
+    def _export_pass(self, res: OCCPassResult, t0: float) -> None:
+        """Post-pass telemetry export (obs is set): fold the on-device
+        `OCCStats` into the registry and the trace WITHOUT adding dispatches
+        — the fused pass stays ONE compiled call; stats come back as arrays
+        from that call and are read on the host here.  Per-epoch spans are
+        synthesized by even subdivision of the measured pass interval
+        (flagged ``synthetic_timing`` — the fused scan has no per-epoch
+        host timestamps, by design)."""
+        m = self.obs.metrics
+        prop = np.asarray(res.stats.proposed)    # blocks: pass is done
+        acc = np.asarray(res.stats.accepted)
+        cap = np.asarray(res.stats.cap)
+        t1 = _obs_now()
+        n_epochs = int(prop.shape[0])
+        n_prop, n_acc = int(prop.sum()), int(acc.sum())
+        m.counter("engine_passes").inc()
+        m.counter("engine_epochs").inc(n_epochs)
+        m.counter("engine_proposed").inc(n_prop)
+        m.counter("engine_accepted").inc(n_acc)
+        m.counter("engine_rejected").inc(n_prop - n_acc)
+        if n_prop:
+            # Thm 3.3 conflict rate ε: rejected fraction of proposals.
+            m.gauge("engine_conflict_rate").set((n_prop - n_acc) / n_prop)
+        if n_epochs:
+            m.gauge("engine_cap").set(int(cap[-1]))
+        m.histogram("engine_pass_s").observe(t1 - t0)
+        tr = self.obs.tracer
+        if tr is not None:
+            ts0, dur = t0 * 1e6, (t1 - t0) * 1e6
+            tr.complete("engine.pass", ts0, dur, cat="engine",
+                        args=dict(epochs=n_epochs, proposed=n_prop,
+                                  accepted=n_acc,
+                                  dispatches=self.n_dispatches))
+            if n_epochs:
+                step = dur / n_epochs
+                for e in range(n_epochs):
+                    tr.complete(
+                        "engine.epoch", ts0 + e * step, step, cat="engine",
+                        args=dict(epoch=e, proposed=int(prop[e]),
+                                  accepted=int(acc[e]), cap=int(cap[e]),
+                                  synthetic_timing=True))
+
     def _dispatch(self, pool, x, state, *, n_bootstrap: int, cold: bool,
                   mesh) -> OCCPassResult:
         """One compiled pass, with the adaptive overflow retry: a pass whose
         observed sends exceed its window is re-dispatched at full width
         (deterministic — same inputs), so committed adaptive results are
         always bit-identical to full-cap results."""
+        t0 = _obs_now() if self.obs is not None else 0.0
         cap_warm, cap_rest, n_warm = self._plan_caps(cold)
         res = _engine_pass_jit(
             self.txn, pool, x, state, pb=self.pb, cap_warm=cap_warm,
@@ -461,6 +511,8 @@ class OCCEngine:
                     scan_mode=self.scan_mode)
                 self.n_dispatches += 1
         self._observe_stats(res.stats, cold)
+        if self.obs is not None:
+            self._export_pass(res, t0)
         return res
 
     # ------------------------------------------------------------- batch
@@ -565,6 +617,10 @@ class OCCEngine:
         if state is None:
             state = self.txn.make_state(x, 0)
 
+        obs = self.obs
+        _span = obs.span if obs is not None else (
+            lambda *a, **k: nullcontext())
+
         # Serial bootstrap prefix: width-1 epochs, stats discarded and send
         # forced True — exactly the fused pass's bootstrap scan.
         assign_parts = []
@@ -595,19 +651,42 @@ class OCCEngine:
         am_parts, sm_parts, sent_l, acc_l, cap_l = [], [], [], [], []
         for e in range(t_epochs):
             ge = epoch_base + e          # global epoch index (§14 resume)
+            t0e = _obs_now() if obs is not None else 0.0
             cut = slice(e * self.pb, (e + 1) * self.pb)
-            s_, p_, a_, sf_, ve = propose_fn(
-                pool, xs[cut], jax.tree.map(lambda s: s[cut], ss),
-                valid[cut], epoch=ge, offset=nb + e * self.pb)
-            pool, (ae, sde, ns, na, ce) = _finish_epoch_jit(
-                self.txn, pool, s_, p_, a_, sf_, ve,
-                validate_cap=cap, scan_mode=sm)
+            with _span("engine.propose", cat="engine", epoch=ge):
+                s_, p_, a_, sf_, ve = propose_fn(
+                    pool, xs[cut], jax.tree.map(lambda s: s[cut], ss),
+                    valid[cut], epoch=ge, offset=nb + e * self.pb)
+            with _span("engine.validate", cat="engine", epoch=ge):
+                pool, (ae, sde, ns, na, ce) = _finish_epoch_jit(
+                    self.txn, pool, s_, p_, a_, sf_, ve,
+                    validate_cap=cap, scan_mode=sm)
             self.n_dispatches += 1
             am_parts.append(ae)
             sm_parts.append(sde)
             sent_l.append(ns)
             acc_l.append(na)
             cap_l.append(ce)
+            if obs is not None:
+                # Host-driven loop: REAL per-epoch telemetry (unlike the
+                # fused pass's synthesized post-pass spans).
+                nsi, nai, cei = int(ns), int(na), int(ce)
+                m = obs.metrics
+                m.counter("engine_epochs").inc()
+                m.counter("engine_proposed").inc(nsi)
+                m.counter("engine_accepted").inc(nai)
+                m.counter("engine_rejected").inc(nsi - nai)
+                if nsi:
+                    m.gauge("engine_conflict_rate").set((nsi - nai) / nsi)
+                m.gauge("engine_cap").set(cei)
+                t1e = _obs_now()
+                m.histogram("engine_epoch_s").observe(t1e - t0e)
+                if obs.tracer is not None:
+                    obs.tracer.complete(
+                        "engine.epoch", t0e * 1e6, (t1e - t0e) * 1e6,
+                        cat="engine",
+                        args=dict(epoch=ge, proposed=nsi, accepted=nai,
+                                  cap=cei))
             if on_outputs is not None:
                 on_outputs(ge, ae, sde, (ns, na, ce))
             if on_commit is not None:

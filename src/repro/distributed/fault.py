@@ -23,9 +23,11 @@ from __future__ import annotations
 import os
 import random
 import threading
-import time
 from collections import Counter
 from dataclasses import dataclass, field
+from typing import Any
+
+from repro.obs.metrics import now as _now
 
 __all__ = ["StragglerEvent", "StepWatchdog", "HeartbeatTracker",
            "FaultRule", "FaultEvent", "FaultPlan"]
@@ -47,6 +49,7 @@ class StepWatchdog:
     ewma: float | None = None
     _seen: int = 0
     events: list[StragglerEvent] = field(default_factory=list)
+    obs: Any = None               # optional repro.obs.Obs
 
     def observe(self, step: int, elapsed: float) -> StragglerEvent | None:
         self._seen += 1
@@ -61,6 +64,10 @@ class StepWatchdog:
             event = StragglerEvent(step, elapsed, self.ewma, ratio)
             self.events.append(event)
             # do not fold outliers into the EWMA
+            if self.obs is not None:
+                self.obs.metrics.counter("watchdog_stragglers").inc()
+                self.obs.instant("fault.straggler", cat="fault", step=step,
+                                 elapsed_s=elapsed, ratio=ratio)
         else:
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * elapsed
         return event
@@ -68,15 +75,17 @@ class StepWatchdog:
 
 @dataclass
 class HeartbeatTracker:
-    """Host-level liveness: hosts check in each step; silence -> dead."""
+    """Host-level liveness: hosts check in each step; silence -> dead.
+    Default clock is the shared obs monotonic clock (wall-clock `time.time`
+    would double-count NTP steps as silence)."""
     timeout: float = 60.0
     last_seen: dict[int, float] = field(default_factory=dict)
 
     def beat(self, host_id: int, now: float | None = None):
-        self.last_seen[host_id] = now if now is not None else time.time()
+        self.last_seen[host_id] = now if now is not None else _now()
 
     def dead_hosts(self, now: float | None = None) -> list[int]:
-        now = now if now is not None else time.time()
+        now = now if now is not None else _now()
         return [h for h, t in self.last_seen.items() if now - t > self.timeout]
 
 
@@ -131,9 +140,11 @@ class FaultPlan:
     """
 
     def __init__(self, rules: tuple[FaultRule, ...] | list[FaultRule] = (),
-                 seed: int = 0, allow_kill: bool = False):
+                 seed: int = 0, allow_kill: bool = False,
+                 obs: Any = None):
         self.rules = tuple(rules)
         self.allow_kill = allow_kill
+        self.obs = obs                  # optional repro.obs.Obs
         self._rng = random.Random(seed)
         self._hits: Counter = Counter()
         self._fires: Counter = Counter()
@@ -158,6 +169,14 @@ class FaultPlan:
                     self._fires[i] += 1
                     fired.append(r)
                     self.events.append(FaultEvent(point, r.kind, n))
+                    if self.obs is not None:
+                        # every injected fault is a trace event: a chaos
+                        # run's timeline is replayable from the trace
+                        self.obs.metrics.counter("fault_injections",
+                                                 point=point,
+                                                 kind=r.kind).inc()
+                        self.obs.instant("fault.inject", cat="fault",
+                                         point=point, kind=r.kind, hit=n)
                     if r.kind == "kill":
                         self._kill(point)
             return fired
@@ -169,5 +188,10 @@ class FaultPlan:
     def _kill(self, point: str) -> None:
         if not self.allow_kill:
             raise RuntimeError(f"kill at {point!r} but allow_kill=False")
+        if self.obs is not None:
+            # the ONE exception to no-flushing: persist the victim's trace
+            # first, or the chaos timeline loses exactly the interesting
+            # process (os._exit skips atexit by design)
+            self.obs.flush()
         # simulate SIGKILL: no atexit, no flushing, no goodbye frames
         os._exit(137)

@@ -71,6 +71,8 @@ from repro.distributed.protocol import (ACK, DELTA, FIN, HELLO, SNAPSHOT,
                                         ack_frame, delta_frame, fin_frame,
                                         frame_delta, hello_frame, read_frame,
                                         write_frame)
+from repro.obs import Obs
+from repro.obs.metrics import now as _now
 from repro.serving.snapshot import CenterDelta, SnapshotStore
 
 __all__ = ["Transport", "ReplicationServer", "ReplicationClient",
@@ -149,6 +151,7 @@ class _FollowerConn:
         self.bootstrap_version: int | None = None
         self.resync_version: int | None = None   # pending lag-resync target
         self.dropped = 0                    # frames discarded on overflow
+        self.idx = -1                       # stable follower index (obs label)
 
 
 class ReplicationServer(Transport):
@@ -165,8 +168,24 @@ class ReplicationServer(Transport):
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  shadow_capacity: int = 4, max_queue: int = 1024,
-                 term: int = 0, fault: FaultPlan | None = None):
-        super().__init__()
+                 term: int = 0, fault: FaultPlan | None = None,
+                 obs: Obs | None = None):
+        # Counters live in the obs registry (§15); the legacy attribute
+        # names (n_sent, n_resyncs, ...) remain as read-only properties.
+        self.obs = obs if obs is not None else Obs()
+        m = self.obs.metrics
+        self._c_sent = m.counter("transport_deltas_sent")
+        self._c_delivered = m.counter("transport_deltas_delivered")
+        self._c_bytes = m.counter("transport_bytes", dir="out_published")
+        self._c_bytes_wire = m.counter("transport_bytes", dir="out_wire")
+        self._c_frames_in = m.counter("transport_frames_in")
+        self._c_bootstraps = m.counter("transport_bootstraps")
+        self._c_resyncs = m.counter("transport_resyncs")
+        self._c_dropped = m.counter("transport_dropped_frames")
+        self._c_fenced = m.counter("transport_fenced_hellos")
+        self._h_ack = m.histogram("transport_ack_rtt_s")
+        self._g_term = m.gauge("transport_term")
+        self._g_term.set(term)
         self._lock = threading.RLock()
         self._acked_cv = threading.Condition(self._lock)
         self._shadow: dict[str | None, SnapshotStore] = {}
@@ -176,13 +195,9 @@ class ReplicationServer(Transport):
         self.fault = fault
         self.fenced = False        # a newer-term master exists (§14)
         self._conns: list[_FollowerConn] = []
+        self._conn_seq = 0         # stable per-follower obs label
         self._local: dict[str | None, list[SnapshotStore]] = {}
         self._local_acked: dict[int, int] = {}   # id(store) → version
-        self.ack_latency_s: list[float] = []
-        self.n_bootstraps = 0
-        self.n_resyncs = 0         # lag-triggered SNAPSHOT resyncs
-        self.n_dropped_frames = 0  # frames discarded by backpressure
-        self.n_fenced_hellos = 0   # HELLOs carrying a newer term
         self._closing = False
         self._lsock = socket.create_server((host, port))
         self.address = self._lsock.getsockname()
@@ -192,32 +207,69 @@ class ReplicationServer(Transport):
         t.start()
         self._threads.append(t)
 
+    # ---------------------------------------------- legacy counter surface
+    @property
+    def n_sent(self) -> int:
+        return int(self._c_sent.value)
+
+    @property
+    def n_delivered(self) -> int:
+        return int(self._c_delivered.value)
+
+    @property
+    def bytes_sent(self) -> int:
+        return int(self._c_bytes.value)
+
+    @property
+    def n_bootstraps(self) -> int:
+        return int(self._c_bootstraps.value)
+
+    @property
+    def n_resyncs(self) -> int:
+        return int(self._c_resyncs.value)
+
+    @property
+    def n_dropped_frames(self) -> int:
+        return int(self._c_dropped.value)
+
+    @property
+    def n_fenced_hellos(self) -> int:
+        return int(self._c_fenced.value)
+
     # ------------------------------------------------------------- sending
 
     def send(self, delta: CenterDelta) -> None:
-        with self._lock:
-            if self._closing:
-                raise RuntimeError("transport closed")
-            if self.fenced:
-                raise RuntimeError(f"fenced: a master with term > {self.term}"
-                                   " exists")
-            shadow = self._shadow.get(delta.model)
-            if shadow is None:
-                shadow = SnapshotStore(capacity=self._shadow_capacity,
-                                       delta=True, model=delta.model)
-                self._shadow[delta.model] = shadow
-            shadow.apply_delta(delta)
-            frame = delta_frame(delta, term=self.term)
-            self.n_sent += 1
-            self.bytes_sent += len(frame)
-            for store in self._local.get(delta.model, ()):  # loopback attach
-                store.apply_delta(delta)
-                self._local_acked[id(store)] = delta.version
-                self.n_delivered += 1
-            now = time.perf_counter()
-            for conn in self._conns:
-                if conn.alive and conn.model == delta.model:
-                    self._enqueue(conn, shadow, delta, frame, now)
+        with self.obs.span("transport.send", cat="transport",
+                           version=delta.version):
+            with self._lock:
+                if self._closing:
+                    raise RuntimeError("transport closed")
+                if self.fenced:
+                    raise RuntimeError(
+                        f"fenced: a master with term > {self.term} exists")
+                shadow = self._shadow.get(delta.model)
+                if shadow is None:
+                    shadow = SnapshotStore(capacity=self._shadow_capacity,
+                                           delta=True, model=delta.model)
+                    self._shadow[delta.model] = shadow
+                shadow.apply_delta(delta)
+                frame = delta_frame(delta, term=self.term)
+                self._c_sent.inc()
+                self._c_bytes.inc(len(frame))
+                for store in self._local.get(delta.model, ()):  # loopback
+                    store.apply_delta(delta)
+                    self._local_acked[id(store)] = delta.version
+                    self._c_delivered.inc()
+                now = _now()
+                depth = 0
+                for conn in self._conns:
+                    if conn.alive and conn.model == delta.model:
+                        self._enqueue(conn, shadow, delta, frame, now)
+                        depth += conn.q.qsize()
+                if self.obs.tracer is not None:
+                    self.obs.tracer.counter(
+                        "transport.queue_depth", {"frames": depth},
+                        cat="transport")
 
     def _enqueue(self, conn: _FollowerConn, shadow: SnapshotStore,
                  delta: CenterDelta, frame: bytes, now: float) -> None:
@@ -231,6 +283,8 @@ class ReplicationServer(Transport):
         try:
             conn.q.put_nowait(frame)
             conn.sent_ts[delta.version] = now
+            self.obs.metrics.gauge("transport_queue_depth",
+                                   follower=conn.idx).set(conn.q.qsize())
             return
         except queue.Full:
             pass
@@ -242,13 +296,15 @@ class ReplicationServer(Transport):
             except queue.Empty:
                 break
         conn.dropped += dropped
-        self.n_dropped_frames += dropped + 1   # +1: the frame never queued
+        self._c_dropped.inc(dropped + 1)   # +1: the frame never queued
         conn.sent_ts.clear()
         boot = shadow.bootstrap_delta()
         conn.q.put_nowait(delta_frame(boot, SNAPSHOT, term=self.term))
         conn.sent_ts[boot.version] = now
         conn.resync_version = boot.version
-        self.n_resyncs += 1
+        self._c_resyncs.inc()
+        self.obs.instant("transport.resync", cat="transport",
+                         version=boot.version, dropped=dropped + 1)
 
     def attach(self, model: str | None,
                store: SnapshotStore) -> SnapshotStore:
@@ -264,7 +320,7 @@ class ReplicationServer(Transport):
                 if boot is not None and store.n_deltas == 0:
                     store.apply_delta(boot)
                     self._local_acked[id(store)] = boot.version
-                    self.n_bootstraps += 1
+                    self._c_bootstraps.inc()
             self._local.setdefault(model, []).append(store)
         return store
 
@@ -329,18 +385,17 @@ class ReplicationServer(Transport):
         return self._max_queue + 1 if self._max_queue else 0
 
     def metrics(self) -> dict:
-        with self._lock:
-            lat = sorted(self.ack_latency_s)
-            pct = (lambda p: 1e3 * lat[min(len(lat) - 1,
-                                           int(p * len(lat)))] if lat else 0.0)
-            return dict(n_sent=self.n_sent, n_delivered=self.n_delivered,
-                        bytes_sent=self.bytes_sent, n_acks=len(lat),
-                        n_bootstraps=self.n_bootstraps,
-                        n_resyncs=self.n_resyncs,
-                        n_dropped_frames=self.n_dropped_frames,
-                        n_fenced_hellos=self.n_fenced_hellos,
-                        max_queue=self._max_queue, term=self.term,
-                        ack_p50_ms=pct(0.50), ack_p99_ms=pct(0.99))
+        h = self._h_ack
+        n_acks = h.count
+        return dict(n_sent=self.n_sent, n_delivered=self.n_delivered,
+                    bytes_sent=self.bytes_sent, n_acks=n_acks,
+                    n_bootstraps=self.n_bootstraps,
+                    n_resyncs=self.n_resyncs,
+                    n_dropped_frames=self.n_dropped_frames,
+                    n_fenced_hellos=self.n_fenced_hellos,
+                    max_queue=self._max_queue, term=self.term,
+                    ack_p50_ms=1e3 * h.percentile(50) if n_acks else 0.0,
+                    ack_p99_ms=1e3 * h.percentile(99) if n_acks else 0.0)
 
     # ----------------------------------------------------------- conn plumbing
 
@@ -375,8 +430,10 @@ class ReplicationServer(Transport):
                 # newer master was promoted — this server must stand down.
                 with self._acked_cv:
                     self.fenced = True
-                    self.n_fenced_hellos += 1
+                    self._c_fenced.inc()
                     self._acked_cv.notify_all()
+                self.obs.instant("transport.fenced", cat="transport",
+                                 term=self.term, peer_term=peer_term)
                 write_frame(sock, fin_frame(
                     f"fenced: server term {self.term} < peer {peer_term}"))
                 sock.close()
@@ -396,11 +453,16 @@ class ReplicationServer(Transport):
                     latest = shadow.latest_meta().version
                     if conn.have_version != latest:
                         boot = shadow.bootstrap_delta()
-                        conn.sent_ts[boot.version] = time.perf_counter()
+                        conn.sent_ts[boot.version] = _now()
                         conn.q.put(delta_frame(boot, SNAPSHOT,
                                                term=self.term))
                         conn.bootstrap_version = boot.version
-                        self.n_bootstraps += 1
+                        self._c_bootstraps.inc()
+                        self.obs.instant("transport.bootstrap",
+                                         cat="transport",
+                                         version=boot.version)
+                conn.idx = self._conn_seq
+                self._conn_seq += 1
                 self._conns.append(conn)
             wt = threading.Thread(target=self._writer, args=(conn,),
                                   name="repl-write", daemon=True)
@@ -425,13 +487,14 @@ class ReplicationServer(Transport):
             if fr is None:
                 return
             ftype, meta, _ = fr
+            self._c_frames_in.inc()
             if ftype == ACK:
                 with self._acked_cv:
                     version = int(meta["version"])
                     conn.acked = max(conn.acked, version)
                     ts = conn.sent_ts.pop(version, None)
                     if ts is not None:
-                        self.ack_latency_s.append(time.perf_counter() - ts)
+                        self._h_ack.observe(_now() - ts)
                     if (conn.resync_version is not None
                             and version >= conn.resync_version):
                         conn.resync_version = None   # lagger caught up
@@ -459,6 +522,7 @@ class ReplicationServer(Transport):
             try:
                 for _ in range(send_n):
                     conn.sock.sendall(frame)
+                self._c_bytes_wire.inc(send_n * len(frame))
             except OSError:
                 self._drop(conn)
                 return
@@ -560,7 +624,7 @@ class ReplicationClient:
                  connect_timeout: float = 10.0, reconnect: bool = False,
                  max_retries: int = 6, backoff_s: float = 0.05,
                  backoff_max_s: float = 2.0, seed: int = 0, term: int = 0,
-                 fault: FaultPlan | None = None):
+                 fault: FaultPlan | None = None, obs: Obs | None = None):
         self.address = tuple(address)
         self.model = model
         self.store = store if store is not None else SnapshotStore(
@@ -572,11 +636,16 @@ class ReplicationClient:
         self.backoff_max_s = backoff_max_s
         self.term = term
         self.fault = fault
-        self.n_applied = 0
-        self.n_duplicates = 0      # redelivered versions ACKed, not applied
-        self.n_gaps = 0            # sequence gaps healed by reconnect
-        self.n_fenced = 0          # stale-term frames rejected
-        self.n_reconnects = 0      # successful re-connections
+        self.obs = obs if obs is not None else Obs()
+        m = self.obs.metrics
+        self._c_applied = m.counter("transport_client_applied")
+        self._c_bytes_in = m.counter("transport_bytes", dir="in_applied")
+        # redelivered versions ACKed, not applied / sequence gaps healed by
+        # reconnect / stale-term frames rejected / successful re-connections
+        self._c_duplicates = m.counter("transport_client_duplicates")
+        self._c_gaps = m.counter("transport_client_gaps")
+        self._c_fenced = m.counter("transport_client_fenced")
+        self._c_reconnects = m.counter("transport_client_reconnects")
         self.backoff_log: list[float] = []
         self.bootstrapped = False
         self.fin_reason: str | None = None
@@ -586,6 +655,26 @@ class ReplicationClient:
         self._stop = False
         self._thread: threading.Thread | None = None
         self._applied_cv = threading.Condition()
+
+    @property
+    def n_applied(self) -> int:
+        return int(self._c_applied.value)
+
+    @property
+    def n_duplicates(self) -> int:
+        return int(self._c_duplicates.value)
+
+    @property
+    def n_gaps(self) -> int:
+        return int(self._c_gaps.value)
+
+    @property
+    def n_fenced(self) -> int:
+        return int(self._c_fenced.value)
+
+    @property
+    def n_reconnects(self) -> int:
+        return int(self._c_reconnects.value)
 
     def connect(self) -> None:
         meta = self.store.latest_meta()
@@ -597,7 +686,8 @@ class ReplicationClient:
                                             have_version=have,
                                             term=self.term))
         if self._ever_connected:
-            self.n_reconnects += 1
+            self._c_reconnects.inc()
+            self.obs.instant("transport.reconnect", cat="transport")
         self._ever_connected = True
 
     def run(self) -> None:
@@ -656,7 +746,7 @@ class ReplicationClient:
                     term = int(meta.get("term", 0))
                     if term < self.term:
                         # §14: a zombie master's frame — reject, no ACK
-                        self.n_fenced += 1
+                        self._c_fenced.inc()
                         continue
                     self.term = max(self.term, term)
                     delta = frame_delta(meta, arrays)
@@ -676,20 +766,26 @@ class ReplicationClient:
                     if have is not None and delta.version <= have.version:
                         # at-least-once redelivery: already applied — ACK
                         # again (the server may have lost the first ack)
-                        self.n_duplicates += 1
+                        self._c_duplicates.inc()
                         write_frame(sock, ack_frame(self.model,
                                                     delta.version))
                         progressed = True
                         continue
                     try:
-                        self.store.apply_delta(delta)
+                        with self.obs.span("transport.apply",
+                                           cat="transport",
+                                           version=delta.version):
+                            self.store.apply_delta(delta)
                     except ValueError:
                         # sequence gap (dropped frame): reconnect; HELLO
                         # advertises our version and the server resyncs
-                        self.n_gaps += 1
+                        self._c_gaps.inc()
+                        self.obs.instant("transport.gap", cat="transport",
+                                         version=delta.version)
                         return "gap", progressed
+                    self._c_applied.inc()
+                    self._c_bytes_in.inc(delta.nbytes)
                     with self._applied_cv:
-                        self.n_applied += 1
                         if ftype == SNAPSHOT:
                             self.bootstrapped = True
                         self._applied_cv.notify_all()

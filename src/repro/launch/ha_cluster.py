@@ -48,11 +48,14 @@ import json
 import multiprocessing as mp
 import os
 import socket
+import tempfile
 import threading
 import time
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.obs import Obs, Tracer, merge_traces
 
 __all__ = ["HAConfig", "run_ha_cluster", "ha_node_main", "ha_worker_main"]
 
@@ -77,6 +80,13 @@ class HAConfig:
     kill_master_after_version: int | None = None
     spawn_timeout_s: float = 180.0
     out_path: str | None = None
+    # telemetry: every master phase appends its publishes to a DeltaWAL
+    # under wal_dir; each process writes trace_dir/<proc>.json and the
+    # driver merges them into trace_out (one Perfetto timeline — valid
+    # because CLOCK_MONOTONIC is system-wide on Linux).
+    wal_dir: str | None = None
+    trace_dir: str | None = None
+    trace_out: str | None = None
     quiet: bool = False
 
     def cluster_kw(self) -> dict:
@@ -135,6 +145,11 @@ def ha_node_main(cfg_kw: dict, node_id: int, coord_port: int) -> None:
     from repro.serving.snapshot import SnapshotStore
 
     cfg = HAConfig(**cfg_kw)
+    obs = Obs()
+    if cfg.trace_dir is not None:
+        obs = Obs(tracer=Tracer(f"ha.node{node_id}"),
+                  trace_path=os.path.join(cfg.trace_dir,
+                                          f"node{node_id}.json"))
     store = SnapshotStore(capacity=cfg.snapshot_capacity, delta=True,
                           model=cfg.model)
     coord = socket.create_connection(("127.0.0.1", coord_port), timeout=30.0)
@@ -149,7 +164,7 @@ def ha_node_main(cfg_kw: dict, node_id: int, coord_port: int) -> None:
                 term = int(msg["term"])
                 client = ReplicationClient(
                     ("127.0.0.1", int(msg["port"])), model=cfg.model,
-                    store=store, term=term)
+                    store=store, term=term, obs=obs)
                 try:
                     client.connect()
                     client.run()
@@ -165,12 +180,17 @@ def ha_node_main(cfg_kw: dict, node_id: int, coord_port: int) -> None:
                                n_fenced=client.n_fenced,
                                n_duplicates=client.n_duplicates)
                 else:                               # bare EOF: §14 orphaned
+                    obs.instant("ha.orphaned", cat="ha", node=node_id,
+                                version=have, term=term)
                     _send_ctrl(coord, "orphaned", node=node_id,
                                version=have, term=term)
             elif msg["op"] == "promote":
+                obs.instant("ha.promote", cat="ha", node=node_id,
+                            term=int(msg["term"]))
                 _master_phase(cfg, store, int(msg["term"]),
-                              int(msg["n_followers"]), coord, node_id)
+                              int(msg["n_followers"]), coord, node_id, obs)
     finally:
+        obs.flush()
         try:
             coord.close()
         except OSError:
@@ -178,7 +198,8 @@ def ha_node_main(cfg_kw: dict, node_id: int, coord_port: int) -> None:
 
 
 def _master_phase(cfg: HAConfig, store, term: int, n_followers: int,
-                  coord: socket.socket, node_id: int) -> None:
+                  coord: socket.socket, node_id: int,
+                  obs: Obs | None = None) -> None:
     """Run (or resume) the serializing master on this node.
 
     Resume point v = the store's latest version: versions 1..v hold
@@ -199,20 +220,39 @@ def _master_phase(cfg: HAConfig, store, term: int, n_followers: int,
     x = _cluster_data(ccfg)
     txn = _cluster_txn(ccfg)
     t_total = block_epochs(cfg.n, cfg.pb)
+    obs = obs if obs is not None else Obs()
 
     fault = None
     if cfg.kill_master_after_version is not None and term == 1:
+        # the plan carries obs: the kill flushes this node's trace file
+        # first, so the victim's timeline survives os._exit
         fault = FaultPlan(
             rules=[FaultRule("master.commit", "kill",
                              nth=cfg.kill_master_after_version)],
-            allow_kill=True)
+            allow_kill=True, obs=obs)
 
     meta = store.latest_meta()
     v = 0 if meta is None else meta.version
-    srv = ReplicationServer(term=term, max_queue=cfg.max_queue)
+    srv = ReplicationServer(term=term, max_queue=cfg.max_queue, obs=obs)
     if v:
         srv.seed_shadow(cfg.model, store)   # bootstrap joiners from history
-    store.wire = srv
+    wal = None
+    if cfg.wal_dir is not None:
+        # each (node, term) master phase logs its publishes durably; the
+        # per-term directory keeps a promoted master's log separate from
+        # the stream it inherited
+        from repro.checkpoint.wal import DeltaWAL, WireTee
+        wal = DeltaWAL(os.path.join(cfg.wal_dir,
+                                    f"node{node_id}_term{term}"),
+                       model=cfg.model, obs=obs)
+        if v:
+            # seed the fresh log with the inherited watermark as a rebase
+            # frame: replay starts from this image, and the WAL shadow is
+            # primed for the first (non-rebase) post-promotion delta
+            wal.send(store.bootstrap_delta())
+        store.wire = WireTee(srv, wal)
+    else:
+        store.wire = srv
     plane = _WorkerPlane(ccfg)
     _send_ctrl(coord, "serving", node=node_id, term=term,
                repl_port=srv.address[1], worker_port=plane.port, watermark=v)
@@ -226,7 +266,8 @@ def _master_phase(cfg: HAConfig, store, term: int, n_followers: int,
     assert srv.followers(cfg.model) == n_followers, "follower attach"
 
     pool = None if v == 0 else store.latest().to_pool(cfg.k_max)
-    engine = OCCEngine(txn, pb=cfg.pb, validate_cap=cfg.validate_cap)
+    engine = OCCEngine(txn, pb=cfg.pb, validate_cap=cfg.validate_cap,
+                       obs=obs)
     proposer = _ClusterProposer(ccfg, txn, plane, term=term,
                                 rebase_first=v > 0)
 
@@ -258,6 +299,9 @@ def _master_phase(cfg: HAConfig, store, term: int, n_followers: int,
                               in proposer.dead_from.items()},
                metrics=srv.metrics())
     srv.close()     # FIN → followers write their reports
+    if wal is not None:
+        wal.close()
+    obs.flush()
 
 
 # --------------------------------------------------------------- worker side
@@ -327,8 +371,9 @@ class _Coordinator:
     (CTRL get_master).  All shared state lives behind one condition
     variable; the orchestration policy itself runs in `run_ha_cluster`."""
 
-    def __init__(self, cfg: HAConfig):
+    def __init__(self, cfg: HAConfig, obs: Obs | None = None):
         self.cfg = cfg
+        self.obs = obs if obs is not None else Obs()
         self.cv = threading.Condition(threading.RLock())
         self.lsock = socket.create_server(("127.0.0.1", 0))
         self.port = self.lsock.getsockname()[1]
@@ -369,6 +414,12 @@ class _Coordinator:
                 self._node_reader(nid, sock)
             elif ftype == CTRL and meta.get("op") == "get_master":
                 self._answer_get_master(sock, int(meta.get("min_term", 0)))
+            elif ftype == CTRL and meta.get("op") == "metrics":
+                # text-exposition endpoint: one CTRL round-trip returns the
+                # driver-side registry in Prometheus text form
+                _send_ctrl(sock, "metrics",
+                           text=self.obs.metrics.exposition())
+                sock.close()
             else:
                 sock.close()
         except (ConnectionError, OSError, ValueError):
@@ -477,9 +528,24 @@ def run_ha_cluster(cfg: HAConfig) -> dict:
             "kill version must land mid-pass"
     t0 = time.perf_counter()
 
-    coord = _Coordinator(cfg)
+    # Telemetry plumbing: --trace-out implies a per-process trace_dir (and
+    # a WAL dir — a traced run exercises every subsystem, so the merged
+    # timeline carries engine, transport, wal, fault AND ha events).
+    trace_dir = cfg.trace_dir
+    if cfg.trace_out is not None and trace_dir is None:
+        trace_dir = tempfile.mkdtemp(prefix="ha_trace_")
+    wal_dir = cfg.wal_dir
+    if cfg.trace_out is not None and wal_dir is None:
+        wal_dir = tempfile.mkdtemp(prefix="ha_wal_")
+    driver_obs = Obs()
+    if trace_dir is not None:
+        driver_obs = Obs(tracer=Tracer("ha.driver"),
+                         trace_path=os.path.join(trace_dir, "driver.json"))
+
+    coord = _Coordinator(cfg, obs=driver_obs)
     ctx = mp.get_context("spawn")
-    cfg_kw = {**cfg.__dict__, "out_path": None}
+    cfg_kw = {**cfg.__dict__, "out_path": None, "trace_out": None,
+              "trace_dir": trace_dir, "wal_dir": wal_dir}
     node_procs = [ctx.Process(target=ha_node_main,
                               args=(cfg_kw, i, coord.port), daemon=True)
                   for i in range(cfg.n_nodes)]
@@ -525,6 +591,9 @@ def run_ha_cluster(cfg: HAConfig) -> dict:
         new_term = old_term + 1
         promotions += 1
         terms.append(new_term)
+        driver_obs.metrics.counter("ha_promotions").inc()
+        driver_obs.instant("ha.promote", cat="ha", winner=winner,
+                           term=new_term, watermark=resume_epoch)
         if not cfg.quiet:
             print(f"master (term {old_term}) died; promoting node {winner} "
                   f"at watermark {resume_epoch} with term {new_term}")
@@ -550,6 +619,16 @@ def run_ha_cluster(cfg: HAConfig) -> dict:
     for p in [*node_procs, *worker_procs]:
         p.join(timeout=30.0)
     coord.close()
+
+    if trace_dir is not None:
+        driver_obs.flush()
+        if cfg.trace_out is not None:
+            # one merged Perfetto timeline: driver + every node (including
+            # the killed master — its FaultPlan flushed before os._exit)
+            parts = sorted(os.path.join(trace_dir, f)
+                           for f in os.listdir(trace_dir)
+                           if f.endswith(".json"))
+            merge_traces(cfg.trace_out, *parts)
 
     # --------------------------------------------------------------- audit
     # The uninterrupted single-process reference: same per-epoch digests,
@@ -608,6 +687,7 @@ def run_ha_cluster(cfg: HAConfig) -> dict:
         "recomputed_overlap_epochs": overlap,
         "worker_deaths": coord.done.get("worker_deaths", {}),
         "final_term_metrics": coord.done.get("metrics", {}),
+        "trace_out": cfg.trace_out,
         "wall_s": time.perf_counter() - t0,
     }
     assert epoch_digests_match, "per-epoch outputs diverged from reference"
@@ -645,16 +725,23 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (numbers not meaningful)")
     ap.add_argument("--out", default=None, help="write BENCH_ha.json here")
+    ap.add_argument("--trace-out", default=None,
+                    help="merged Perfetto/Chrome trace JSON of all "
+                         "processes (implies WAL + per-process tracing)")
+    ap.add_argument("--wal-dir", default=None,
+                    help="append every master publish to a DeltaWAL here")
     args = ap.parse_args(argv)
     cfg = HAConfig(n=args.n, dim=args.dim, pb=args.pb,
                    n_workers=args.workers, n_nodes=args.nodes,
                    kill_master_after_version=args.kill_after,
-                   out_path=args.out)
+                   out_path=args.out, trace_out=args.trace_out,
+                   wal_dir=args.wal_dir)
     if args.quick:
         cfg = HAConfig(n=1024, dim=8, pb=64, k_max=128, lam=3.0,
                        n_workers=args.workers, n_nodes=args.nodes,
                        kill_master_after_version=args.kill_after,
-                       out_path=args.out)
+                       out_path=args.out, trace_out=args.trace_out,
+                       wal_dir=args.wal_dir)
     run_ha_cluster(cfg)
 
 

@@ -75,6 +75,7 @@ class ClusterConfig:
     kill_follower_at_epoch: int | None = None  # SIGKILL follower 0 here and
     #                                            respawn a fresh one after
     out_path: str | None = None
+    trace_out: str | None = None    # master-side Perfetto JSON
     quiet: bool = False
 
 
@@ -405,15 +406,20 @@ def run_cluster(cfg: ClusterConfig) -> dict:
     from repro.core.engine import OCCEngine
     from repro.distributed.transport import ReplicationServer, store_digest
     from repro.launch.occ_follower import follower_main
+    from repro.obs import Obs, Tracer
     from repro.serving.snapshot import SnapshotStore
 
     assert cfg.pb % cfg.n_workers == 0, "pb must split evenly across workers"
+    # ONE shared Obs for the master process: engine passes, replication and
+    # the straggler watchdog land in one registry / one trace file.
+    obs = Obs(tracer=Tracer("occ_cluster.master") if cfg.trace_out else None,
+              trace_path=cfg.trace_out)
     t0 = time.perf_counter()
     x = _cluster_data(cfg)
     txn = _cluster_txn(cfg)
 
     # replication plane: primary store wired straight onto the socket server
-    srv = ReplicationServer()
+    srv = ReplicationServer(obs=obs)
     store = SnapshotStore(capacity=cfg.snapshot_capacity, delta=True,
                           model=cfg.model, wire=srv)
     ctx = mp.get_context("spawn")
@@ -443,7 +449,8 @@ def run_cluster(cfg: ClusterConfig) -> dict:
     plane = _WorkerPlane(cfg)
     plane.spawn()
     proposer = _ClusterProposer(cfg, txn, plane)
-    engine = OCCEngine(txn, pb=cfg.pb, validate_cap=cfg.validate_cap)
+    engine = OCCEngine(txn, pb=cfg.pb, validate_cap=cfg.validate_cap,
+                       obs=obs)
 
     killed = {"done": False}
     # straggler watchdog on the master's epoch loop: a slow epoch (a hung
@@ -452,7 +459,7 @@ def run_cluster(cfg: ClusterConfig) -> dict:
     # silently — the observability half of §13's failure semantics.
     from repro.distributed.fault import StepWatchdog
     watchdog = StepWatchdog(threshold=cfg.straggler_threshold,
-                            warmup_steps=cfg.straggler_warmup)
+                            warmup_steps=cfg.straggler_warmup, obs=obs)
     last_commit = [time.perf_counter()]
 
     def on_commit(pool, epoch, t_epochs):
@@ -545,6 +552,7 @@ def run_cluster(cfg: ClusterConfig) -> dict:
             for ev in watchdog.events],
         "wall_s": time.perf_counter() - t0,
     }
+    obs.flush()
     assert all(bit.values()), f"multi-process run diverged: {bit}"
     assert reports and all(follower_ok), "follower store digest mismatch"
     assert boot_ok, "a late joiner did not bootstrap from a snapshot"
@@ -582,14 +590,17 @@ def main(argv=None):
                     help="CI smoke sizes (numbers not meaningful)")
     ap.add_argument("--out", default=None,
                     help="write BENCH_transport.json here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/Chrome trace JSON here")
     args = ap.parse_args(argv)
     cfg = ClusterConfig(n=args.n, dim=args.dim, pb=args.pb,
                         n_workers=args.workers, n_followers=args.followers,
-                        out_path=args.out)
+                        out_path=args.out, trace_out=args.trace_out)
     if args.quick:
         cfg = ClusterConfig(n=1024, dim=8, pb=64, k_max=128, lam=3.0,
                             n_workers=args.workers,
-                            n_followers=args.followers, out_path=args.out)
+                            n_followers=args.followers, out_path=args.out,
+                            trace_out=args.trace_out)
     run_cluster(cfg)
 
 

@@ -48,6 +48,7 @@ import numpy as np
 from repro.core import DPMeansTransaction, OCCEngine
 from repro.core.occ import nearest_center
 from repro.data import dp_stick_breaking_data
+from repro.obs import Obs, Tracer
 from repro.serving import ClusterService, ModelRouter, SnapshotStore
 from repro.serving.cluster_service import _assign_step
 
@@ -76,6 +77,7 @@ class ServeDemoConfig:
     min_versions: int = 3      # hot-swap floor per model under load
     seed: int = 0
     out_path: str | None = None
+    trace_out: str | None = None   # Perfetto JSON of the whole run
     quiet: bool = False
 
 
@@ -122,7 +124,7 @@ def _trainer(tn: _Tenant, svc: ClusterService,
 
 
 def _make_tenant(name: str, i: int, cfg: ServeDemoConfig,
-                 router: ModelRouter) -> _Tenant:
+                 router: ModelRouter, obs: Obs) -> _Tenant:
     x, _, _ = dp_stick_breaking_data(cfg.n, seed=cfg.seed + 17 * i,
                                      dim=cfg.dim)
     x = jnp.asarray(x)
@@ -135,7 +137,7 @@ def _make_tenant(name: str, i: int, cfg: ServeDemoConfig,
 
     eng = OCCEngine(
         DPMeansTransaction(cfg.lam * (1.0 + 0.25 * i), k_max=cfg.k_max),
-        pb=cfg.pb, validate_cap="adaptive", publish=publish)
+        pb=cfg.pb, validate_cap="adaptive", publish=publish, obs=obs)
     batches = [x[j:j + cfg.train_batch]
                for j in range(0, cfg.n, cfg.train_batch)]
     return _Tenant(name, x, eng, store, shadow, batches)
@@ -144,13 +146,18 @@ def _make_tenant(name: str, i: int, cfg: ServeDemoConfig,
 def run_demo(cfg: ServeDemoConfig) -> dict:
     assert cfg.n_models >= 2, "the scale-out audit needs >= 2 tenants"
     assert cfg.max_request <= cfg.coalesce_bucket
+    # ONE shared Obs: trainer engines and every tenant's service land in a
+    # single registry / trace file (tracer only when --trace-out asked).
+    obs = Obs(tracer=Tracer("serve_clusters") if cfg.trace_out else None,
+              trace_path=cfg.trace_out)
     router = ModelRouter(backend=cfg.backend, coalesce=True,
                          coalesce_bucket=cfg.coalesce_bucket,
                          coalesce_delay_ms=cfg.coalesce_delay_ms,
                          audit_log=True,
-                         max_bucket=max(128, cfg.coalesce_bucket))
+                         max_bucket=max(128, cfg.coalesce_bucket),
+                         obs=obs)
     names = [chr(ord("a") + i) for i in range(cfg.n_models)]
-    tenants = {nm: _make_tenant(nm, i, cfg, router)
+    tenants = {nm: _make_tenant(nm, i, cfg, router, obs)
                for i, nm in enumerate(names)}
 
     # First batch per tenant before any client starts, so every model has a
@@ -335,6 +342,7 @@ def run_demo(cfg: ServeDemoConfig) -> dict:
         "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
     }
     router.close()
+    obs.flush()
     if cfg.out_path is not None:
         with open(cfg.out_path, "w") as f:
             json.dump(record, f, indent=2)
@@ -369,17 +377,20 @@ def main(argv=None):
                     help="CI smoke sizes (numbers not meaningful)")
     ap.add_argument("--out", default=None,
                     help="write BENCH_cluster_service.json here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/Chrome trace JSON here")
     args = ap.parse_args(argv)
     cfg = ServeDemoConfig(n=args.n, n_models=args.models, pb=args.pb,
                           train_batch=args.train_batch,
                           min_queries=args.queries, backend=args.backend,
-                          out_path=args.out)
+                          out_path=args.out, trace_out=args.trace_out)
     if args.quick:
         cfg = ServeDemoConfig(n=1024, n_models=max(2, args.models), pb=64,
                               train_batch=200, dim=8, min_queries=600,
                               max_request=16, k_max=256, n_clients=12,
                               coalesce_bucket=64, coalesce_delay_ms=8.0,
-                              backend=args.backend, out_path=args.out)
+                              backend=args.backend, out_path=args.out,
+                              trace_out=args.trace_out)
     run_demo(cfg)
 
 

@@ -49,7 +49,6 @@ from __future__ import annotations
 
 import functools
 import threading
-import time
 from typing import Any, NamedTuple
 
 import jax
@@ -57,6 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as _kops
+from repro.obs import Obs
+from repro.obs.metrics import now as _now
 from repro.serving.snapshot import ModelSnapshot, SnapshotStore, next_bucket
 
 __all__ = ["ClusterService", "ServeResponse", "DispatchRecord"]
@@ -140,7 +141,7 @@ class _Pending:
     def __init__(self, x, kind, k, want_scores):
         self.x, self.kind, self.k = x, kind, k
         self.want_scores = want_scores
-        self.t = time.perf_counter()
+        self.t = _now()
         self.event = threading.Event()
         self.out = self.err = None
 
@@ -217,7 +218,7 @@ class _AdmissionQueue:
                     return
                 deadline = self._q[0].t + self.delay_s
                 while self._group_rows() < self.bucket:
-                    remaining = deadline - time.perf_counter()
+                    remaining = deadline - _now()
                     if remaining <= 0 or self._stop:
                         break
                     self._cond.wait(remaining)
@@ -256,6 +257,9 @@ class ClusterService:
         Unbounded growth: enable for audits/tests, not steady production.
       mesh / data_axis: optional device mesh for replicated-snapshot /
         sharded-query serving.
+      obs: optional shared `repro.obs.Obs`; counters/histograms land in
+        its registry (labeled by model) and query dispatches become trace
+        spans when a tracer is attached.
     """
 
     def __init__(self, store: SnapshotStore, backend: str = "auto",
@@ -265,7 +269,8 @@ class ClusterService:
                  coalesce_delay_ms: float = 2.0,
                  audit_log: bool = False,
                  mesh: jax.sharding.Mesh | None = None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data",
+                 obs: Obs | None = None):
         assert min_bucket & (min_bucket - 1) == 0, "min_bucket: power of two"
         assert max_bucket & (max_bucket - 1) == 0, "max_bucket: power of two"
         assert coalesce_bucket & (coalesce_bucket - 1) == 0, \
@@ -278,21 +283,34 @@ class ClusterService:
         self.coalesce_bucket = min(coalesce_bucket, max_bucket)
         self.mesh = mesh
         self.data_axis = data_axis
-        # observability: one dispatch per microbatch is the contract.
-        # n_dispatches is incremented at every jitted-step CALL SITE (not
-        # alongside n_microbatches) so the ratio actually measures the
+        # Observability (§15): one dispatch per microbatch is the
+        # contract.  Scalar counters live in the obs registry — each
+        # counter's own lock makes flusher-thread vs request-thread
+        # increments atomic (the old ad-hoc ints required every call site
+        # to remember _mlock; the registry makes lost updates impossible).
+        # serve_dispatches is bumped at every jitted-step CALL SITE (not
+        # alongside serve_microbatches) so the ratio actually measures the
         # contract; _traces0 anchors the process-wide compile counter.
-        # _mlock guards counters: solo dispatches run on caller threads
-        # while coalesced ones run on the flusher thread.
-        self.n_queries = 0
-        self.n_requests = 0
-        self.n_microbatches = 0
-        self.n_dispatches = 0
-        self.n_padded_rows = 0
-        self.n_groups = 0            # coalesced dispatches
-        self.n_group_requests = 0    # requests answered by coalesced ones
-        self.n_deadline_flushes = 0  # groups flushed below the bucket
-        self.n_swaps = 0
+        # _mlock still guards the non-scalar tallies (bucket/version
+        # histograms, group ids, current version).
+        self.obs = obs if obs is not None else Obs()
+        mlab = dict(model=name or "")
+        m = self.obs.metrics
+        self._c_queries = m.counter("serve_queries", **mlab)
+        self._c_requests = m.counter("serve_requests", **mlab)
+        self._c_microbatches = m.counter("serve_microbatches", **mlab)
+        self._c_dispatches = m.counter("serve_dispatches", **mlab)
+        self._c_padded = m.counter("serve_padded_rows", **mlab)
+        self._c_groups = m.counter("serve_coalesced_groups", **mlab)
+        self._c_group_requests = m.counter("serve_group_requests", **mlab)
+        self._c_flush_deadline = m.counter("serve_flushes", reason="deadline",
+                                           **mlab)
+        self._c_flush_full = m.counter("serve_flushes", reason="full", **mlab)
+        self._c_swaps = m.counter("serve_swaps", **mlab)
+        self._c_compiles = m.counter("serve_jit_compiles", **mlab)
+        self._h_queue_wait = m.histogram("serve_queue_wait_s", **mlab)
+        self._h_dispatch = m.histogram("serve_dispatch_s", **mlab)
+        self._h_request = m.histogram("serve_request_s", **mlab)
         self._traces0 = _QUERY_TRACES
         self.bucket_hist: dict[int, int] = {}
         self.version_hist: dict[int, int] = {}
@@ -304,6 +322,43 @@ class ClusterService:
                                        coalesce_delay_ms / 1e3)
                        if coalesce else None)
 
+    # ---------------------------------------------- legacy counter surface
+    @property
+    def n_queries(self) -> int:
+        return int(self._c_queries.value)
+
+    @property
+    def n_requests(self) -> int:
+        return int(self._c_requests.value)
+
+    @property
+    def n_microbatches(self) -> int:
+        return int(self._c_microbatches.value)
+
+    @property
+    def n_dispatches(self) -> int:
+        return int(self._c_dispatches.value)
+
+    @property
+    def n_padded_rows(self) -> int:
+        return int(self._c_padded.value)
+
+    @property
+    def n_groups(self) -> int:
+        return int(self._c_groups.value)
+
+    @property
+    def n_group_requests(self) -> int:
+        return int(self._c_group_requests.value)
+
+    @property
+    def n_deadline_flushes(self) -> int:
+        return int(self._c_flush_deadline.value)
+
+    @property
+    def n_swaps(self) -> int:
+        return int(self._c_swaps.value)
+
     # ------------------------------------------------------------ internals
     def _take_snapshot(self) -> ModelSnapshot:
         """The hot-swap point: one atomic ref read per microbatch."""
@@ -313,7 +368,7 @@ class ClusterService:
         with self._mlock:
             if snap.version != self._cur_version:
                 if self._cur_version is not None:
-                    self.n_swaps += 1
+                    self._c_swaps.inc()
                 self._cur_version = snap.version
         return snap
 
@@ -326,10 +381,10 @@ class ClusterService:
         return x, bucket
 
     def _account(self, snap: ModelSnapshot, n: int, bucket: int) -> None:
+        self._c_queries.inc(n)
+        self._c_microbatches.inc()
+        self._c_padded.inc(bucket)
         with self._mlock:
-            self.n_queries += n
-            self.n_microbatches += 1
-            self.n_padded_rows += bucket
             self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
             self.version_hist[snap.version] = (
                 self.version_hist.get(snap.version, 0) + n)
@@ -351,18 +406,24 @@ class ClusterService:
 
     def _run_step(self, snap, xp, n, kind, k):
         """One jitted dispatch (the only two call sites of the steps)."""
-        if kind == "topk":
-            d2, idx = _topk_step(
-                snap.centers, snap.mask, np.int32(snap.count), xp,
-                np.int32(n), k=k, backend=self.backend, mesh=self.mesh,
-                data_axis=self.data_axis)
-        else:
-            d2, idx = _assign_step(
-                snap.centers, snap.mask, np.int32(snap.count), xp,
-                np.int32(n), backend=self.backend, mesh=self.mesh,
-                data_axis=self.data_axis)
-        with self._mlock:
-            self.n_dispatches += 1
+        traces0 = _QUERY_TRACES
+        t0 = _now()
+        with self.obs.span("serve.dispatch", cat="serve", kind=kind,
+                           bucket=int(xp.shape[0]), version=snap.version):
+            if kind == "topk":
+                d2, idx = _topk_step(
+                    snap.centers, snap.mask, np.int32(snap.count), xp,
+                    np.int32(n), k=k, backend=self.backend, mesh=self.mesh,
+                    data_axis=self.data_axis)
+            else:
+                d2, idx = _assign_step(
+                    snap.centers, snap.mask, np.int32(snap.count), xp,
+                    np.int32(n), backend=self.backend, mesh=self.mesh,
+                    data_axis=self.data_axis)
+        self._h_dispatch.observe(_now() - t0)
+        self._c_dispatches.inc()
+        if _QUERY_TRACES != traces0:
+            self._c_compiles.inc(_QUERY_TRACES - traces0)
         return d2, idx
 
     # ----------------------------------------------------------- coalescing
@@ -375,17 +436,24 @@ class ClusterService:
         x = (jnp.concatenate([it.x for it in items], 0)
              if len(items) > 1 else items[0].x)
         n = x.shape[0]
+        t_flush = _now()
+        for it in items:        # admission-to-flush wait per member request
+            self._h_queue_wait.observe(t_flush - it.t)
         xp, bucket = self._pad(x)
         d2, idx = self._run_step(snap, xp, n, kind, kk)
         self._account(snap, n, bucket)
+        self._c_groups.inc()
+        self._c_group_requests.inc(len(items))
+        self._c_requests.inc(len(items))
+        deadline_flush = n < self.coalesce_bucket
+        (self._c_flush_deadline if deadline_flush
+         else self._c_flush_full).inc()
+        self.obs.instant("serve.flush", cat="serve",
+                         reason="deadline" if deadline_flush else "full",
+                         requests=len(items), rows=n)
         with self._mlock:
             gid = self._next_group
             self._next_group += 1
-            self.n_groups += 1
-            self.n_group_requests += len(items)
-            self.n_requests += len(items)
-            if n < self.coalesce_bucket:
-                self.n_deadline_flushes += 1
         spans, lo = [], 0
         for it in items:
             spans.append((lo, lo + it.x.shape[0]))
@@ -434,27 +502,37 @@ class ClusterService:
             self._record(-1, snap, kind, kk, bucket, n, xp, [(0, n)])
             parts_l.append(np.asarray(idx[:n]))
             parts_s.append(np.asarray(d2[:n]))
-        with self._mlock:
-            self.n_requests += 1
+        self._c_requests.inc()
         return ServeResponse(snap.version, np.concatenate(parts_l),
                              np.concatenate(parts_s), bucket,
                              model=self.name)
 
     def score(self, x) -> ServeResponse:
         """Nearest-center label AND squared distance per query row."""
+        t0 = _now()
         resp = self._coalesced(x, "score", 0, want_scores=True)
-        return resp if resp is not None else self._solo(x, "score", 0)
+        if resp is None:
+            resp = self._solo(x, "score", 0)
+        self._h_request.observe(_now() - t0)
+        return resp
 
     def assign(self, x) -> ServeResponse:
         """Nearest-center label per query row (scores omitted)."""
+        t0 = _now()
         resp = self._coalesced(x, "score", 0, want_scores=False)
-        return (resp if resp is not None
-                else self._solo(x, "score", 0)._replace(scores=None))
+        if resp is None:
+            resp = self._solo(x, "score", 0)._replace(scores=None)
+        self._h_request.observe(_now() - t0)
+        return resp
 
     def topk(self, x, k: int = 4) -> ServeResponse:
         """k nearest centers per query row, distances ascending."""
+        t0 = _now()
         resp = self._coalesced(x, "topk", k, want_scores=True)
-        return resp if resp is not None else self._solo(x, "topk", k)
+        if resp is None:
+            resp = self._solo(x, "topk", k)
+        self._h_request.observe(_now() - t0)
+        return resp
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> dict[str, Any]:
@@ -475,6 +553,14 @@ class ClusterService:
             "requests_per_group":
                 self.n_group_requests / max(1, self.n_groups),
             "n_swaps": self.n_swaps,
+            # registry-backed latency readouts (§15): total request wall
+            # time and admission-queue wait, per this service's labels.
+            "request_p50_ms": 1e3 * self._h_request.percentile(50)
+                if self._h_request.count else 0.0,
+            "request_p99_ms": 1e3 * self._h_request.percentile(99)
+                if self._h_request.count else 0.0,
+            "queue_wait_p99_ms": 1e3 * self._h_queue_wait.percentile(99)
+                if self._h_queue_wait.count else 0.0,
             # query-step compilations since this service was built
             # (process-wide counter: exact when one service is live;
             # router tenants with equal shapes share compilations, which

@@ -31,6 +31,7 @@ from typing import Any
 
 import jax
 
+from repro.obs import Obs
 from repro.serving import cluster_service as _cs
 from repro.serving.cluster_service import ClusterService, ServeResponse
 from repro.serving.snapshot import SnapshotStore
@@ -52,12 +53,17 @@ class ModelRouter:
                  coalesce_bucket: int = 64, coalesce_delay_ms: float = 2.0,
                  audit_log: bool = False,
                  mesh: jax.sharding.Mesh | None = None,
-                 data_axis: str = "data"):
+                 data_axis: str = "data",
+                 obs: Obs | None = None):
+        # ONE shared obs: every tenant's counters land in the same
+        # registry (distinguished by their model= label), so the router-
+        # level aggregates below are plain registry reads.
+        self.obs = obs if obs is not None else Obs()
         self._defaults = dict(
             backend=backend, min_bucket=min_bucket, max_bucket=max_bucket,
             coalesce=coalesce, coalesce_bucket=coalesce_bucket,
             coalesce_delay_ms=coalesce_delay_ms, audit_log=audit_log,
-            mesh=mesh, data_axis=data_axis)
+            mesh=mesh, data_axis=data_axis, obs=self.obs)
         self._services: dict[str, ClusterService] = {}
         self._lock = threading.Lock()
         self._traces0 = _cs._QUERY_TRACES

@@ -1,0 +1,330 @@
+"""Unified telemetry tests (DESIGN.md §15).
+
+Covers: registry semantics (labeled families, kind pinning, exact-then-
+bucketed percentiles), lost-update-free concurrent counting (the race the
+old ad-hoc `metrics()` dicts had between the admission-queue flusher and
+request threads), a byte-level golden Perfetto trace fixture (same pattern
+as the transport wire-format fixture), the `validate_trace` schema check
+(nesting + per-track monotone timestamps), cross-process trace merging,
+the coordinator CTRL metrics endpoint, and — slow — a full chaos HA run
+with ``--trace-out`` whose merged timeline must be valid Perfetto JSON
+carrying spans from >= 4 subsystems.
+
+Regenerate the golden fixture (after an INTENTIONAL format change only):
+  PYTHONPATH=src python tests/test_obs.py --regen
+"""
+import json
+import math
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs import Obs, Tracer, load_trace, merge_traces, trace_categories, \
+    validate_trace
+from repro.obs.metrics import DEFAULT_BUCKETS, Histogram, MetricsRegistry
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "trace_events.json")
+
+
+# ------------------------------------------------------------------ registry
+
+def test_counter_gauge_basics():
+    m = MetricsRegistry()
+    m.counter("c").inc()
+    m.counter("c").inc(2.5)
+    assert m.value("c") == 3.5
+    m.gauge("g").set(7)
+    m.gauge("g").add(-2)
+    assert m.value("g") == 5.0
+    assert m.value("never_touched") == 0.0
+
+
+def test_labeled_families_are_independent():
+    m = MetricsRegistry()
+    m.counter("bytes", dir="in").inc(10)
+    m.counter("bytes", dir="out").inc(1)
+    assert m.value("bytes", dir="in") == 10
+    assert m.value("bytes", dir="out") == 1
+    # label order does not matter
+    m.counter("x", a=1, b=2).inc()
+    assert m.value("x", b=2, a=1) == 1
+
+
+def test_kind_is_pinned_at_first_use():
+    m = MetricsRegistry()
+    m.counter("n")
+    with pytest.raises(TypeError):
+        m.gauge("n")
+    with pytest.raises(TypeError):
+        m.histogram("n")
+
+
+def test_timer_observes_elapsed_seconds():
+    m = MetricsRegistry()
+    with m.timer("t_s"):
+        pass
+    h = m.get_histogram("t_s")
+    assert h.count == 1
+    assert 0.0 <= h.min < 1.0
+
+
+def test_histogram_exact_percentiles_match_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(scale=1e-3, size=500)
+    h = Histogram()
+    for v in xs:
+        h.observe(v)
+    for q in (0, 25, 50, 90, 99, 100):
+        assert h.percentile(q) == pytest.approx(np.percentile(xs, q),
+                                                rel=1e-9)
+    assert h.min == xs.min() and h.max == xs.max()
+    assert h.mean == pytest.approx(xs.mean())
+
+
+def test_histogram_bucket_fallback_is_bounded():
+    rng = np.random.default_rng(1)
+    xs = rng.exponential(scale=1e-3, size=2000)
+    h = Histogram(sample_limit=100)      # force the bucketed path
+    for v in xs:
+        h.observe(v)
+    p99 = h.percentile(99)
+    exact = np.percentile(xs, 99)
+    # bucket-interpolated: within one geometric x4 bucket of exact (the
+    # estimate may exceed the sample max — the bucket's upper bound does)
+    assert exact / 4.5 <= p99 <= exact * 4.5
+    assert math.isnan(Histogram().percentile(50))
+
+
+def test_dump_and_exposition():
+    m = MetricsRegistry()
+    m.counter("reqs", model="a").inc(3)
+    m.gauge("depth").set(2)
+    m.histogram("lat_s").observe(0.5)
+    d = m.dump()
+    assert d["reqs"]["type"] == "counter"
+    assert d["reqs"]["values"]['model="a"'] == 3
+    assert d["lat_s"]["values"][""]["count"] == 1
+    json.dumps(d)                         # JSON-safe
+    text = m.exposition()
+    assert '# TYPE reqs counter' in text
+    assert 'reqs{model="a"} 3' in text
+    assert "lat_s_count 1" in text and "lat_s_p99" in text
+
+
+def test_concurrent_increments_lose_nothing():
+    """The §15 motivation: the flusher-vs-request-thread read-modify-write
+    race the old dict counters had must be structurally impossible."""
+    m = MetricsRegistry()
+    threads, per = 8, 5000
+
+    def hammer(i):
+        c_shared = m.counter("shared")
+        for _ in range(per):
+            c_shared.inc()
+            m.counter("labeled", worker=i % 2).inc(2)
+            m.gauge("depth").add(1)
+            m.histogram("h_s").observe(1e-4)
+
+    ts = [threading.Thread(target=hammer, args=(i,)) for i in range(threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert m.value("shared") == threads * per
+    assert (m.value("labeled", worker=0) + m.value("labeled", worker=1)
+            == 2 * threads * per)
+    assert m.value("depth") == threads * per
+    assert m.get_histogram("h_s").count == threads * per
+
+
+# ------------------------------------------------------------ golden fixture
+
+def _golden_tracer() -> Tracer:
+    """Deterministic event stream: injectable clock (1ms per reading),
+    pinned pid/tids — byte-stable across machines and runs."""
+    state = {"t": 0.0}
+
+    def clock():
+        state["t"] += 1e-3
+        return state["t"]
+
+    tr = Tracer(process_name="golden", pid=7, clock=clock)
+    tr.set_thread_name("main", tid=1)
+    with tr.span("engine.pass", cat="engine", args={"epochs": 2}, tid=1):
+        with tr.span("engine.validate", cat="engine", tid=1) as sp:
+            sp.set(accepted=3)
+        tr.instant("fault.inject", cat="fault",
+                   args={"point": "master.commit", "kind": "kill"}, tid=1)
+    tr.counter("transport.queue_depth", {"f0": 2, "f1": 0},
+               cat="transport", tid=1)
+    tr.complete("engine.epoch", ts_us=250.0, dur_us=125.0, cat="engine",
+                args={"epoch": 0, "synthetic_timing": True}, tid=2)
+    tr.complete("wal.append", ts_us=9000.0, dur_us=40.0, cat="wal",
+                args={"version": 3}, tid=2)
+    return tr
+
+
+def test_trace_golden_bytes_exact():
+    """The committed fixture pins the export format at the byte level —
+    a field rename or serialization change fails here and must be
+    deliberate (Perfetto/catapult consume these files)."""
+    with open(GOLDEN, "rb") as f:
+        want = f.read()
+    assert _golden_tracer().json_bytes() == want, (
+        "trace export drifted from the committed golden bytes")
+
+
+def test_trace_golden_schema():
+    trace = json.loads(_golden_tracer().json_bytes())
+    assert validate_trace(trace) == []
+    assert trace_categories(trace) == {"engine", "fault", "transport", "wal"}
+    assert trace["displayTimeUnit"] == "ms"
+    phs = {ev["ph"] for ev in trace["traceEvents"]}
+    assert phs == {"M", "X", "i", "C"}
+    # nested span closed before its parent; args survived
+    spans = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    outer = next(e for e in spans if e["name"] == "engine.pass")
+    inner = next(e for e in spans if e["name"] == "engine.validate")
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"]
+    assert inner["args"]["accepted"] == 3
+
+
+# ----------------------------------------------------------- trace semantics
+
+def test_span_records_exception_and_reraises():
+    tr = Tracer(pid=1, clock=iter(np.arange(1, 10) * 1e-3).__next__)
+    with pytest.raises(ValueError):
+        with tr.span("boom", cat="t", tid=1):
+            raise ValueError("x")
+    ev = [e for e in tr.events() if e["ph"] == "X"][0]
+    assert ev["args"]["error"] == "ValueError"
+    assert ev["dur"] >= 0
+
+
+def test_validate_trace_rejects_bad_traces():
+    assert validate_trace({}) == ["traceEvents missing or not a list"]
+    bad = {"traceEvents": [dict(name="a", ph="X", ts=0, pid=1, tid=1)]}
+    assert any("missing dur" in p for p in validate_trace(bad))
+    overlap = {"traceEvents": [
+        dict(name="a", ph="X", ts=0.0, dur=10.0, pid=1, tid=1),
+        dict(name="b", ph="X", ts=5.0, dur=10.0, pid=1, tid=1),
+    ]}
+    assert any("does not nest" in p for p in validate_trace(overlap))
+    # same interval on DIFFERENT tracks is fine
+    ok = {"traceEvents": [
+        dict(name="a", ph="X", ts=0.0, dur=10.0, pid=1, tid=1),
+        dict(name="b", ph="X", ts=5.0, dur=10.0, pid=1, tid=2),
+    ]}
+    assert validate_trace(ok) == []
+
+
+def test_point_events_emitted_in_timestamp_order():
+    """instant/counter events are stamped at call time, so within one
+    tracer their list order must already be their timeline order (spans
+    are stamped at exit and are ordered by `validate_trace` instead)."""
+    tr = _golden_tracer()
+    pts = [ev["ts"] for ev in tr.events() if ev["ph"] in ("i", "C")]
+    assert pts and pts == sorted(pts)
+
+
+def test_merge_traces_combines_processes_and_skips_torn(tmp_path):
+    a = Tracer(process_name="p0", pid=1,
+               clock=iter(np.arange(1, 50) * 1e-3).__next__)
+    with a.span("x", cat="engine", tid=1):
+        pass
+    p0 = str(tmp_path / "p0.json")
+    a.save(p0)
+    b = Tracer(process_name="p1", pid=2,
+               clock=iter(np.arange(1, 50) * 1e-3).__next__)
+    b.instant("y", cat="ha", tid=1)
+    torn = str(tmp_path / "torn.json")
+    with open(torn, "w") as f:
+        f.write('{"traceEvents": [')    # crashed writer: not valid JSON
+    out = str(tmp_path / "merged.json")
+    merged = merge_traces(out, p0, b, torn)
+    assert {e["pid"] for e in merged["traceEvents"]} == {1, 2}
+    assert validate_trace(merged) == []
+    assert load_trace(out) == merged
+
+
+def test_obs_bundle_noop_without_tracer(tmp_path):
+    obs = Obs()
+    with obs.span("a", cat="x"):        # must not raise, must not record
+        pass
+    obs.instant("b")
+    obs.flush()                         # no trace_path: no-op
+    path = str(tmp_path / "t.json")
+    obs2 = Obs(tracer=Tracer(process_name="p", pid=3), trace_path=path)
+    with obs2.span("a", cat="x", epoch=1):
+        pass
+    obs2.flush()
+    t = load_trace(path)
+    assert any(e["name"] == "a" for e in t["traceEvents"])
+
+
+# ------------------------------------------------- coordinator CTRL endpoint
+
+def test_coordinator_metrics_endpoint():
+    """CTRL op "metrics" returns the driver registry in text exposition
+    form over one ephemeral connection."""
+    import socket
+    from repro.launch.ha_cluster import HAConfig, _Coordinator, _read_ctrl, \
+        _send_ctrl
+
+    obs = Obs()
+    obs.metrics.counter("ha_promotions").inc(2)
+    obs.metrics.histogram("engine_pass_s").observe(0.1)
+    coord = _Coordinator(HAConfig(), obs=obs)
+    try:
+        s = socket.create_connection(("127.0.0.1", coord.port), timeout=10.0)
+        _send_ctrl(s, "metrics")
+        reply = _read_ctrl(s)
+        s.close()
+        assert reply["op"] == "metrics"
+        assert "ha_promotions 2" in reply["text"]
+        assert "engine_pass_s_count 1" in reply["text"]
+    finally:
+        coord.close()
+
+
+# ------------------------------------------------------- chaos run e2e trace
+
+@pytest.mark.slow
+def test_ha_chaos_run_emits_multisubsystem_trace(tmp_path):
+    """The §15 acceptance: one kill-and-promote HA run with --trace-out
+    yields ONE valid Perfetto timeline with spans from engine, transport,
+    WAL and the fault/HA control plane — including events from the KILLED
+    master (FaultPlan flushes its trace before os._exit)."""
+    from repro.launch.ha_cluster import HAConfig, run_ha_cluster
+
+    out = str(tmp_path / "trace.json")
+    rec = run_ha_cluster(HAConfig(
+        n=1024, dim=8, pb=64, k_max=128, lam=3.0, n_workers=2, n_nodes=3,
+        kill_master_after_version=6, trace_out=out, quiet=True))
+    assert rec["promotions"] == 1
+    trace = load_trace(out)
+    assert validate_trace(trace) == []
+    cats = trace_categories(trace)
+    assert {"engine", "transport", "wal", "fault"} <= cats, cats
+    assert "ha" in cats
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert "engine.epoch" in names       # per-epoch spans
+    assert "wal.append" in names         # durability plane
+    assert "fault.inject" in names       # the chaos kill itself
+    assert "ha.promote" in names         # the promotion decision
+    # the killed master's pid is present (trace survived os._exit)
+    pids = {e["pid"] for e in trace["traceEvents"]}
+    assert len(pids) >= 4                # driver + 3 nodes
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "wb") as f:
+            f.write(_golden_tracer().json_bytes())
+        print(f"regenerated {GOLDEN}")

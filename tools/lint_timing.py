@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Ban raw clocks in the instrumented trees (DESIGN.md §15).
+
+All timing inside ``src/repro/{distributed,serving,checkpoint}`` must go
+through the observability layer — `repro.obs.metrics.now()` (monotonic,
+system-wide on Linux, so per-process traces merge into one timeline) or a
+registry `timer(...)`.  Raw ``time.time()`` drifts under NTP steps and
+raw ``time.perf_counter()`` is process-local, so either one silently
+breaks cross-process trace merging and the HeartbeatTracker's liveness
+math.  This grep-level gate keeps them from creeping back in.
+
+Deliberate exceptions (e.g. a WALL-clock stamp in a checkpoint manifest,
+where calendar time is the point) go in ``tools/lint_timing_allow.txt``:
+one ``<repo-relative-path>: <substring>`` entry per line; an offending
+source line is allowed iff an entry's path matches its file and the
+entry's substring occurs in the line.
+
+  python tools/lint_timing.py          # exit 0 clean / 1 with findings
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TREES = ("src/repro/distributed", "src/repro/serving",
+         "src/repro/checkpoint")
+ALLOWLIST = os.path.join(REPO, "tools", "lint_timing_allow.txt")
+BANNED = re.compile(r"\btime\.(?:time|perf_counter)\s*\(")
+
+
+def load_allowlist() -> list[tuple[str, str]]:
+    entries = []
+    if os.path.exists(ALLOWLIST):
+        with open(ALLOWLIST) as f:
+            for raw in f:
+                raw = raw.strip()
+                if not raw or raw.startswith("#"):
+                    continue
+                path, _, frag = raw.partition(":")
+                entries.append((path.strip(), frag.strip()))
+    return entries
+
+
+def allowed(relpath: str, line: str, entries) -> bool:
+    return any(relpath == p and frag and frag in line
+               for p, frag in entries)
+
+
+def main() -> int:
+    entries = load_allowlist()
+    findings = []
+    for tree in TREES:
+        root = os.path.join(REPO, tree)
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", "obs")]
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, REPO)
+                with open(path) as f:
+                    for i, line in enumerate(f, start=1):
+                        if BANNED.search(line) and not allowed(
+                                rel, line, entries):
+                            findings.append(
+                                f"{rel}:{i}: {line.strip()}")
+    if findings:
+        print("raw time.time()/time.perf_counter() in instrumented "
+              "trees — use repro.obs.metrics.now() or a registry timer "
+              "(or add a deliberate exception to "
+              "tools/lint_timing_allow.txt):", file=sys.stderr)
+        for f in findings:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"lint_timing: clean ({', '.join(TREES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
