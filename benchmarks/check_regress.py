@@ -1,11 +1,13 @@
 """Benchmark regression gate — fails CI on real slowdowns in key metrics.
 
-Measures the four latency-critical paths at --quick sizes:
+Measures the latency-critical paths at --quick sizes:
 
   * ``validator_pass_us`` — one warm compiled OCC pass (bootstrap + epoch
     scan + the §11 precomputed validator: the training hot path);
   * ``service_p99_ms`` / ``service_p50_ms`` — solo request latency through
     `ClusterService.score` with warm jit caches (the serving hot path);
+  * ``serve_topk_us`` — warm `ClusterService.topk` microbatch latency (the
+    §16 retrieval-serving hot path: streaming top-k dispatch);
   * ``transport_commit_us`` — median publish→all-followers-acked latency
     over loopback sockets (the §13 replication barrier hot path);
   * ``recovery_replay_us`` — full `recover_wal` wall time (checkpoint
@@ -45,8 +47,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-KEY_METRICS = ("validator_pass_us", "service_p99_ms", "transport_commit_us",
-               "recovery_replay_us")
+KEY_METRICS = ("validator_pass_us", "service_p99_ms", "serve_topk_us",
+               "transport_commit_us", "recovery_replay_us")
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "baselines", "BENCH_regress_quick.json")
 SIZES = dict(n=1024, dim=16, pb=64, k_max=256, lam=4.0,
@@ -126,6 +128,16 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
         h = m.get_histogram("bench_service_request_s", trial=t)
         p50s.append(h.percentile(50))    # n_requests < sample_limit:
         p99s.append(h.percentile(99))    # exact, numpy-compatible
+
+    # --- top-k serving: warm streaming-topk microbatch (§16) -------------
+    svc.topk(q, k=8)                                 # warm (bucket, cap, k)
+    for _ in range(s["trials"]):
+        with m.timer("bench_serve_topk_s"):
+            for _ in range(20):
+                svc.topk(q, k=8)
+                if inject:
+                    time.sleep(inject)   # inside the timed block
+    serve_topk_us = m.get_histogram("bench_serve_topk_s").min / 20 * 1e6
     # --- replication commit: publish → all followers acked ---------------
     from benchmarks.transport import measure_commit
     transport_commit_us = min(
@@ -147,6 +159,7 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
         "validator_pass_us": validator_pass_us,
         "service_p50_ms": float(min(p50s) * 1e3),
         "service_p99_ms": float(min(p99s) * 1e3),
+        "serve_topk_us": serve_topk_us,
         "transport_commit_us": transport_commit_us,
         "recovery_replay_us": recovery_replay_us,
     }

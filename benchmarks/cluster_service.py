@@ -24,7 +24,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DPMeansTransaction, OCCEngine
+from repro.core import CenterPool, DPMeansTransaction, OCCEngine
 from repro.data import dp_stick_breaking_data
 from repro.launch.serve_clusters import ServeDemoConfig, run_demo
 from repro.serving import ClusterService, SnapshotStore
@@ -94,13 +94,65 @@ def _coalescing_rows(x, store, n_clients: int, reqs_per_client: int,
         f"deadline_flushes={m['n_deadline_flushes']}")]
 
 
+def _topk_serving_rows(dim: int, topk_ks, repeats: int, probes: int = 4,
+                       bucket: int = 64, k: int = 8):
+    """Large-K top-k serving (§16): flat vs hierarchical multi-probe
+    through the full ClusterService path — same synthetic center pool
+    published into a hier store; the mp row carries its own recall@k
+    measurement from a post-timing audited dispatch (the audit pays for a
+    flat dispatch, so it is kept OUT of the timed window).  The query
+    bucket is the small latency-sensitive regime — that is where probing
+    prunes (a 4096-query batch probes every cell anyway), and on this CPU
+    container the ref oracle pays O(u_cap * shard_cap) per dispatch, so
+    mp repeats are capped (liveness + recall, not CPU speed — the DMA-skip
+    claim is the TPU kernel's, measured by the loads accounting)."""
+    rng = np.random.default_rng(7)
+    rows = []
+    mp_repeats = min(repeats, 3)
+    for kc in topk_ks:
+        count = kc - kc // 8 - 3              # ragged active prefix
+        cn = np.zeros((kc, dim), np.float32)
+        cn[:count] = rng.normal(size=(count, dim)).astype(np.float32)
+        pool = CenterPool(jnp.asarray(cn),
+                          jnp.asarray(np.arange(kc) < count),
+                          jnp.asarray(count, jnp.int32),
+                          jnp.asarray(False))
+        store = SnapshotStore(hier=True)
+        store.publish_pool(pool)
+        q = jnp.asarray(rng.normal(size=(bucket, dim)).astype(np.float32))
+        h = store.latest().hier
+        for label, svc in (
+                ("flat", ClusterService(store, max_bucket=bucket)),
+                ("mp", ClusterService(store, max_bucket=bucket,
+                                      probes=probes,
+                                      recall_audit_every=mp_repeats + 2))):
+            reps = mp_repeats if label == "mp" else repeats
+            svc.topk(q, k=k)                  # warm the jit cache
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                svc.topk(q, k=k)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            derived = (f"k={k};count={count};cells={h.n_cells};"
+                       f"qps={bucket / us * 1e6:.0f}")
+            if label == "mp":
+                svc.topk(q, k=k)              # dispatch #reps+2: audited
+                met = svc.metrics()
+                derived += (f";p={probes};recall={met['topk_recall']:.3f};"
+                            f"shards={met['topk_shards_probed']}"
+                            f"/{met['topk_shards_probed'] + met['topk_tiles_skipped']}")
+            rows.append((f"cluster_service_topk_{label}_K{kc}", us, derived))
+    return rows
+
+
 def run(n_train: int = 8192, dim: int = 16, buckets=(8, 64, 512, 4096),
         repeats: int = 20, demo_queries: int = 2000,
         coalesce_clients: int = 8, coalesce_reqs: int = 25,
+        topk_ks=(4096, 32768, 131072),
         out_path: str | None = None, quiet: bool = False):
     x, store = _warm_store(n_train, dim)
     rows = _steady_state_rows(x, store, buckets, repeats)
     rows += _coalescing_rows(x, store, coalesce_clients, coalesce_reqs)
+    rows += _topk_serving_rows(dim, topk_ks, repeats)
 
     # demo_queries=0 skips the train-while-serve demo — CI's --quick smoke
     # does, because the workflow runs `repro.launch.serve_clusters --quick`

@@ -25,7 +25,63 @@ def _time(fn, *args, iters: int = 20) -> float:
     return (time.time() - t0) / iters * 1e6
 
 
-def run(quiet: bool = False):
+def _topk_rows(rng, quick: bool):
+    """serve_topk at retrieval-serving scale (DESIGN.md §16): flat oracle
+    (full (B, K) matrix) vs the streaming schedule (emulate — static-count
+    prefix slice + tile skip) vs hierarchical multi-probe over the same
+    buffers.  K sweeps 2^12..2^17; counts are ragged (~K/4 active) so the
+    active-prefix machinery actually earns its rows."""
+    from repro.kernels.topk_stream import topk_tile_loads
+    from repro.serving.snapshot import build_hier
+
+    rows = []
+    b, d, k = 64, 64, 16
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    for kc in ((4096,) if quick else (4096, 32768, 131072)):
+        count = kc // 4 + 37
+        c = jnp.asarray(rng.normal(size=(kc, d)).astype(np.float32))
+        m = jnp.asarray(np.arange(kc) < count)
+
+        # flat: traced count -> no prefix slicing, full-width matmul + sort
+        cnt = jnp.asarray(count, jnp.int32)
+        us = _time(lambda: ops.serve_topk(x, c, k, mask=m, count=cnt,
+                                          backend="ref"))
+        rows.append((f"kern_serve_topk_flat_K{kc}", us,
+                     f"count={count};k={k};backend=ref"))
+
+        # streaming schedule: host count -> pow2 prefix slice + tile skip
+        us = _time(lambda: ops.serve_topk(x, c, k, mask=m, count=count,
+                                          backend="emulate"))
+        loads = topk_tile_loads(count, kc)
+        rows.append((f"kern_serve_topk_stream_K{kc}", us,
+                     f"count={count};k={k};backend=emulate;"
+                     f"tile_loads={loads}of{-(-kc // 128)}"))
+
+        # multi-probe: p=4 of the hier layout built from the same prefix
+        h = build_hier(jnp.where(m[:, None], c, 0), m, count)
+        p = min(4, h.n_cells)
+        _, cq = ops.serve_topk(x, h.coarse, p, mask=h.coarse_mask,
+                               backend="ref")
+        cq_np = np.asarray(cq)
+        probed = np.unique(cq_np[cq_np >= 0])
+        u = len(probed)
+        cells = np.full((min(h.n_cells, max(8, u)),), -1, np.int32)
+        cells[:u] = probed
+        member = np.zeros((b, len(cells)), bool)
+        for ui, pc in enumerate(probed):
+            member[:, ui] = (cq_np == pc).any(axis=1)
+        cells_j, member_j = jnp.asarray(cells), jnp.asarray(member)
+        ucnt = jnp.asarray(u, jnp.int32)
+        us = _time(lambda: ops.serve_topk_multiprobe(
+            x, h.fine, h.fine_ids, h.fine_mask, cells_j, member_j, k,
+            u_count=ucnt, backend="emulate"))
+        rows.append((f"kern_serve_topk_multiprobe_K{kc}", us,
+                     f"count={count};k={k};p={p};probed={u}of{h.n_cells};"
+                     f"shard_cap={h.shard_cap};backend=emulate"))
+    return rows
+
+
+def run(quiet: bool = False, quick: bool = False):
     rng = np.random.default_rng(0)
     rows = []
     backend = "pallas" if ops.on_tpu() else "ref"
@@ -60,6 +116,8 @@ def run(quiet: bool = False):
     d2r, _ = ops.pairwise_argmin(x[:64], c[:32], m[:32], backend="ref")
     ok = bool(jnp.allclose(d2p, d2r, atol=1e-4))
     rows.append(("kern_pallas_interpret_parity", 0.0, f"allclose={ok}"))
+
+    rows += _topk_rows(rng, quick)
 
     if not quiet:
         for r in rows:

@@ -89,6 +89,8 @@ def main(argv=None) -> None:
             repeats=2 if args.quick else (5 if args.fast else 20),
             coalesce_clients=4 if args.quick else 8,
             coalesce_reqs=8 if args.quick else 25,
+            topk_ks=(4096,) if args.quick else
+                    ((4096, 32768) if args.fast else (4096, 32768, 131072)),
             # --quick: steady-state + coalescing only; the CI workflow runs
             # the multi-model train-while-serve demo as its own serve-e2e
             # job, and the regression gate (check_regress) as its own step
@@ -108,7 +110,7 @@ def main(argv=None) -> None:
             trials=1 if args.quick else 3)
     if want("kernels"):
         from benchmarks import kernels
-        rows += kernels.run()
+        rows += kernels.run(quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline_table
         rows += roofline_table.run()

@@ -26,9 +26,16 @@ from repro.kernels.dpmeans_assign import (
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.swiglu import swiglu as _swiglu
+from repro.kernels.topk_stream import (
+    topk_stream as _topk_stream,
+    topk_stream_emulate as _topk_stream_emulate,
+    topk_multiprobe_stream as _topk_mp_stream,
+    topk_multiprobe_emulate as _topk_mp_emulate,
+)
 
 __all__ = ["assign", "pairwise_argmin", "serve_assign", "serve_topk",
-           "flash_attention", "rmsnorm", "swiglu", "on_tpu"]
+           "serve_topk_multiprobe", "flash_attention", "rmsnorm", "swiglu",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -110,34 +117,121 @@ def serve_assign(x, centers, mask=None, count=None, n_valid=None,
     return d2, idx
 
 
+def _next_pow2(n: int) -> int:
+    # Local duplicate of core.occ.next_pow2: core.occ imports this module,
+    # so importing it back would be a cycle.
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _static_count(count):
+    """The host int behind `count`, or None when it is traced/absent."""
+    if count is None or isinstance(count, jax.core.Tracer):
+        return None
+    try:
+        return int(count)
+    except Exception:
+        return None
+
+
+def _mask_queries(d2, idx, n_valid):
+    if n_valid is None:
+        return d2, idx
+    ok = (jnp.arange(d2.shape[0]) < n_valid)[:, None]
+    return jnp.where(ok, d2, jnp.inf), jnp.where(ok, idx, -1)
+
+
 def serve_topk(x, centers, k: int, mask=None, count=None, n_valid=None,
-               backend: str = "auto"):
+               backend: str = "auto", **blocks):
     """k nearest centers per query: (d2 (N, k) ascending, idx (N, k)).
 
     Serving-plane ranking query with the same bucket/count-prefix masking
     as `serve_assign`; invalid (masked / padded / beyond-count) slots are
-    (inf, -1).  All backends run the jnp algebra (`ref.topk_ref`): top-k
-    needs the full distance row, so there is no streamed running-min kernel
-    to dispatch to — the O(N·K) matrix is one MXU matmul and `lax.top_k`
-    lowers natively on TPU.  `topk[..., :1]` equals `serve_assign` on the
-    ref backend bit-exactly (same algebra, same tie-breaking).
+    (inf, -1); distance ties break by lower index on EVERY backend.  Full
+    backend dispatch (DESIGN.md §16): pallas streams center tiles through
+    VMEM carrying k running candidates and skips HBM DMA beyond the active
+    prefix (`kernels/topk_stream.py`); "emulate" replays that exact tile
+    schedule as vmapped jnp; "ref" runs the one-matmul + `lax.top_k`
+    oracle.  For f32 inputs all three agree bit-exactly — the streamed
+    merge is tiling-invariant and the D-contraction is never split.
+    `topk[..., :1]` equals `serve_assign` bit-exactly on each backend
+    (same algebra, same tie-breaking).
 
-    Like `serve_assign`, scoring is restricted to the active prefix: the
-    count/mask validity is applied to the center rows BEFORE the distance
-    matmul (`topk_ref` zeroes masked rows), so NaN/inf-laden payloads
-    sitting in padded slots can never surface in — or reorder — the
-    top-k (tests/test_serving.py pins this).
+    Active-prefix restriction happens at the SOURCE on every backend:
+    masked rows are zeroed before the ref matmul / inf-masked per tile in
+    the kernel, so NaN/inf-laden payloads in padded slots can never
+    surface in — or reorder — the top-k (tests/test_serving.py pins
+    this).  When `count` is a HOST int (benchmarks, the retrieval example
+    — not the service's traced per-version scalar), the ref/emulate paths
+    additionally slice the center buffer to the pow2-rounded active prefix
+    before any compute, so CPU backends pay O(pow2(count)) instead of
+    O(K_max) at count << K_max; a prefix slice changes no surviving
+    distance bitwise.  k may exceed the (sliced) capacity — the overflow
+    columns come back (inf, -1).
     """
     if mask is None:
         mask = jnp.ones((centers.shape[0],), bool)
+    static_c = _static_count(count)
     if count is not None:
         mask = jnp.logical_and(mask, jnp.arange(centers.shape[0]) < count)
-    d2, idx = _ref.topk_ref(x, centers, k, mask)
-    if n_valid is not None:
-        ok = (jnp.arange(x.shape[0]) < n_valid)[:, None]
-        d2 = jnp.where(ok, d2, jnp.inf)
-        idx = jnp.where(ok, idx, -1)
-    return d2, idx
+    if static_c is not None and backend in ("ref", "emulate", "auto") \
+            and not on_tpu():
+        kp = min(centers.shape[0], max(_next_pow2(max(static_c, 1)), 8))
+        if kp < centers.shape[0]:
+            centers, mask = centers[:kp], mask[:kp]
+    kk = min(k, centers.shape[0])
+    if backend == "emulate":
+        d2, idx = _topk_stream_emulate(x, centers, mask, kk, count=count,
+                                       **blocks)
+    else:
+        use_pallas, interp = _resolve(backend)
+        if use_pallas:
+            d2, idx = _topk_stream(x, centers, mask, kk, count=count,
+                                   interpret=interp, **blocks)
+        else:
+            d2, idx = _ref.topk_ref(x, centers, kk, mask)
+    if kk < k:
+        pad = k - kk
+        d2 = jnp.concatenate(
+            [d2, jnp.full((d2.shape[0], pad), jnp.inf, d2.dtype)], 1)
+        idx = jnp.concatenate(
+            [idx, jnp.full((idx.shape[0], pad), -1, jnp.int32)], 1)
+    return _mask_queries(d2, idx, n_valid)
+
+
+def serve_topk_multiprobe(x, fine, fine_ids, fine_mask, cells, member,
+                          k: int, u_count=None, n_valid=None,
+                          backend: str = "auto", **blocks):
+    """Top-k over a hierarchical snapshot's probed fine shards.
+
+    x (B, D); fine (n_cells, S, D) + fine_ids/fine_mask (n_cells, S) per
+    `serving.snapshot.build_hier`; cells (U,) the microbatch's probed-cell
+    union (packed ascending, -1 pad); member (B, U) per-query membership;
+    `u_count` the number of real union entries.  Returns (d2 (B, k), idx
+    (B, k)) where idx are ORIGINAL flat-snapshot indices — when the union
+    covers every active cell and member is all-true, bit-identical to
+    `serve_topk` on the flat buffers (the p = all exactness contract,
+    DESIGN.md §16).  Pallas streams only the probed shards (the gather
+    lives in the BlockSpec index map — unprobed shards never leave HBM);
+    ref gathers the union once and runs ONE shared 2-D matmul, the only
+    batched-distance formulation XLA reproduces bitwise against the flat
+    matmul.
+    """
+    if backend == "emulate":
+        d2, idx = _topk_mp_emulate(x, fine, fine_ids, fine_mask, cells,
+                                   member, k, u_count=u_count, **blocks)
+    else:
+        use_pallas, interp = _resolve(backend)
+        if use_pallas:
+            d2, idx = _topk_mp_stream(x, fine, fine_ids, fine_mask, cells,
+                                      member, k, u_count=u_count,
+                                      interpret=interp, **blocks)
+        else:
+            d2, idx = _ref.topk_multiprobe_ref(x, fine, fine_ids, fine_mask,
+                                               cells, member, k)
+    return _mask_queries(d2, idx, n_valid)
 
 
 def flash_attention(q, k, v, causal=True, scale=None, backend: str = "auto",

@@ -9,7 +9,13 @@ import jax.numpy as jnp
 import jax
 
 __all__ = ["assign_ref", "pairwise_argmin_ref", "topk_ref",
+           "topk_merge_ref", "topk_multiprobe_ref", "TOPK_SENTINEL",
            "flash_attention_ref", "rmsnorm_ref", "swiglu_ref"]
+
+# Invalid-candidate id inside the top-k selection: larger than any real
+# center index, so the lexicographic (d2, id) order pushes exhausted slots
+# last deterministically.  Callers map it to -1 wherever d2 is non-finite.
+TOPK_SENTINEL = 2**31 - 1
 
 
 def assign_ref(x: jnp.ndarray, centers: jnp.ndarray, mask: jnp.ndarray):
@@ -67,6 +73,84 @@ def topk_ref(x: jnp.ndarray, centers: jnp.ndarray, k: int,
         d2 = jnp.where(mask[None, :], d2, jnp.inf)
     neg, idx = jax.lax.top_k(-d2, k)
     d2k = -neg
+    idx = jnp.where(jnp.isfinite(d2k), idx, -1).astype(jnp.int32)
+    return d2k, idx
+
+
+def topk_merge_ref(run_d: jnp.ndarray, run_i: jnp.ndarray,
+                   d2: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Running top-k merge by lexicographic (d2, id) — THE selection spec.
+
+    run_d/run_i: (N, k) current candidates (pad: (inf, TOPK_SENTINEL)).
+    d2/ids:      (N, M) new candidates (invalid: d2=inf, any id).
+    Returns the new (N, k), ascending by (d2, id): k unrolled extraction
+    steps, each taking the distance minimum and, among ties, the smallest
+    id — exactly `lax.top_k`'s lower-index-first tie order when ids are
+    the candidates' original positions.  Because selection depends only on
+    the candidate (value, id) MULTISET, the result is invariant to how
+    callers tile or reorder candidates — the property that makes the
+    streaming kernel (kernels/topk_stream.py), its vmapped emulation, and
+    the gathered multi-probe path all bit-identical to `topk_ref` for f32
+    inputs, whatever their block sizes.  (inf, TOPK_SENTINEL) pads are a
+    fixed point of the extraction (consuming one re-creates it), so ragged
+    candidate sets need no special casing.  Used as the merge body INSIDE
+    the Pallas kernel as well — keeping the oracle and the kernel on one
+    implementation is what turns parity into a construction, not a test.
+    """
+    cat_d = jnp.concatenate([run_d, d2], axis=1)
+    cat_i = jnp.concatenate([run_i, ids], axis=1)
+    out_d, out_i = [], []
+    for _ in range(k):
+        dmin = jnp.min(cat_d, axis=1)
+        tie = cat_d == dmin[:, None]
+        imin = jnp.min(jnp.where(tie, cat_i, TOPK_SENTINEL), axis=1)
+        out_d.append(dmin)
+        out_i.append(imin)
+        hit = tie & (cat_i == imin[:, None])
+        cat_d = jnp.where(hit, jnp.inf, cat_d)
+        cat_i = jnp.where(hit, TOPK_SENTINEL, cat_i)
+    return (jnp.concatenate([d[:, None] for d in out_d], axis=1),
+            jnp.concatenate([i[:, None] for i in out_i], axis=1))
+
+
+def topk_multiprobe_ref(x: jnp.ndarray, fine: jnp.ndarray,
+                        fine_ids: jnp.ndarray, fine_mask: jnp.ndarray,
+                        cells: jnp.ndarray, member: jnp.ndarray, k: int):
+    """Multi-probe top-k oracle over a two-level (cell → shard) layout.
+
+    x (B, D); fine (n_cells, S, D) shard buffers; fine_ids/fine_mask
+    (n_cells, S) original flat indices (-1 pad) / validity; cells (U,)
+    int32 — the microbatch's probed-cell union, packed ascending, -1 pad;
+    member (B, U) bool — query b may see candidates of cells[u].
+
+    The distance computation deliberately gathers the probed shards into
+    ONE (U*S, D) row matrix and runs a single 2-D matmul shared by the
+    whole microbatch: on XLA a row-gathered matmul is bitwise-equal to the
+    corresponding columns of the flat `x @ centers.T` (per-query batched
+    einsums are NOT), and selection is by (d2, original id) — so when the
+    union covers every active cell and member is all-true, the result is
+    bit-identical to `topk_ref` on the flat buffers, tie order included.
+    Masked shard rows are zeroed before the matmul (same NaN/inf guard as
+    `topk_ref`); per-query membership only ever masks AFTER the matmul,
+    so it cannot perturb surviving columns.
+    """
+    s = fine.shape[1]
+    u = cells.shape[0]
+    cc = jnp.maximum(cells, 0)
+    g = jnp.take(fine, cc, axis=0).reshape(u * s, -1)
+    gids = jnp.take(fine_ids, cc, axis=0).reshape(u * s)
+    gmask = (jnp.take(fine_mask, cc, axis=0).reshape(u * s)
+             & jnp.repeat(cells >= 0, s))
+    g = jnp.where(gmask[:, None], g, 0)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    g2 = jnp.sum(g * g, axis=-1)[None, :]
+    d2 = jnp.maximum(x2 + g2 - 2.0 * (x @ g.T), 0.0)
+    ok = gmask[None, :] & jnp.repeat(member, s, axis=1)
+    d2 = jnp.where(ok, d2, jnp.inf)
+    init_d = jnp.full((x.shape[0], k), jnp.inf, d2.dtype)
+    init_i = jnp.full((x.shape[0], k), TOPK_SENTINEL, jnp.int32)
+    d2k, idx = topk_merge_ref(init_d, init_i, d2,
+                              jnp.broadcast_to(gids[None, :], d2.shape), k)
     idx = jnp.where(jnp.isfinite(d2k), idx, -1).astype(jnp.int32)
     return d2k, idx
 

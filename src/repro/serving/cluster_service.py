@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as _kops
+from repro.kernels.topk_stream import topk_tile_loads
 from repro.obs import Obs
 from repro.obs.metrics import now as _now
 from repro.serving.snapshot import ModelSnapshot, SnapshotStore, next_bucket
@@ -88,6 +89,9 @@ class DispatchRecord(NamedTuple):
     n_valid: int
     x: np.ndarray           # (bucket, D) — the exact padded dispatch input
     spans: tuple[tuple[int, int], ...]   # member request row ranges
+    probes: int = 0         # coarse cells probed per query (0: flat dispatch
+    #                         — replay through _topk_step; >0: hierarchical
+    #                         multi-probe — replay through _mp_topk_step)
 
 
 # Trace counter: incremented only when a query step is (re)compiled.  Lets
@@ -132,6 +136,49 @@ def _topk_step(centers, mask, count, xq, n_valid, *, k, backend,
     centers, mask, xq = _constrained(centers, mask, xq, mesh, data_axis)
     return _kops.serve_topk(xq, centers, k, mask=mask, count=count,
                             n_valid=n_valid, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "p", "u_cap", "backend"))
+def _mp_topk_step(coarse, coarse_mask, fine, fine_ids, fine_mask, xq,
+                  n_valid, *, k, p, u_cap, backend):
+    """Hierarchical multi-probe top-k: route each query to its p nearest
+    coarse cells, take the microbatch's probed-cell UNION, and stream only
+    those fine shards (`kernels/ops.serve_topk_multiprobe` — on the Pallas
+    path the gather lives in the BlockSpec index map, so unprobed shards
+    never leave HBM).  One jitted dispatch, cache-keyed on (bucket,
+    hier shape, k, p, u_cap, backend) — never on the version.
+
+    `u_cap` bounds the union statically (min(n_cells, pow2(bucket*p)) at
+    the call site, so it can never truncate a real union).  Returns
+    (d2, idx, n_probed) with idx ORIGINAL flat indices; padded query rows
+    route nowhere (their coarse probes are -1 under `n_valid`) and come
+    back (inf, -1) like every other backend.
+    """
+    global _QUERY_TRACES
+    _QUERY_TRACES += 1
+    b = xq.shape[0]
+    n_cells = coarse.shape[0]
+    # Route: p nearest coarse cells per query (same selection kernel, so
+    # routing inherits the deterministic (d2, id) tie order).
+    _, cells_q = _kops.serve_topk(xq, coarse, p, mask=coarse_mask,
+                                  n_valid=n_valid, backend=backend)
+    ok = cells_q >= 0
+    safe = jnp.where(ok, cells_q, n_cells)
+    # Microbatch union of probed cells, packed ascending with -1 padding
+    # (the layout serve_topk_multiprobe's clamped index map expects).
+    memb = jnp.zeros((n_cells,), bool).at[safe].set(True, mode="drop")
+    union = jnp.nonzero(memb, size=u_cap, fill_value=-1)[0].astype(jnp.int32)
+    n_probed = jnp.sum(union >= 0).astype(jnp.int32)
+    # Per-query membership over union slots: scatter probes into a one-hot
+    # row (trash column n_cells absorbs invalid probes), gather at union.
+    onehot = jnp.zeros((b, n_cells + 1), bool).at[
+        jnp.arange(b)[:, None], safe].set(True)
+    member = (onehot[:, jnp.where(union >= 0, union, n_cells)]
+              & (union >= 0)[None, :])
+    d2, idx = _kops.serve_topk_multiprobe(
+        xq, fine, fine_ids, fine_mask, union, member, k,
+        u_count=n_probed, n_valid=n_valid, backend=backend)
+    return d2, idx, n_probed
 
 
 class _Pending:
@@ -257,6 +304,20 @@ class ClusterService:
         Unbounded growth: enable for audits/tests, not steady production.
       mesh / data_axis: optional device mesh for replicated-snapshot /
         sharded-query serving.
+      probes: the multi-probe exactness knob (DESIGN.md §16).  None (the
+        default) serves top-k from the flat buffers.  An int p serves
+        top-k through the snapshot's hierarchical layout (requires
+        `SnapshotStore(hier=True)`): each query routes to its p nearest
+        coarse cells and only the microbatch's probed fine shards are
+        streamed.  p >= n_cells dispatches the FLAT step — so "probe
+        everything" is bit-identical to flat serving by construction, and
+        smaller p trades measured recall (see `recall_audit_every`) for
+        probed-shard work.  `assign`/`score` are unaffected (top-1 over
+        a pruned candidate set would silently change answers).
+      recall_audit_every: when > 0 and multi-probing, every Nth top-k
+        dispatch ALSO runs the flat step on the same microbatch and
+        publishes recall@k against it as the `serve_topk_recall` gauge —
+        a paid-for spot check, off by default.
       obs: optional shared `repro.obs.Obs`; counters/histograms land in
         its registry (labeled by model) and query dispatches become trace
         spans when a tracer is attached.
@@ -270,12 +331,19 @@ class ClusterService:
                  audit_log: bool = False,
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data",
+                 probes: int | None = None,
+                 recall_audit_every: int = 0,
                  obs: Obs | None = None):
         assert min_bucket & (min_bucket - 1) == 0, "min_bucket: power of two"
         assert max_bucket & (max_bucket - 1) == 0, "max_bucket: power of two"
         assert coalesce_bucket & (coalesce_bucket - 1) == 0, \
             "coalesce_bucket: power of two"
+        assert probes is None or probes >= 1, "probes: None or >= 1"
+        assert probes is None or mesh is None, \
+            "multi-probe serving is not supported with a mesh yet"
         self.store = store
+        self.probes = probes
+        self.recall_audit_every = recall_audit_every
         self.backend = backend
         self.min_bucket = min_bucket
         self.max_bucket = max_bucket
@@ -308,6 +376,20 @@ class ClusterService:
         self._c_flush_full = m.counter("serve_flushes", reason="full", **mlab)
         self._c_swaps = m.counter("serve_swaps", **mlab)
         self._c_compiles = m.counter("serve_jit_compiles", **mlab)
+        # Top-k DMA accounting (§16): per dispatch, how many fine shards
+        # (multi-probe) / center tiles (flat) the kernel schedule streams
+        # vs skips.  Counted from the SAME clamp arithmetic the kernel's
+        # index maps use (`topk_tile_loads`), so the counters are the
+        # schedule's ground truth on every backend, not a Pallas-only
+        # readback.  The recall gauge is last-audit recall@k (see
+        # `recall_audit_every`); 0 until a first audit runs.
+        self._c_topk_mp = m.counter("serve_topk_multiprobe_dispatches",
+                                    **mlab)
+        self._c_shards_probed = m.counter("serve_topk_shards_probed", **mlab)
+        self._c_tiles_skipped = m.counter("serve_topk_tiles_skipped", **mlab)
+        self._c_recall_audits = m.counter("serve_topk_recall_audits", **mlab)
+        self._g_recall = m.gauge("serve_topk_recall", **mlab)
+        self._n_topk_dispatches = 0     # audit cadence (guarded by _mlock)
         self._h_queue_wait = m.histogram("serve_queue_wait_s", **mlab)
         self._h_dispatch = m.histogram("serve_dispatch_s", **mlab)
         self._h_request = m.histogram("serve_request_s", **mlab)
@@ -389,11 +471,12 @@ class ClusterService:
             self.version_hist[snap.version] = (
                 self.version_hist.get(snap.version, 0) + n)
 
-    def _record(self, group, snap, kind, k, bucket, n, xp, spans) -> None:
+    def _record(self, group, snap, kind, k, bucket, n, xp, spans,
+                probes: int = 0) -> None:
         if self.audit is not None:
             self.audit.append(DispatchRecord(
                 group, snap.version, kind, k, bucket, n,
-                np.asarray(xp), tuple(spans)))
+                np.asarray(xp), tuple(spans), probes))
 
     def _split(self, x) -> list[jnp.ndarray]:
         x = jnp.asarray(x)
@@ -404,17 +487,68 @@ class ClusterService:
         return [x[i:i + self.max_bucket]
                 for i in range(0, x.shape[0], self.max_bucket)]
 
+    def _mp_probes(self, snap) -> int:
+        """Effective probe width for this dispatch: 0 = flat (probes off,
+        or p >= n_cells — "probe everything" IS the flat step, which is
+        what makes the p = all bit-identity a construction, not a test)."""
+        if self.probes is None:
+            return 0
+        h = snap.hier
+        if h is None:
+            raise RuntimeError(
+                "probes is set but the published snapshot has no "
+                "hierarchical layout — publish via SnapshotStore(hier=True)")
+        return 0 if self.probes >= h.n_cells else self.probes
+
+    def _flat_topk(self, snap, xp, n, k):
+        return _topk_step(
+            snap.centers, snap.mask, np.int32(snap.count), xp,
+            np.int32(n), k=k, backend=self.backend, mesh=self.mesh,
+            data_axis=self.data_axis)
+
+    def _audit_recall(self, snap, xp, n, k, idx) -> None:
+        """Paid-for spot check: flat top-k on the SAME microbatch, recall@k
+        of the multi-probe answer against it, published as a gauge."""
+        _, flat_idx = self._flat_topk(snap, xp, n, k)
+        approx = np.asarray(idx)[:n]
+        exact = np.asarray(flat_idx)[:n]
+        hits = tot = 0
+        for a_row, e_row in zip(approx, exact):
+            e = set(int(i) for i in e_row if i >= 0)
+            if not e:
+                continue
+            a = set(int(i) for i in a_row if i >= 0)
+            hits += len(a & e)
+            tot += len(e)
+        self._c_recall_audits.inc()
+        self._g_recall.set(hits / tot if tot else 1.0)
+
     def _run_step(self, snap, xp, n, kind, k):
-        """One jitted dispatch (the only two call sites of the steps)."""
+        """One jitted dispatch (the only two call sites of the steps).
+
+        Top-k dispatches run under a `topk.dispatch` span and route to the
+        multi-probe step when the exactness knob says so; the span +
+        counters account probed shards vs skipped tiles from the kernel
+        schedule's own clamp arithmetic (`topk_tile_loads`), on every
+        backend.
+        """
         traces0 = _QUERY_TRACES
+        mp = self._mp_probes(snap) if kind == "topk" else 0
+        n_probed = None
+        span = ("topk.dispatch" if kind == "topk" else "serve.dispatch")
         t0 = _now()
-        with self.obs.span("serve.dispatch", cat="serve", kind=kind,
-                           bucket=int(xp.shape[0]), version=snap.version):
-            if kind == "topk":
-                d2, idx = _topk_step(
-                    snap.centers, snap.mask, np.int32(snap.count), xp,
-                    np.int32(n), k=k, backend=self.backend, mesh=self.mesh,
-                    data_axis=self.data_axis)
+        with self.obs.span(span, cat="serve", kind=kind,
+                           bucket=int(xp.shape[0]), version=snap.version,
+                           probes=mp):
+            if mp:
+                h = snap.hier
+                u_cap = min(h.n_cells, next_bucket(xp.shape[0] * mp, 1))
+                d2, idx, n_probed = _mp_topk_step(
+                    h.coarse, h.coarse_mask, h.fine, h.fine_ids,
+                    h.fine_mask, xp, np.int32(n), k=k, p=mp, u_cap=u_cap,
+                    backend=self.backend)
+            elif kind == "topk":
+                d2, idx = self._flat_topk(snap, xp, n, k)
             else:
                 d2, idx = _assign_step(
                     snap.centers, snap.mask, np.int32(snap.count), xp,
@@ -422,6 +556,24 @@ class ClusterService:
                     data_axis=self.data_axis)
         self._h_dispatch.observe(_now() - t0)
         self._c_dispatches.inc()
+        if kind == "topk":
+            if mp:
+                probed = int(jax.device_get(n_probed))
+                self._c_topk_mp.inc()
+                self._c_shards_probed.inc(probed)
+                self._c_tiles_skipped.inc(snap.hier.n_cells - probed)
+            else:
+                cap = snap.capacity
+                bk = min(128, max(8, cap))
+                k_tiles = (cap + bk - 1) // bk
+                self._c_tiles_skipped.inc(
+                    k_tiles - topk_tile_loads(int(snap.count), cap))
+            with self._mlock:
+                self._n_topk_dispatches += 1
+                n_topk = self._n_topk_dispatches
+            if (mp and self.recall_audit_every > 0
+                    and n_topk % self.recall_audit_every == 0):
+                self._audit_recall(snap, xp, n, k, idx)
         if _QUERY_TRACES != traces0:
             self._c_compiles.inc(_QUERY_TRACES - traces0)
         return d2, idx
@@ -458,7 +610,8 @@ class ClusterService:
         for it in items:
             spans.append((lo, lo + it.x.shape[0]))
             lo += it.x.shape[0]
-        self._record(gid, snap, kind, kk, bucket, n, xp, spans)
+        self._record(gid, snap, kind, kk, bucket, n, xp, spans,
+                     self._mp_probes(snap) if kind == "topk" else 0)
         labels, scores = np.asarray(idx), np.asarray(d2)
         for it, (lo, hi) in zip(items, spans):
             it.out = ServeResponse(
@@ -499,7 +652,8 @@ class ClusterService:
             xp, bucket = self._pad(xc)
             d2, idx = self._run_step(snap, xp, n, kind, kk)
             self._account(snap, n, bucket)
-            self._record(-1, snap, kind, kk, bucket, n, xp, [(0, n)])
+            self._record(-1, snap, kind, kk, bucket, n, xp, [(0, n)],
+                         self._mp_probes(snap) if kind == "topk" else 0)
             parts_l.append(np.asarray(idx[:n]))
             parts_s.append(np.asarray(d2[:n]))
         self._c_requests.inc()
@@ -566,6 +720,16 @@ class ClusterService:
             # router tenants with equal shapes share compilations, which
             # is what the router-level counter proves).
             "query_step_compiles": _QUERY_TRACES - self._traces0,
+            # multi-probe top-k accounting (§16): probed-shard / skipped-
+            # tile totals from the kernel schedule's clamp arithmetic, and
+            # the exactness knob's last audited recall@k (1.0 means the
+            # audit saw no loss; the gauge is 0 until a first audit runs).
+            "topk_probes": self.probes,
+            "n_topk_multiprobe": int(self._c_topk_mp.value),
+            "topk_shards_probed": int(self._c_shards_probed.value),
+            "topk_tiles_skipped": int(self._c_tiles_skipped.value),
+            "topk_recall_audits": int(self._c_recall_audits.value),
+            "topk_recall": self._g_recall.value,
             "versions_served": sorted(self.version_hist),
             "bucket_hist": dict(sorted(self.bucket_hist.items())),
             # training-side observability surfaced at the serving endpoint:

@@ -59,9 +59,93 @@ from repro.core.engine import OCCPassResult
 from repro.core.occ import CenterPool, next_pow2
 
 __all__ = ["ModelSnapshot", "SnapshotStore", "next_bucket", "freeze_snapshot",
-           "CenterDelta", "CenterLog", "DeltaSnapshot"]
+           "CenterDelta", "CenterLog", "DeltaSnapshot", "HierIndex",
+           "build_hier"]
 
 _MIN_CAPACITY = 8   # TPU sublane tile: the smallest useful center buffer
+
+
+@dataclass(frozen=True)
+class HierIndex:
+    """Two-level routing layout over a snapshot's flat center prefix
+    (DESIGN.md §16) — the IVF-style structure behind multi-probe top-k.
+
+    Built at publish time from the flat buffers and immutable alongside
+    them.  `coarse` holds ~sqrt(K) routing centers (a strided sample of
+    the active prefix); every active center belongs to exactly ONE cell
+    (its nearest coarse center, ties to the lower cell), and cell c's
+    members sit in `fine[c]` padded to the common power-of-two
+    `shard_cap`, ordered by ascending original index (stable grouping).
+    `fine_ids` maps each shard slot back to its ORIGINAL flat index (-1
+    pad) — top-k over shards returns flat indices, so hierarchical
+    serving is indistinguishable from flat serving to clients.
+
+    The layout is PURELY an access-path permutation: `fine` rows are
+    bit-copies of flat rows, so probing every cell reproduces the flat
+    top-k bit-identically (the p = all exactness contract), and routing
+    quality (how well the strided coarse sample matches the data) only
+    ever affects recall at p < all, never correctness.
+    """
+    coarse: jnp.ndarray       # (n_cells, D) routing centers
+    coarse_mask: jnp.ndarray  # (n_cells,) bool — all True after clamping
+    fine: jnp.ndarray         # (n_cells, shard_cap, D) member rows
+    fine_ids: jnp.ndarray     # (n_cells, shard_cap) int32 flat index, -1 pad
+    fine_mask: jnp.ndarray    # (n_cells, shard_cap) bool
+    n_cells: int
+    shard_cap: int
+
+
+def build_hier(centers, mask, count: int, *, n_cells: int | None = None,
+               shard_cap: int | None = None) -> HierIndex | None:
+    """Group a flat center prefix into the two-level HierIndex.
+
+    Host-side, O(count · n_cells · D) for the routing pass plus a stable
+    argsort — publish-time cost, never on the query path.  Defaults:
+    n_cells = pow2(ceil(sqrt(count))) clamped to <= count (so every cell
+    is seeded by a distinct stride sample), shard_cap = pow2(max cell
+    population).  Returns None for an empty model.
+    """
+    count = int(count)
+    if count <= 0:
+        return None
+    cn = np.asarray(centers[:count])
+    d = cn.shape[1]
+    if n_cells is None:
+        n_cells = next_pow2(max(int(np.ceil(np.sqrt(count))), 1))
+    while n_cells > count:
+        n_cells //= 2
+    n_cells = max(n_cells, 1)
+    # Deterministic coarse seeds: a stride sample of the active prefix.
+    coarse = cn[(np.arange(n_cells) * count) // n_cells]
+    # Route every active center to its nearest coarse cell (f32 ref
+    # algebra; ties to the lower cell — same convention as every argmin
+    # in the repo).
+    from repro.kernels import ops as _kops
+    _, cell = _kops.assign(jnp.asarray(cn), jnp.asarray(coarse),
+                           jnp.ones((n_cells,), bool), backend="ref")
+    cell = np.asarray(cell)
+    counts = np.bincount(cell, minlength=n_cells)
+    cap = next_bucket(int(counts.max()), lo=_MIN_CAPACITY)
+    if shard_cap is not None:
+        if shard_cap < counts.max():
+            raise ValueError(
+                f"shard_cap={shard_cap} < largest cell ({int(counts.max())})")
+        cap = shard_cap
+    order = np.argsort(cell, kind="stable")      # groups cells, keeps
+    #                                              ascending ids per cell
+    start = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    ranks = np.arange(count) - start[cell[order]]
+    fine = np.zeros((n_cells, cap, d), cn.dtype)
+    fine_ids = np.full((n_cells, cap), -1, np.int32)
+    fine_mask = np.zeros((n_cells, cap), bool)
+    fine[cell[order], ranks] = cn[order]
+    fine_ids[cell[order], ranks] = order.astype(np.int32)
+    fine_mask[cell[order], ranks] = True
+    return HierIndex(coarse=jnp.asarray(coarse),
+                     coarse_mask=jnp.ones((n_cells,), bool),
+                     fine=jnp.asarray(fine), fine_ids=jnp.asarray(fine_ids),
+                     fine_mask=jnp.asarray(fine_mask),
+                     n_cells=n_cells, shard_cap=cap)
 
 
 def next_bucket(n: int, lo: int = _MIN_CAPACITY, hi: int | None = None) -> int:
@@ -91,6 +175,11 @@ class ModelSnapshot:
     cap_est: int | None = None       # adaptive-cap estimator at publish time
     cap_trace: tuple[int, ...] | None = None  # per-epoch OCCStats.cap of the
     #                                           pass that produced this version
+    hier: HierIndex | None = None    # optional two-level routing layout,
+    #                                  built at publish time (build_hier);
+    #                                  None on flat-only snapshots — the flat
+    #                                  buffers above are authoritative either
+    #                                  way (hier is an access path, not data)
 
     @property
     def k(self) -> int:
@@ -129,11 +218,17 @@ def freeze_snapshot(pool: CenterPool, version: int, *, n_seen: int = 0,
                     epochs: int = 0, objective: float | None = None,
                     max_capacity: int | None = None,
                     cap_est: int | None = None,
-                    cap_trace: tuple[int, ...] | None = None) -> ModelSnapshot:
+                    cap_trace: tuple[int, ...] | None = None,
+                    hier_spec: tuple[int | None, int | None] | None = None,
+                    ) -> ModelSnapshot:
     """Freeze a CenterPool into an immutable, capacity-bucketed snapshot.
 
     One host sync (count/overflow scalars) per publish; the center slice is
-    a fresh device array the trainer never touches again.
+    a fresh device array the trainer never touches again.  `hier_spec`
+    (n_cells, shard_cap — either may be None for the defaults) additionally
+    builds the two-level `HierIndex` over the same prefix; the flat buffers
+    are identical either way, so `materialize()` stays bit-identical to a
+    flat-only publish and `hier` is pure added access path.
     """
     count = int(pool.count)
     k_max = pool.centers.shape[0]
@@ -145,11 +240,15 @@ def freeze_snapshot(pool: CenterPool, version: int, *, n_seen: int = 0,
             f"max_capacity={max_capacity} cannot hold {count} live centers")
     centers = jnp.asarray(pool.centers[:cap])
     mask = jnp.arange(cap) < count
+    hier = None
+    if hier_spec is not None:
+        hier = build_hier(centers, mask, count,
+                          n_cells=hier_spec[0], shard_cap=hier_spec[1])
     return ModelSnapshot(version=version, centers=centers, mask=mask,
                          count=count, capacity=cap, n_seen=n_seen,
                          epochs=epochs, overflow=bool(pool.overflow),
                          objective=objective, cap_est=cap_est,
-                         cap_trace=cap_trace)
+                         cap_trace=cap_trace, hier=hier)
 
 
 # ---------------------------------------------------------------------------
@@ -241,20 +340,28 @@ class DeltaSnapshot:
     cap_trace: tuple[int, ...] | None
     _log: CenterLog
     _dense: ModelSnapshot | None = None
+    hier_spec: tuple[int | None, int | None] | None = None
 
     def materialize(self) -> ModelSnapshot:
         """Dense, capacity-bucketed buffers — bit-identical to the eager
         `freeze_snapshot` copy of the same pool (a benign race may build
-        the cache twice; both builds are equal by construction)."""
+        the cache twice; both builds are equal by construction).  A
+        configured `hier_spec` builds the HierIndex here — deferred like
+        the dense buffers, paid once per materialized version."""
         if self._dense is None:
             centers = self._log.dense(self.count, self.capacity)
             mask = jnp.arange(self.capacity) < self.count
+            hier = None
+            if self.hier_spec is not None:
+                hier = build_hier(centers, mask, self.count,
+                                  n_cells=self.hier_spec[0],
+                                  shard_cap=self.hier_spec[1])
             self._dense = ModelSnapshot(
                 version=self.version, centers=centers, mask=mask,
                 count=self.count, capacity=self.capacity, n_seen=self.n_seen,
                 epochs=self.epochs, overflow=self.overflow,
                 objective=self.objective, cap_est=self.cap_est,
-                cap_trace=self.cap_trace)
+                cap_trace=self.cap_trace, hier=hier)
         return self._dense
 
 
@@ -275,10 +382,21 @@ class SnapshotStore:
     and always retrievable by followers via `apply_delta` on their side.
     The delta log retains at most K_max rows total regardless of ring
     eviction (append-only ⇒ bounded by the pool capacity).
+
+    `hier=True` (optionally with `hier_cells` / `hier_shard_cap`) builds a
+    two-level `HierIndex` (DESIGN.md §16) on every published version —
+    eagerly at publish for eager stores, at first materialize for delta
+    stores.  The flat buffers are byte-identical with or without it; the
+    index only adds the multi-probe access path `ClusterService(probes=p)`
+    serves from.  The hier config is LOCAL store policy, not wire state: a
+    follower decides for itself whether its replicas carry the index.
     """
     capacity: int = 16
     max_model_capacity: int | None = None
     delta: bool = False
+    hier: bool = False
+    hier_cells: int | None = None
+    hier_shard_cap: int | None = None
     model: str | None = None            # wire tag for emitted deltas
     wire: Any = None                    # optional .send(CenterDelta) channel
     _ring: "OrderedDict[int, Any]" = field(default_factory=OrderedDict)
@@ -303,7 +421,8 @@ class SnapshotStore:
                 snap = freeze_snapshot(
                     pool, self._next_version, n_seen=n_seen, epochs=epochs,
                     objective=objective, cap_est=cap_est, cap_trace=cap_trace,
-                    max_capacity=self.max_model_capacity)
+                    max_capacity=self.max_model_capacity,
+                    hier_spec=self._hier_spec())
                 self._next_version += 1
                 self._register(snap)
                 return snap
@@ -362,12 +481,18 @@ class SnapshotStore:
             self.wire.send(delta)
         return snap
 
+    def _hier_spec(self) -> tuple[int | None, int | None] | None:
+        if not self.hier:
+            return None
+        return (self.hier_cells, self.hier_shard_cap)
+
     def _snapshot_from_delta(self, delta: CenterDelta):
         return DeltaSnapshot(
             version=delta.version, count=delta.count, capacity=delta.capacity,
             n_seen=delta.n_seen, epochs=delta.epochs,
             overflow=delta.overflow, objective=delta.objective,
-            cap_est=delta.cap_est, cap_trace=delta.cap_trace, _log=self._log)
+            cap_est=delta.cap_est, cap_trace=delta.cap_trace, _log=self._log,
+            hier_spec=self._hier_spec())
 
     def _register(self, snap) -> None:
         self._ring[snap.version] = snap

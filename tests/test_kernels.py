@@ -250,3 +250,268 @@ def test_serve_topk_active_prefix_immune_to_garbage_slots(rng):
     assert (np.asarray(idx_poi[:, count:]) == -1).all()   # clean k>count tail
     assert np.isinf(np.asarray(d2_poi[:, count:])).all()
     assert np.isfinite(np.asarray(d2_poi[:, :count])).all()
+
+
+# ------------------------------------------- streaming top-k (DESIGN.md §16)
+#
+# Parity tiers, per the §16 precision note: for f32 inputs the streamed
+# merge is candidate-multiset-invariant, and at MXU-aligned shapes (D a
+# lane multiple, K a block multiple) XLA CPU reproduces the tile matmuls
+# bitwise against the flat one — so aligned shapes assert BITWISE equality
+# of (d2, idx) across ref/emulate/interpret.  At deliberately awkward
+# shapes (D=19, K=300) the last-ulp of the d2 reduction may differ between
+# tilings, so ragged sweeps assert idx exactly + d2 to 1e-5 — while
+# emulate vs interpret stays bitwise EVERYWHERE (identical op sequence).
+
+from repro.kernels.topk_stream import (
+    topk_stream_emulate, topk_tile_loads, topk_multiprobe_emulate,
+)
+from repro.serving.snapshot import build_hier
+
+
+@pytest.mark.parametrize("n,kc,d,count,k", [
+    (17, 20, 5, 13, 4),      # ragged everything
+    (37, 300, 19, 211, 7),   # many tiles, awkward D
+    (9, 20, 6, 5, 8),        # k > count: padded tail
+    (20, 37, 6, 0, 3),       # empty pool
+    (33, 130, 8, 130, 5),    # count == K, all tiles active
+])
+def test_topk_stream_ragged_parity(rng, n, kc, d, count, k):
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(kc, d)).astype(np.float32))
+    m = jnp.asarray(np.arange(kc) < count)
+    cnt = jnp.asarray(count, jnp.int32)
+    d2r, ir = ops.serve_topk(x, c, k, mask=m, count=cnt, backend="ref")
+    d2p, ip = ops.serve_topk(x, c, k, mask=m, count=cnt, backend="pallas",
+                             block_n=16, block_k=8)
+    d2e, ie = ops.serve_topk(x, c, k, mask=m, count=cnt, backend="emulate",
+                             block_n=16, block_k=8)
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(d2p), np.asarray(d2r), atol=1e-5)
+    # emulate replays the kernel schedule op for op: bitwise vs interpret
+    np.testing.assert_array_equal(np.asarray(d2e), np.asarray(d2p))
+    np.testing.assert_array_equal(np.asarray(ie), np.asarray(ip))
+
+
+def test_topk_stream_bitwise_at_aligned_shapes(rng):
+    """MXU-aligned serving shapes: all three backends bit-identical in
+    BOTH distances and indices, ragged active prefix included."""
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(512, 64)).astype(np.float32))
+    count = 387
+    m = jnp.asarray(np.arange(512) < count)
+    cnt = jnp.asarray(count, jnp.int32)
+    d2r, ir = ops.serve_topk(x, c, 8, mask=m, count=cnt, backend="ref")
+    d2e, ie = ops.serve_topk(x, c, 8, mask=m, count=cnt, backend="emulate")
+    d2p, ip = ops.serve_topk(x, c, 8, mask=m, count=cnt, backend="pallas",
+                             block_n=32, block_k=128)
+    np.testing.assert_array_equal(np.asarray(d2e), np.asarray(d2r))
+    np.testing.assert_array_equal(np.asarray(ie), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(d2p), np.asarray(d2r))
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+
+
+def test_topk_top1_column_equals_serve_assign(rng):
+    """topk[:, :1] == serve_assign on each backend — same algebra, same
+    lower-index tie order (the contract layered services rely on)."""
+    x = jnp.asarray(rng.normal(size=(31, 16)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+    cnt = jnp.asarray(41, jnp.int32)
+    m = jnp.asarray(np.arange(64) < 41)
+    for backend in ("ref", "emulate", "pallas"):
+        kw = {} if backend == "ref" else {"block_n": 16, "block_k": 8}
+        d2k, ik = ops.serve_topk(x, c, 3, mask=m, count=cnt,
+                                 backend=backend, **kw)
+        d2a, ia = ops.serve_assign(x, c, m, count=cnt, backend=backend,
+                                   **kw)
+        np.testing.assert_array_equal(np.asarray(ik[:, 0]), np.asarray(ia))
+
+
+def test_topk_static_count_slicing_bitwise(rng):
+    """A HOST-int count lets CPU backends slice to the pow2 active prefix
+    pre-matmul; the result must be bitwise what the traced-count full-
+    width dispatch produces (a prefix slice changes no surviving lane)."""
+    x = jnp.asarray(rng.normal(size=(16, 16)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(1024, 16)).astype(np.float32))
+    count = 53                                # pow2 pad -> 64 of 1024
+    m = jnp.asarray(np.arange(1024) < count)
+    for backend in ("ref", "emulate"):
+        d2s, is_ = ops.serve_topk(x, c, 6, mask=m, count=count,
+                                  backend=backend)
+        d2t, it = ops.serve_topk(x, c, 6, mask=m,
+                                 count=jnp.asarray(count, jnp.int32),
+                                 backend=backend)
+        np.testing.assert_array_equal(np.asarray(d2s), np.asarray(d2t))
+        np.testing.assert_array_equal(np.asarray(is_), np.asarray(it))
+
+
+@pytest.mark.parametrize("count", [0, 1, 5, 64, 130, 300, 512])
+def test_topk_tile_loads_accounting(rng, count):
+    """Emulate-mode DMA accounting == the host-side index-map walk, and
+    tiles beyond the active prefix issue ZERO loads (the dpmeans_assign
+    assertion style, applied to the top-k schedule)."""
+    kc, bk = 512, 128
+    x = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(kc, 16)).astype(np.float32))
+    m = jnp.asarray(np.arange(kc) < count)
+    d2, idx, loads = topk_stream_emulate(
+        x, c, m, 4, count=jnp.asarray(count, jnp.int32), block_k=bk,
+        with_loads=True)
+    walk = topk_tile_loads(count, kc, block_k=bk)
+    assert int(loads) == walk
+    assert walk == max(1, -(-count // bk))    # active tiles only
+    assert walk <= kc // bk                   # never the full-K sweep
+
+
+def test_topk_k_exceeds_capacity_padded_columns(rng):
+    """k > buffer capacity: overflow columns are (inf, -1) on every
+    backend, real columns untouched."""
+    x = jnp.asarray(rng.normal(size=(7, 5)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(12, 5)).astype(np.float32))
+    cnt = jnp.asarray(12, jnp.int32)
+    for backend in ("ref", "emulate", "pallas"):
+        kw = {} if backend == "ref" else {"block_n": 8, "block_k": 8}
+        d2, idx = ops.serve_topk(x, c, 20, count=cnt, backend=backend, **kw)
+        assert d2.shape == (7, 20)
+        assert (np.asarray(idx[:, 12:]) == -1).all()
+        assert np.isinf(np.asarray(d2[:, 12:])).all()
+        assert (np.asarray(idx[:, :12]) >= 0).all()
+
+
+def test_topk_duplicate_distance_tiebreak_determinism(rng):
+    """Duplicated center rows force exact distance ties; every backend
+    must break them identically — ascending index within each tie run
+    (lax.top_k's order, pinned by the lexicographic (d2, id) merge)."""
+    base = rng.normal(size=(8, 6)).astype(np.float32)
+    c = jnp.asarray(np.repeat(base, 3, axis=0))        # rows 3i,3i+1,3i+2 equal
+    x = jnp.asarray(rng.normal(size=(11, 6)).astype(np.float32))
+    cnt = jnp.asarray(24, jnp.int32)
+    outs = {}
+    for backend in ("ref", "emulate", "pallas"):
+        kw = {} if backend == "ref" else {"block_n": 8, "block_k": 8}
+        d2, idx = ops.serve_topk(x, c, 6, count=cnt, backend=backend, **kw)
+        outs[backend] = (np.asarray(d2), np.asarray(idx))
+    for b in ("emulate", "pallas"):
+        np.testing.assert_array_equal(outs[b][1], outs["ref"][1])
+        np.testing.assert_array_equal(outs[b][0], outs["ref"][0])
+    d2, idx = outs["ref"]
+    for r in range(11):
+        for j in range(1, 6):
+            if d2[r, j] == d2[r, j - 1]:               # exact tie
+                assert idx[r, j] > idx[r, j - 1]       # ascending ids
+        # duplicates: each triple's members surface lowest-index first
+        assert idx[r, 0] % 3 == 0                      # nearest triple's row 3i
+
+
+def test_topk_multiprobe_full_union_bitwise_flat(rng):
+    """p = all at the ops level: union covering every cell + all-true
+    membership is bit-identical to flat serve_topk on every backend —
+    garbage in padded shard slots included."""
+    kc, d, count = 512, 64, 437
+    cn = rng.normal(size=(kc, d)).astype(np.float32)
+    cn[count:] = np.nan
+    m = jnp.asarray(np.arange(kc) < count)
+    h = build_hier(jnp.asarray(np.nan_to_num(cn)), m, count)
+    x = jnp.asarray(rng.normal(size=(32, d)).astype(np.float32))
+    cells = jnp.arange(h.n_cells, dtype=jnp.int32)
+    member = jnp.ones((32, h.n_cells), bool)
+    d2f, if_ = ops.serve_topk(x, jnp.asarray(np.nan_to_num(cn)), 9, mask=m,
+                              count=jnp.asarray(count, jnp.int32),
+                              backend="ref")
+    for backend in ("ref", "emulate", "pallas"):
+        d2m, im = ops.serve_topk_multiprobe(
+            x, h.fine, h.fine_ids, h.fine_mask, cells, member, 9,
+            u_count=jnp.asarray(h.n_cells, jnp.int32), backend=backend)
+        np.testing.assert_array_equal(np.asarray(d2m), np.asarray(d2f))
+        np.testing.assert_array_equal(np.asarray(im), np.asarray(if_))
+
+
+def test_topk_multiprobe_partial_union_matches_candidate_oracle(rng):
+    """Partial probes: backends agree on indices exactly (distances to f32
+    tolerance — the gathered widths here are deliberately unaligned, §16
+    precision note) AND match a brute-force numpy top-k over exactly the
+    probed candidate set."""
+    kc, d, count = 256, 16, 201
+    cn = rng.normal(size=(kc, d)).astype(np.float32)
+    m = jnp.asarray(np.arange(kc) < count)
+    h = build_hier(jnp.asarray(cn), m, count)
+    b, k = 9, 5
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    probed = np.sort(rng.choice(h.n_cells, size=3, replace=False))
+    cells = np.full((h.n_cells,), -1, np.int32)
+    cells[:3] = probed
+    member = np.zeros((b, h.n_cells), bool)
+    member[:, :3] = rng.uniform(size=(b, 3)) > 0.3
+    outs = {}
+    for backend in ("ref", "emulate", "pallas"):
+        outs[backend] = ops.serve_topk_multiprobe(
+            x, h.fine, h.fine_ids, h.fine_mask, jnp.asarray(cells),
+            jnp.asarray(member), k, u_count=jnp.asarray(3, jnp.int32),
+            backend=backend)
+    for bk_ in ("emulate", "pallas"):
+        np.testing.assert_array_equal(np.asarray(outs[bk_][1]),
+                                      np.asarray(outs["ref"][1]))
+        np.testing.assert_allclose(np.asarray(outs[bk_][0]),
+                                   np.asarray(outs["ref"][0]), atol=1e-5)
+    # brute force over the candidate multiset
+    ids = np.asarray(h.fine_ids)
+    msk = np.asarray(h.fine_mask)
+    d2o, io_ = np.asarray(outs["ref"][0]), np.asarray(outs["ref"][1])
+    for q in range(b):
+        cand = [int(i) for u in range(3) if member[q, u]
+                for i in ids[probed[u]][msk[probed[u]]]]
+        dd = np.sort([float(np.sum((x[q] - cn[i]) ** 2)) for i in cand])
+        got = io_[q][io_[q] >= 0]
+        assert len(got) == min(k, len(cand))
+        np.testing.assert_allclose(np.sort(d2o[q][np.isfinite(d2o[q])]),
+                                   dd[:len(got)], atol=1e-4)
+        assert set(got) <= set(cand)
+
+
+# ------------------------------------ hypothesis layer (streaming top-k)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_hypothesis_topk_stream_parity(data):
+        """Any (n, K, count, k, duplicate run): ref and emulate agree on
+        indices exactly, distances to f32 tolerance, tails are (inf, -1),
+        and rows are lexicographically (d2, idx) ascending."""
+        n = data.draw(st.integers(1, 40), label="n")
+        kc = data.draw(st.integers(1, 200), label="K")
+        count = data.draw(st.integers(0, kc), label="count")
+        k = data.draw(st.integers(1, 12), label="k")
+        dup = data.draw(st.booleans(), label="dup")
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31),
+                                              label="seed"))
+        c = rng.normal(size=(kc, 8)).astype(np.float32)
+        if dup and kc >= 2:
+            c[1::2] = c[0::2][: c[1::2].shape[0]]      # force exact ties
+        x = jnp.asarray(rng.normal(size=(n, 8)).astype(np.float32))
+        m = jnp.asarray(np.arange(kc) < count)
+        cnt = jnp.asarray(count, jnp.int32)
+        d2r, ir = ops.serve_topk(x, jnp.asarray(c), k, mask=m, count=cnt,
+                                 backend="ref")
+        d2e, ie = ops.serve_topk(x, jnp.asarray(c), k, mask=m, count=cnt,
+                                 backend="emulate", block_n=16, block_k=8)
+        np.testing.assert_array_equal(np.asarray(ie), np.asarray(ir))
+        np.testing.assert_allclose(np.asarray(d2e), np.asarray(d2r),
+                                   atol=1e-5)
+        d2, idx = np.asarray(d2r), np.asarray(ir)
+        valid = idx >= 0
+        assert (valid.sum(1) == min(k, count)).all()
+        assert np.isinf(d2[~valid]).all()
+        for r in range(n):                     # lexicographic ascending
+            row_d, row_i = d2[r][valid[r]], idx[r][valid[r]]
+            assert (np.diff(row_d) >= 0).all()
+            same = np.diff(row_d) == 0
+            assert (np.diff(row_i)[same] > 0).all()
+else:  # pragma: no cover - exercised only without hypothesis
+    def test_hypothesis_topk_layer_skipped():
+        pytest.skip("hypothesis not installed; deterministic layer still ran")

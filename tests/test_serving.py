@@ -304,3 +304,138 @@ if HAVE_HYPOTHESIS:
 else:  # pragma: no cover - exercised only without hypothesis
     def test_hypothesis_layer_skipped():
         pytest.skip("hypothesis not installed; deterministic layer still ran")
+
+
+# ------------------------------- hierarchical layout + multi-probe (§16)
+
+def _hier_store(x, pb=64, k_max=128, batches=((0, 300), (300, 768)),
+                lam=1.0, **hier_kw):
+    # lam=1.0 grows the pool to ~128 centers (16 coarse cells) — enough
+    # cells that a small probe width actually prunes; LAM=4 yields 4
+    # centers / 2 cells, where probes >= n_cells degenerates to flat.
+    store = SnapshotStore(capacity=64, hier=True, **hier_kw)
+    eng = OCCEngine(DPMeansTransaction(lam, k_max=k_max), pb=pb,
+                    publish=store.publish_pass)
+    for lo, hi in batches:
+        eng.partial_fit(x[lo:hi])
+    eng.flush()
+    return store, eng
+
+
+def test_hier_build_invariants_and_flat_bit_identity():
+    """The hierarchical layout is a pure access-path permutation: fine
+    shards partition the active prefix [0, count) exactly once, every
+    shard row is a bit-copy of its flat row, and the snapshot's FLAT
+    buffers are bit-identical to a hier=False publish of the same pool."""
+    x = _stream()
+    store_h, eng = _hier_store(x)
+    store_f = SnapshotStore(capacity=64)
+    store_f.publish_pool(eng.pool)
+    sh, sf = store_h.latest(), store_f.latest()
+    np.testing.assert_array_equal(np.asarray(sh.centers),
+                                  np.asarray(sf.centers))
+    np.testing.assert_array_equal(np.asarray(sh.mask), np.asarray(sf.mask))
+    h = sh.hier
+    assert h is not None and sf.hier is None
+    count = int(sh.count)
+    assert h.n_cells & (h.n_cells - 1) == 0 and h.n_cells <= count
+    assert h.shard_cap & (h.shard_cap - 1) == 0
+    ids, msk = np.asarray(h.fine_ids), np.asarray(h.fine_mask)
+    np.testing.assert_array_equal(np.sort(ids[msk]), np.arange(count))
+    assert (ids[~msk] == -1).all()
+    fine, flat = np.asarray(h.fine), np.asarray(sh.centers)
+    r, c = np.nonzero(msk)
+    np.testing.assert_array_equal(fine[r, c], flat[ids[r, c]])
+    assert (fine[~msk] == 0).all()
+    # coarse rows are bit-copies of active-prefix centers
+    assert np.asarray(h.coarse_mask).all()
+    coarse = np.asarray(h.coarse)
+    assert all((coarse[i] == flat[:count]).all(1).any()
+               for i in range(h.n_cells))
+
+
+def test_hier_delta_store_materializes_same_layout():
+    """Delta-mode stores build the hier at first materialize; the layout
+    must equal the eager store's bit for bit (same builder, same prefix)."""
+    x = _stream()
+    store_h, eng = _hier_store(x)
+    store_d = SnapshotStore(capacity=64, hier=True, delta=True)
+    store_d.publish_pool(eng.pool)
+    he = store_h.latest().hier
+    hd = store_d.latest().materialize().hier if hasattr(
+        store_d.latest(), "materialize") else store_d.latest().hier
+    assert hd is not None
+    np.testing.assert_array_equal(np.asarray(hd.fine_ids),
+                                  np.asarray(he.fine_ids))
+    np.testing.assert_array_equal(np.asarray(hd.fine), np.asarray(he.fine))
+    np.testing.assert_array_equal(np.asarray(hd.coarse),
+                                  np.asarray(he.coarse))
+
+
+def test_service_multiprobe_p_all_bit_identical_to_flat():
+    """The exactness contract: probes >= n_cells routes the FLAT step, so
+    responses are bit-identical to a probes=None service — and a hier
+    store serves plain flat queries unchanged."""
+    x = _stream()
+    store, _ = _hier_store(x)
+    n_cells = store.latest().hier.n_cells
+    flat = ClusterService(store, backend="ref", audit_log=True)
+    pall = ClusterService(store, backend="ref", probes=n_cells,
+                          audit_log=True)
+    q = np.asarray(x[100:137])
+    r_f, r_a = flat.topk(q, k=7), pall.topk(q, k=7)
+    np.testing.assert_array_equal(r_f.labels, r_a.labels)
+    np.testing.assert_array_equal(r_f.scores, r_a.scores)
+    assert pall.audit[-1].probes == 0        # flat dispatch, by construction
+    assert pall.metrics()["n_topk_multiprobe"] == 0
+
+
+def test_service_multiprobe_counters_recall_and_audit_record():
+    x = _stream()
+    store, _ = _hier_store(x)
+    h = store.latest().hier
+    svc = ClusterService(store, backend="ref", probes=2,
+                         recall_audit_every=2, audit_log=True)
+    q = np.asarray(x[:40])
+    for _ in range(4):
+        resp = svc.topk(q, k=5)
+    met = svc.metrics()
+    assert met["n_topk_multiprobe"] == 4
+    assert met["topk_probes"] == 2
+    assert 0 < met["topk_shards_probed"] <= 4 * h.n_cells
+    assert met["topk_tiles_skipped"] == 4 * h.n_cells - met["topk_shards_probed"]
+    assert met["topk_recall_audits"] == 2    # every 2nd of 4 dispatches
+    assert 0.0 < met["topk_recall"] <= 1.0
+    assert svc.audit[-1].probes == 2
+    # responses stay well-formed: valid ids in [0, count), ascending d2
+    labels, scores = resp.labels, resp.scores
+    assert ((labels >= -1) & (labels < int(store.latest().count))).all()
+    valid = labels >= 0
+    assert np.isfinite(scores[valid]).all()
+
+
+def test_service_multiprobe_backend_parity_and_no_retrace():
+    """ref and emulate services agree through the full multi-probe path
+    (indices exactly, distances to f32 tolerance), and a version hot-swap
+    does not retrace the warm multi-probe step."""
+    x = _stream()
+    store, eng = _hier_store(x)
+    q = np.asarray(x[200:232])
+    svc_r = ClusterService(store, backend="ref", probes=2)
+    svc_e = ClusterService(store, backend="emulate", probes=2)
+    r_r, r_e = svc_r.topk(q, k=6), svc_e.topk(q, k=6)
+    np.testing.assert_array_equal(r_r.labels, r_e.labels)
+    np.testing.assert_allclose(r_r.scores, r_e.scores, atol=1e-5)
+    traces0 = cs_mod._QUERY_TRACES
+    store.publish_pool(eng.pool)             # new version, same buckets
+    r2 = svc_r.topk(q, k=6)
+    assert cs_mod._QUERY_TRACES == traces0   # warm cache across versions
+    assert r2.version > r_r.version
+
+
+def test_service_probes_requires_hier_snapshot():
+    x = _stream()
+    store, _ = _trained_store(x)             # hier=False store
+    svc = ClusterService(store, backend="ref", probes=2)
+    with pytest.raises(RuntimeError, match="hier"):
+        svc.topk(np.asarray(x[:8]), k=3)
