@@ -8,6 +8,10 @@ Measures the latency-critical paths at --quick sizes:
     `ClusterService.score` with warm jit caches (the serving hot path);
   * ``serve_topk_us`` — warm `ClusterService.topk` microbatch latency (the
     §16 retrieval-serving hot path: streaming top-k dispatch);
+  * ``serve_qos_p99_us`` — interactive p99 through the coalescing admission
+    queue while an analytics scan sits parked in its own lane (the §17
+    mixed-traffic hot path: priority lanes must keep the interactive
+    deadline timer independent of the parked scan);
   * ``transport_commit_us`` — median publish→all-followers-acked latency
     over loopback sockets (the §13 replication barrier hot path);
   * ``recovery_replay_us`` — full `recover_wal` wall time (checkpoint
@@ -48,11 +52,13 @@ import jax.numpy as jnp
 import numpy as np
 
 KEY_METRICS = ("validator_pass_us", "service_p99_ms", "serve_topk_us",
-               "transport_commit_us", "recovery_replay_us")
+               "serve_qos_p99_us", "transport_commit_us",
+               "recovery_replay_us")
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "baselines", "BENCH_regress_quick.json")
 SIZES = dict(n=1024, dim=16, pb=64, k_max=256, lam=4.0,
              n_requests=200, request=17, trials=7,
+             qos_requests=40, qos_trials=3, qos_deadline_ms=3.0,
              repl_followers=2, repl_versions=16, repl_trials=3,
              wal_versions=30, wal_dk=4, wal_ckpt_every=8, wal_trials=3)
 
@@ -138,6 +144,35 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
                 if inject:
                     time.sleep(inject)   # inside the timed block
     serve_topk_us = m.get_histogram("bench_serve_topk_s").min / 20 * 1e6
+
+    # --- QoS mixed traffic: interactive p99 behind a parked scan (§17) ---
+    import threading
+    from repro.serving import Query, ServeConfig
+    qsvc = ClusterService(
+        store, ServeConfig(coalesce=True, coalesce_bucket=64,
+                           coalesce_delay_ms=s["qos_deadline_ms"]), obs=obs)
+    qi = q[:5]
+    qsvc.score(qi)                   # warm the coalesced dispatch shapes
+    qsvc.topk(q, k=8)
+    park = threading.Thread(target=lambda: qsvc.submit(
+        Query(q, kind="topk", k=8, priority="analytics",
+              deadline_ms=120_000.0, max_staleness=2)))
+    park.start()
+    while qsvc.queue_depth_rows() < s["request"]:
+        pass                         # the scan is parked in its own lane
+    qp99s = []
+    for t in range(s["qos_trials"]):
+        for _ in range(s["qos_requests"]):
+            with m.timer("bench_serve_qos_s", trial=t):
+                qsvc.score(qi)
+                if inject:
+                    time.sleep(inject)
+        qp99s.append(m.get_histogram("bench_serve_qos_s",
+                                     trial=t).percentile(99))
+    serve_qos_p99_us = min(qp99s) * 1e6
+    qsvc.close()                     # flushes the parked scan (never drops)
+    park.join(timeout=10)
+
     # --- replication commit: publish → all followers acked ---------------
     from benchmarks.transport import measure_commit
     transport_commit_us = min(
@@ -160,6 +195,7 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
         "service_p50_ms": float(min(p50s) * 1e3),
         "service_p99_ms": float(min(p99s) * 1e3),
         "serve_topk_us": serve_topk_us,
+        "serve_qos_p99_us": serve_qos_p99_us,
         "transport_commit_us": transport_commit_us,
         "recovery_replay_us": recovery_replay_us,
     }
@@ -175,6 +211,8 @@ def measure(inject_sleep_ms: float = 0.0) -> dict:
             "engine_pass_s": _hist_summary(obs, "engine_pass_s"),
             "serve_request_s": _hist_summary(obs, "serve_request_s",
                                              model=""),
+            "serve_queue_wait_s": _hist_summary(obs, "serve_queue_wait_s",
+                                                model=""),
             "transport_ack_rtt_s": _hist_summary(obs, "transport_ack_rtt_s"),
             "wal_append_s": _hist_summary(obs, "wal_append_s"),
             "wal_recover_s": _hist_summary(obs, "wal_recover_s"),

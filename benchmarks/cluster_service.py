@@ -7,6 +7,9 @@ Three measurements:
   * admission-queue coalescing: a burst of small concurrent requests
     through a coalescing service vs the same burst solo — bucket-fill
     ratio and requests per dispatched group;
+  * mixed-traffic QoS (§17): interactive latency while an analytics scan
+    sits parked on a long deadline — priority lanes vs the FIFO baseline
+    under the same offered load (the head-of-line-blocking A/B);
   * the end-to-end multi-model train-while-serve demo
     (launch/serve_clusters.run_demo): concurrent trainers + coalescing
     load generator with the full zero-stale-read / bit-parity /
@@ -94,6 +97,46 @@ def _coalescing_rows(x, store, n_clients: int, reqs_per_client: int,
         f"deadline_flushes={m['n_deadline_flushes']}")]
 
 
+def _qos_rows(x, store, n_interactive: int = 80, deadline_ms: float = 3.0,
+              scan_deadline_ms: float = 400.0):
+    """Adversarial mix, lanes vs FIFO: one analytics top-k scan parked on
+    a long deadline while an interactive stream runs.  With priority
+    lanes the interactive group flushes on its OWN timer; the FIFO
+    baseline holds every flush behind the parked head until its deadline
+    expires — the p99 gap IS the head-of-line blocking."""
+    from repro.serving import Query, ServeConfig
+    rows = []
+    for label, lanes in (("lanes", True), ("fifo", False)):
+        svc = ClusterService(store, ServeConfig(
+            coalesce=True, coalesce_bucket=64, coalesce_delay_ms=deadline_ms,
+            max_bucket=128, priority_lanes=lanes))
+        svc.score(x[:5])                   # warm the coalesced shapes
+        svc.topk(x[:32], k=8)
+        park = threading.Thread(target=lambda: svc.submit(
+            Query(x[:32], kind="topk", k=8, priority="analytics",
+                  deadline_ms=scan_deadline_ms, max_staleness=2)))
+        park.start()
+        while svc.queue_depth_rows() < 32:
+            pass                           # scan admitted and parked
+        lat = []
+        for _ in range(n_interactive):
+            t0 = time.perf_counter()
+            svc.score(x[:5])
+            lat.append(time.perf_counter() - t0)
+        m = svc.metrics()
+        svc.close()
+        park.join(timeout=10)
+        lat.sort()
+        p50 = lat[len(lat) // 2]
+        p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+        rows.append((
+            f"cluster_service_qos_{label}", p50 * 1e6,
+            f"p99_ms={p99 * 1e3:.2f};deadline_ms={deadline_ms};"
+            f"scan_deadline_ms={scan_deadline_ms};"
+            f"miss_rate={m['deadline_miss_rate']:.2f}"))
+    return rows
+
+
 def _topk_serving_rows(dim: int, topk_ks, repeats: int, probes: int = 4,
                        bucket: int = 64, k: int = 8):
     """Large-K top-k serving (§16): flat vs hierarchical multi-probe
@@ -152,6 +195,7 @@ def run(n_train: int = 8192, dim: int = 16, buckets=(8, 64, 512, 4096),
     x, store = _warm_store(n_train, dim)
     rows = _steady_state_rows(x, store, buckets, repeats)
     rows += _coalescing_rows(x, store, coalesce_clients, coalesce_reqs)
+    rows += _qos_rows(x, store)
     rows += _topk_serving_rows(dim, topk_ks, repeats)
 
     # demo_queries=0 skips the train-while-serve demo — CI's --quick smoke
@@ -171,6 +215,15 @@ def run(n_train: int = 8192, dim: int = 16, buckets=(8, 64, 512, 4096),
             f"{rec['bucket_fill_solo']:.3f};"
             f"stale_free={rec['zero_stale_reads']};"
             f"parity={rec['serve_train_parity']}"))
+        qab = rec.get("qos_ab")
+        if qab:
+            rows.append((
+                "cluster_service_qos_ab_interactive_p99",
+                qab["qos"]["interactive_p99_ms"] * 1e3,
+                f"fifo_p99_ms={qab['fifo']['interactive_p99_ms']:.2f};"
+                f"speedup={qab['interactive_p99_speedup']:.2f}x;"
+                f"shed={qab['qos']['n_shed']};"
+                f"degraded_replayed={qab['qos']['n_degraded_replayed']}"))
     if not quiet:
         for r in rows:
             print(f"{r[0]},{r[1]:.0f},{r[2]}")

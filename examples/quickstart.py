@@ -50,21 +50,26 @@ def main():
 
     # --- train/serve split: publish snapshots, serve queries --------------
     # Training publishes immutable model versions into a SnapshotStore; a
-    # read-only ClusterService answers batched assign/score/topk queries
-    # against the newest version (pad-to-bucket microbatching, one jitted
-    # dispatch per microbatch, atomic hot-swap).  DESIGN.md §10.
-    from repro.serving import ClusterService, SnapshotStore
+    # read-only ClusterService answers typed queries against the newest
+    # version (pad-to-bucket microbatching, one jitted dispatch per
+    # microbatch, atomic hot-swap).  DESIGN.md §10; the typed surface —
+    # `submit(Query(...))` + every knob in one `ServeConfig` — is §17
+    # (`assign`/`score`/`topk` remain as shims over `submit`).
+    from repro.serving import ClusterService, Query, ServeConfig, SnapshotStore
     store = SnapshotStore()
     eng = OCCEngine(txn, pb=256, publish=store.publish_pass)
     for xs in jnp.split(x, [700, 1500]):      # ragged stream, carry engaged
         eng.partial_fit(xs)
     eng.flush()
-    svc = ClusterService(store)
-    resp = svc.score(x[:100])                 # one microbatch, one dispatch
-    top = svc.topk(x[:5], k=3)
+    svc = ClusterService(store, ServeConfig(max_bucket=1024))
+    resp = svc.submit(Query(x[:100]))         # one microbatch, one dispatch
+    top = svc.submit(Query(x[:5], kind="topk", k=3))
+    scan = svc.submit(Query(x[:32], kind="topk", k=3, priority="analytics",
+                            max_staleness=2))  # sheddable background scan
     print(f"serving:       v{resp.version} answered 100 queries in bucket "
           f"{resp.bucket}, K={store.latest().count}, "
-          f"topk[0]={top.labels[0].tolist()}")
+          f"topk[0]={top.labels[0].tolist()}, "
+          f"analytics scan degraded={scan.degraded}")
     print("streaming: examples/streaming_clusters.py; full train-while-serve"
           " demo: python -m repro.launch.serve_clusters")
 

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DPMeansTransaction, OCCEngine
-from repro.serving import ClusterService, SnapshotStore
+from repro.serving import ClusterService, Query, ServeConfig, SnapshotStore
 
 N_CHUNKS = 110_000          # K >= 1e5 after conflict rejections
 DIM = 16
@@ -83,9 +83,9 @@ def _serve_sweep(x, store, n_queries: int, ps, quiet: bool = False):
     flat_resp = None
     for p in ps:
         probes = h.n_cells if p == "all" else p
-        svc = ClusterService(store, max_bucket=BUCKET, probes=probes,
-                             recall_audit_every=1)
-        resps = [svc.topk(q[lo:lo + BUCKET], k=TOPK)
+        svc = ClusterService(store, ServeConfig(
+            max_bucket=BUCKET, probes=probes, recall_audit_every=1))
+        resps = [svc.submit(Query(q[lo:lo + BUCKET], kind="topk", k=TOPK))
                  for lo in range(0, n_queries, BUCKET)]
         met = svc.metrics()
         labels = np.concatenate([r.labels for r in resps])
@@ -102,11 +102,11 @@ def _serve_sweep(x, store, n_queries: int, ps, quiet: bool = False):
         if p == "all":
             # the exactness contract, audited: p = all responses must be
             # BIT-identical to a probes=None flat service on every row
-            flat = ClusterService(store, max_bucket=BUCKET)
-            fl = np.concatenate([flat.topk(q[lo:lo + BUCKET], k=TOPK).labels
-                                 for lo in range(0, n_queries, BUCKET)])
-            fs = np.concatenate([flat.topk(q[lo:lo + BUCKET], k=TOPK).scores
-                                 for lo in range(0, n_queries, BUCKET)])
+            flat = ClusterService(store, ServeConfig(max_bucket=BUCKET))
+            fq = [flat.submit(Query(q[lo:lo + BUCKET], kind="topk", k=TOPK))
+                  for lo in range(0, n_queries, BUCKET)]
+            fl = np.concatenate([r.labels for r in fq])
+            fs = np.concatenate([r.scores for r in fq])
             row["exact_vs_flat"] = bool(np.array_equal(labels, fl)
                                         and np.array_equal(scores, fs))
             assert row["exact_vs_flat"], "p=all must be bit-identical"

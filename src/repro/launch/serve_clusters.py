@@ -29,7 +29,23 @@ After the run, every response is audited:
   * ≥ 2 models, ≥ `min_versions` hot-swapped through per model,
     ≥ `min_queries` total rows (full mode: 10k).
 
-p50/p99 latency, QPS, and both fill ratios land in
+A second ADVERSARIAL MIXED-TRAFFIC phase (§17) then runs the QoS A/B:
+the same offered load — interactive clients (small `score` queries,
+tight deadlines, `max_staleness=0`) deliberately mixed against
+analytics clients (wide `topk` scans, long deadlines, staleness
+tolerance) — is replayed against a priority-lane service and against
+the legacy FIFO baseline (`priority_lanes=False`), each with a live
+trainer republishing versions underneath.  Audited:
+  * interactive p99 with priority lanes STRICTLY better than FIFO under
+    the same offered load;
+  * overload shedding fired (priority run), and every degraded response
+    replays bit-exactly from its `DispatchRecord` tagged with the stale
+    pinned version + `degraded` flag;
+  * `max_staleness=0` traffic is NEVER degraded and always replays
+    bit-exactly from its tagged version (zero stale reads), with
+    per-client monotone versions on the non-degraded path.
+
+p50/p99 latency, QPS, fill ratios, and the QoS A/B land in
 BENCH_cluster_service.json.
 
   PYTHONPATH=src python -m repro.launch.serve_clusters [--quick]
@@ -37,6 +53,7 @@ BENCH_cluster_service.json.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import threading
 import time
@@ -49,8 +66,10 @@ from repro.core import DPMeansTransaction, OCCEngine
 from repro.core.occ import nearest_center
 from repro.data import dp_stick_breaking_data
 from repro.obs import Obs, Tracer
-from repro.serving import ClusterService, ModelRouter, SnapshotStore
-from repro.serving.cluster_service import _assign_step
+from repro.serving import (
+    ClusterService, ModelRouter, Query, ServeConfig, SnapshotStore,
+)
+from repro.serving.cluster_service import _assign_step, _topk_step
 
 __all__ = ["ServeDemoConfig", "run_demo"]
 
@@ -75,6 +94,21 @@ class ServeDemoConfig:
     coalesce_delay_ms: float = 10.0
     backend: str = "auto"      # service kernel backend
     min_versions: int = 3      # hot-swap floor per model under load
+    # --- adversarial mixed-traffic QoS A/B (§17) ---
+    # Deadlines are sized so the FIFO head-of-line penalty (an analytics
+    # group parked at the head for its WHOLE deadline — 2 clients x 24
+    # rows can never fill the 64-row bucket) dwarfs scheduler/GIL noise
+    # on a small box; the lane scheduler flushes interactive on its own
+    # 10ms timer regardless.
+    qos_n: int = 4096          # stream length for the QoS tenant
+    qos_interactive_clients: int = 6
+    qos_analytics_clients: int = 2
+    qos_interactive_requests: int = 120   # per client, fixed offered trace
+    qos_analytics_requests: int = 25
+    qos_analytics_rows: int = 24          # rows per analytics topk scan
+    qos_interactive_deadline_ms: float = 10.0
+    qos_analytics_deadline_ms: float = 250.0
+    qos_shed_depth: int = 48   # queued rows at which shedding starts
     seed: int = 0
     out_path: str | None = None
     trace_out: str | None = None   # Perfetto JSON of the whole run
@@ -143,6 +177,273 @@ def _make_tenant(name: str, i: int, cfg: ServeDemoConfig,
     return _Tenant(name, x, eng, store, shadow, batches)
 
 
+@dataclass
+class _QosTrace:
+    """One served request of the QoS A/B phase."""
+    lane: str
+    version: int
+    q_lo: int
+    q_hi: int
+    labels: np.ndarray
+    scores: np.ndarray
+    bucket: int
+    group: int
+    offset: int
+    degraded: bool
+    latency_s: float = 0.0
+
+
+def _qos_schedule(cfg: ServeDemoConfig) -> list[tuple[str, list]]:
+    """The offered load, fixed ahead of time: one request list per client,
+    identical for both A/B modes (same sizes, same rows, same order) —
+    'same offered load' is by construction, not by matched RNG draws."""
+    rng = np.random.default_rng(cfg.seed + 4242)
+    sched = []
+    for _ in range(cfg.qos_interactive_clients):
+        sched.append(("interactive",
+                      [(int(rng.integers(1, 9)),
+                        int(rng.integers(0, cfg.qos_n - 8)))
+                       for _ in range(cfg.qos_interactive_requests)]))
+    for _ in range(cfg.qos_analytics_clients):
+        sched.append(("analytics",
+                      [(cfg.qos_analytics_rows,
+                        int(rng.integers(0, cfg.qos_n
+                                         - cfg.qos_analytics_rows)))
+                       for _ in range(cfg.qos_analytics_requests)]))
+    return sched
+
+
+def _replay_step(rec, snap, backend):
+    """Replay one DispatchRecord through the service's own jitted step."""
+    if rec.kind == "topk":
+        d2, idx = _topk_step(snap.centers, snap.mask, np.int32(snap.count),
+                             jnp.asarray(rec.x), np.int32(rec.n_valid),
+                             k=rec.k, backend=backend)
+    else:
+        d2, idx = _assign_step(snap.centers, snap.mask, np.int32(snap.count),
+                               jnp.asarray(rec.x), np.int32(rec.n_valid),
+                               backend=backend)
+    return np.asarray(d2), np.asarray(idx)
+
+
+def _qos_mode(cfg: ServeDemoConfig, obs: Obs, sched,
+              priority_lanes: bool, tag: str | None = None) -> dict:
+    """One arm of the A/B: train-while-serving a single tenant under the
+    fixed adversarial schedule, with (QoS) or without (legacy FIFO) the
+    lane scheduler, then audit every response."""
+    x, _, _ = dp_stick_breaking_data(cfg.qos_n, seed=cfg.seed + 999,
+                                     dim=cfg.dim)
+    x = jnp.asarray(x)
+    store = SnapshotStore(capacity=256)
+    eng = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max),
+                    pb=cfg.pb, validate_cap="adaptive",
+                    publish=store.publish_pass, obs=obs)
+    batches = [x[j:j + cfg.train_batch]
+               for j in range(0, cfg.qos_n, cfg.train_batch)]
+    # Warm the capacity bucket before measuring: publish all but a tail
+    # of batches up front; the tail streams DURING the phase so latest
+    # keeps moving and the shed pin genuinely lags it.
+    tail = max(2, len(batches) // 4)
+    for xb in batches[:-tail]:
+        eng.partial_fit(xb)
+    mode = tag or ("qos" if priority_lanes else "fifo")
+    svc = ClusterService(
+        store,
+        ServeConfig(backend=cfg.backend, min_bucket=8,
+                    max_bucket=max(128, cfg.coalesce_bucket),
+                    coalesce=True, coalesce_bucket=cfg.coalesce_bucket,
+                    coalesce_delay_ms=cfg.qos_interactive_deadline_ms,
+                    audit_log=True, priority_lanes=priority_lanes,
+                    shed_depth=cfg.qos_shed_depth),
+        name=mode, obs=obs)
+    # Warm the jit cache over the request buckets both modes hit, so
+    # first-dispatch compiles land in neither mode's percentiles.
+    for b in (8, 32, 64):
+        svc.score(x[:b])
+        svc.topk(x[:b], k=8)
+    warm_gid = svc._next_group
+
+    traces: list[list[_QosTrace]] = [[] for _ in sched]
+
+    def client(ci: int, lane: str, reqs):
+        mine = traces[ci]
+        for size, lo in reqs:
+            if lane == "interactive":
+                q = Query(x[lo:lo + size], priority="interactive",
+                          deadline_ms=cfg.qos_interactive_deadline_ms,
+                          max_staleness=0)
+            else:
+                q = Query(x[lo:lo + size], kind="topk", k=8,
+                          priority="analytics",
+                          deadline_ms=cfg.qos_analytics_deadline_ms,
+                          max_staleness=3)
+            t0 = time.perf_counter()
+            resp = svc.submit(q)
+            dt = time.perf_counter() - t0
+            mine.append(_QosTrace(lane, resp.version, lo, lo + size,
+                                  resp.labels, resp.scores, resp.bucket,
+                                  resp.group, resp.offset, resp.degraded,
+                                  dt))
+
+    def trainer():
+        for xb in batches[-tail:]:
+            seen = svc.n_microbatches
+            eng.partial_fit(xb)
+            deadline = time.perf_counter() + 5.0
+            while (svc.n_microbatches < seen + 2
+                   and time.perf_counter() < deadline):
+                time.sleep(0.001)
+        eng.flush()
+
+    threads = [threading.Thread(target=client, args=(ci, lane, reqs),
+                                daemon=True)
+               for ci, (lane, reqs) in enumerate(sched)]
+    threads.append(threading.Thread(target=trainer, daemon=True))
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    svc.close()
+
+    # ------------------------------------------------------------- audits
+    all_t = [t for ts in traces for t in ts]
+    ints = [t for t in all_t if t.lane == "interactive"]
+    assert all(not t.degraded for t in ints), \
+        "max_staleness=0 interactive traffic must never be degraded"
+    for ts in traces:
+        last = -1       # per-client monotone versions, non-degraded path
+        for t in ts:    # (a shed pin may legitimately lag latest)
+            if t.degraded:
+                continue
+            assert t.version >= last, \
+                "stale read: version went backwards for a client"
+            last = t.version
+    # Zero stale reads: every coalesced response replays bit-exactly from
+    # its tagged version through the service's own jitted step.
+    by_group: dict[int, list[_QosTrace]] = {}
+    for t in all_t:
+        if not t.degraded:
+            assert t.group >= warm_gid, "measured request missed the queue"
+            by_group.setdefault(t.group, []).append(t)
+    n_replayed = 0
+    for rec in svc.audit:
+        if rec.degraded:
+            continue
+        members = by_group.get(rec.group, [])
+        if not members:
+            continue        # warm-up groups carry no measured traces
+        snap = store.get(rec.version)
+        assert snap is not None, "audited version evicted — grow the ring"
+        d2, idx = _replay_step(rec, snap, cfg.backend)
+        for t in members:
+            sl = slice(t.offset, t.offset + (t.q_hi - t.q_lo))
+            assert (np.array_equal(t.labels, idx[sl])
+                    and np.array_equal(t.scores, d2[sl])), \
+                f"{mode}: response not reproducible from its tag"
+            n_replayed += 1
+    assert n_replayed == len([t for t in all_t if not t.degraded]), \
+        "audit log lost a dispatch"
+    # Degraded replay: every shed response must reproduce bit-exactly
+    # from a degraded-tagged DispatchRecord at its tagged stale version.
+    deg_by_key: dict[tuple, list] = {}
+    for rec in svc.audit:
+        if rec.degraded:
+            deg_by_key.setdefault((rec.version, rec.n_valid), []).append(rec)
+    n_degraded = 0
+    for t in (t for t in all_t if t.degraded):
+        assert t.lane == "analytics", "only sheddable lanes may degrade"
+        n = t.q_hi - t.q_lo
+        ok = False
+        for rec in deg_by_key.get((t.version, n), []):
+            if not np.array_equal(rec.x[:n], np.asarray(x[t.q_lo:t.q_hi])):
+                continue
+            d2, idx = _replay_step(rec, store.get(rec.version), cfg.backend)
+            if (np.array_equal(t.labels, idx[:n])
+                    and np.array_equal(t.scores, d2[:n])):
+                ok = True
+                break
+        assert ok, "degraded response not reproducible from its tagged record"
+        n_degraded += 1
+    m = svc.metrics()
+    n_shed = sum(m["n_shed"].values())
+    assert n_shed == n_degraded, "shed counter / degraded responses diverge"
+    int_lat = np.asarray([t.latency_s for t in ints])
+    return {
+        "interactive_p50_ms": float(np.percentile(int_lat, 50) * 1e3),
+        "interactive_p99_ms": float(np.percentile(int_lat, 99) * 1e3),
+        "n_interactive": len(ints),
+        "n_analytics": len(all_t) - len(ints),
+        "n_shed": n_shed,
+        "n_degraded_replayed": n_degraded,
+        "lane_flushes": m["lane_flushes"],
+        "deadline_miss_rate": m["deadline_miss_rate"],
+        "overload_score_last": m["overload_score"],
+        "versions_published": len(store),
+        "wall_s": wall,
+    }
+
+
+def _qos_warm_jit(cfg: ServeDemoConfig, obs: Obs) -> None:
+    """Warm the module-level jit cache over every (request bucket,
+    capacity) pair the A/B will hit — including capacities only reached
+    by the MID-PHASE tail publishes.  The arms share one process-wide
+    cache, so whichever ran first would otherwise pay every compile and
+    the p99 comparison would measure compile order, not scheduling.
+    Training is deterministic, so a throwaway run discovers the exact
+    capacity sequence both arms will publish."""
+    x, _, _ = dp_stick_breaking_data(cfg.qos_n, seed=cfg.seed + 999,
+                                     dim=cfg.dim)
+    x = jnp.asarray(x)
+    store = SnapshotStore(capacity=256)
+    eng = OCCEngine(DPMeansTransaction(cfg.lam, k_max=cfg.k_max),
+                    pb=cfg.pb, validate_cap="adaptive",
+                    publish=store.publish_pass, obs=obs)
+    for j in range(0, cfg.qos_n, cfg.train_batch):
+        eng.partial_fit(x[j:j + cfg.train_batch])
+    eng.flush()
+    snaps = {}
+    for v in store.versions():
+        snap = store.get(v)
+        snaps[snap.capacity] = snap
+    for snap in snaps.values():
+        kk = min(8, snap.capacity)
+        for b in (8, 16, 32, 64, 128):
+            xq = jnp.zeros((b, x.shape[1]), x.dtype)
+            _assign_step(snap.centers, snap.mask, np.int32(snap.count), xq,
+                         np.int32(b), backend=cfg.backend)
+            _topk_step(snap.centers, snap.mask, np.int32(snap.count), xq,
+                       np.int32(b), k=kk, backend=cfg.backend)
+
+
+def _qos_mix(cfg: ServeDemoConfig, obs: Obs) -> dict:
+    """The §17 A/B: identical offered load against priority lanes vs the
+    legacy FIFO baseline; priority lanes must win interactive p99
+    STRICTLY, shedding must have fired (and only in the QoS arm — FIFO
+    is the faithful legacy policy, which never sheds)."""
+    _qos_warm_jit(cfg, obs)
+    # A discarded warm arm absorbs every first-run cost the jit prewarm
+    # can't (thread ramp, first flush/shed paths, allocator warmth) so
+    # neither MEASURED arm pays for running first.
+    warm_cfg = dataclasses.replace(cfg, qos_interactive_requests=10,
+                                   qos_analytics_requests=3)
+    _qos_mode(warm_cfg, obs, _qos_schedule(warm_cfg), priority_lanes=True,
+              tag="qos-warm")
+    sched = _qos_schedule(cfg)
+    qos = _qos_mode(cfg, obs, sched, priority_lanes=True)
+    fifo = _qos_mode(cfg, obs, sched, priority_lanes=False)
+    assert qos["interactive_p99_ms"] < fifo["interactive_p99_ms"], (
+        f"priority lanes did not beat FIFO: "
+        f"{qos['interactive_p99_ms']:.2f}ms vs "
+        f"{fifo['interactive_p99_ms']:.2f}ms")
+    assert qos["n_shed"] > 0, "overload shedding never fired in the QoS arm"
+    assert fifo["n_shed"] == 0, "the FIFO baseline must never shed"
+    return {"qos": qos, "fifo": fifo,
+            "interactive_p99_speedup":
+                fifo["interactive_p99_ms"] / qos["interactive_p99_ms"]}
+
+
 def run_demo(cfg: ServeDemoConfig) -> dict:
     assert cfg.n_models >= 2, "the scale-out audit needs >= 2 tenants"
     assert cfg.max_request <= cfg.coalesce_bucket
@@ -150,12 +451,12 @@ def run_demo(cfg: ServeDemoConfig) -> dict:
     # single registry / trace file (tracer only when --trace-out asked).
     obs = Obs(tracer=Tracer("serve_clusters") if cfg.trace_out else None,
               trace_path=cfg.trace_out)
-    router = ModelRouter(backend=cfg.backend, coalesce=True,
-                         coalesce_bucket=cfg.coalesce_bucket,
-                         coalesce_delay_ms=cfg.coalesce_delay_ms,
-                         audit_log=True,
-                         max_bucket=max(128, cfg.coalesce_bucket),
-                         obs=obs)
+    serve_cfg = ServeConfig(backend=cfg.backend, coalesce=True,
+                            coalesce_bucket=cfg.coalesce_bucket,
+                            coalesce_delay_ms=cfg.coalesce_delay_ms,
+                            audit_log=True,
+                            max_bucket=max(128, cfg.coalesce_bucket))
+    router = ModelRouter(serve_cfg, obs=obs)
     names = [chr(ord("a") + i) for i in range(cfg.n_models)]
     tenants = {nm: _make_tenant(nm, i, cfg, router, obs)
                for i, nm in enumerate(names)}
@@ -297,9 +598,9 @@ def run_demo(cfg: ServeDemoConfig) -> dict:
     # Coalescing pays: replay the same request trace solo (no admission
     # queue) against the same stores and compare bucket-fill ratios.
     fill_coalesced = router.metrics()["bucket_fill_ratio"]
-    solo = {nm: ClusterService(tenants[nm].store, backend=cfg.backend,
-                               min_bucket=8,
-                               max_bucket=max(128, cfg.coalesce_bucket))
+    solo = {nm: ClusterService(
+                tenants[nm].store,
+                serve_cfg.replace(coalesce=False, audit_log=False))
             for nm in names}
     for t in all_traces:
         solo[t.model].score(tenants[t.model].x[t.q_lo:t.q_hi])
@@ -309,6 +610,10 @@ def run_demo(cfg: ServeDemoConfig) -> dict:
     assert fill_coalesced > fill_solo, (
         f"coalescing did not improve bucket fill: "
         f"{fill_coalesced:.3f} vs solo {fill_solo:.3f}")
+
+    # Adversarial mixed-traffic QoS A/B (§17): same offered load, lanes
+    # vs legacy FIFO, with shed + degraded-replay audits inside.
+    qos_ab = _qos_mix(cfg, obs)
 
     lat = np.asarray([t.latency_s for t in all_traces])
     m = router.metrics()
@@ -340,6 +645,7 @@ def run_demo(cfg: ServeDemoConfig) -> dict:
         "qps": n_rows / serve_wall,
         "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+        "qos_ab": qos_ab,
     }
     router.close()
     obs.flush()
@@ -362,6 +668,13 @@ def run_demo(cfg: ServeDemoConfig) -> dict:
               f"  p99={record['p99_latency_ms']:.2f}ms")
         print("zero stale reads: True   serve==train bit-parity: True   "
               "delta==eager bit-identity: True")
+        q, f = qos_ab["qos"], qos_ab["fifo"]
+        print(f"QoS A/B: interactive p99 lanes="
+              f"{q['interactive_p99_ms']:.2f}ms vs fifo="
+              f"{f['interactive_p99_ms']:.2f}ms "
+              f"({qos_ab['interactive_p99_speedup']:.1f}x); "
+              f"shed={q['n_shed']} (all degraded replay bit-exact), "
+              f"fifo shed={f['n_shed']}")
     return record
 
 
@@ -373,6 +686,18 @@ def main(argv=None):
     ap.add_argument("--train-batch", type=int, default=384)
     ap.add_argument("--queries", type=int, default=10_000)
     ap.add_argument("--backend", default="auto")
+    # ServeConfig-backed QoS knobs (§17) — the same fields the services
+    # are constructed from, so CLI and library cannot drift.
+    ap.add_argument("--shed-depth", type=int,
+                    default=ServeDemoConfig.qos_shed_depth,
+                    help="queued rows at which shedding starts "
+                         "(ServeConfig.shed_depth)")
+    ap.add_argument("--interactive-deadline-ms", type=float,
+                    default=ServeDemoConfig.qos_interactive_deadline_ms,
+                    help="interactive lane deadline in the QoS A/B")
+    ap.add_argument("--analytics-deadline-ms", type=float,
+                    default=ServeDemoConfig.qos_analytics_deadline_ms,
+                    help="analytics lane deadline in the QoS A/B")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes (numbers not meaningful)")
     ap.add_argument("--out", default=None,
@@ -389,8 +714,17 @@ def main(argv=None):
                               train_batch=200, dim=8, min_queries=600,
                               max_request=16, k_max=256, n_clients=12,
                               coalesce_bucket=64, coalesce_delay_ms=8.0,
+                              qos_n=1024, qos_interactive_clients=6,
+                              qos_analytics_clients=2,
+                              qos_interactive_requests=60,
+                              qos_analytics_requests=12,
+                              qos_analytics_deadline_ms=150.0,
                               backend=args.backend, out_path=args.out,
                               trace_out=args.trace_out)
+    cfg.qos_shed_depth = args.shed_depth
+    cfg.qos_interactive_deadline_ms = args.interactive_deadline_ms
+    if not args.quick:
+        cfg.qos_analytics_deadline_ms = args.analytics_deadline_ms
     run_demo(cfg)
 
 

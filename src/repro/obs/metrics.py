@@ -30,7 +30,7 @@ import threading
 import time
 from contextlib import contextmanager
 
-__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+__all__ = ["Counter", "Ewma", "Gauge", "Histogram", "MetricsRegistry",
            "DEFAULT_BUCKETS", "now"]
 
 
@@ -92,6 +92,38 @@ class Gauge:
     def add(self, n: float) -> None:
         with self._lock:
             self._value += n
+
+    @property
+    def value(self) -> float:
+        with self._lock:
+            return self._value
+
+
+class Ewma:
+    """Exponentially weighted moving average of observed samples.
+
+    The rolling-rate instrument: observe 1.0 on an event (a deadline
+    miss) and 0.0 on a non-event (an on-time flush) and `value` is the
+    recent event *rate* with O(1) state — the serving plane's overload
+    detector reads it every admission.  The first observation seeds the
+    average exactly (no zero-bias warm-up)."""
+
+    __slots__ = ("_lock", "alpha", "_value", "count")
+
+    def __init__(self, alpha: float = 0.2):
+        assert 0.0 < alpha <= 1.0
+        self._lock = threading.Lock()
+        self.alpha = alpha
+        self._value = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self._value = (v if self.count == 0
+                           else self.alpha * v
+                           + (1.0 - self.alpha) * self._value)
+            self.count += 1
 
     @property
     def value(self) -> float:
@@ -199,7 +231,8 @@ class _Family:
         self.children: dict[tuple, object] = {}
 
 
-_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram}
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram,
+          "ewma": Ewma}
 
 
 class MetricsRegistry:
@@ -231,6 +264,11 @@ class MetricsRegistry:
 
     def histogram(self, name: str, buckets=None, **labels) -> Histogram:
         return self._get("histogram", name, labels, buckets=buckets)
+
+    def ewma(self, name: str, alpha: float = 0.2, **labels) -> Ewma:
+        """Rolling-rate instrument (see `Ewma`); `alpha` is pinned at the
+        family's first use, like histogram buckets."""
+        return self._get("ewma", name, labels, alpha=alpha)
 
     @contextmanager
     def timer(self, name: str, **labels):

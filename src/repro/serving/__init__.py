@@ -7,9 +7,13 @@ them with pad-to-bucket microbatching and atomic hot-swap.  The §12
 scale-out layer adds `ModelRouter` (many tenants behind one service with
 shared jit caches), delta snapshot publication (`CenterDelta`/`CenterLog`,
 O(ΔK·D) publishes + the replication wire format), and admission-queue
-coalescing (`ClusterService(coalesce=True)`).
+coalescing (`ClusterService(coalesce=True)`).  The §17 QoS layer types
+the request surface — `submit(Query(...))` with priority lanes, per-lane
+deadlines, and staleness-tolerant load shedding — and collapses every
+construction knob into one shared `ServeConfig`.
 """
 from repro.serving.engine import ServeEngine
+from repro.serving.qos import Query, ServeConfig
 from repro.serving.snapshot import (
     CenterDelta, CenterLog, DeltaSnapshot, ModelSnapshot, SnapshotStore,
     freeze_snapshot, next_bucket,
@@ -22,4 +26,4 @@ from repro.serving.router import ModelRouter
 __all__ = ["ServeEngine", "ModelSnapshot", "SnapshotStore",
            "freeze_snapshot", "next_bucket", "ClusterService",
            "ServeResponse", "ModelRouter", "CenterDelta", "CenterLog",
-           "DeltaSnapshot", "DispatchRecord"]
+           "DeltaSnapshot", "DispatchRecord", "Query", "ServeConfig"]

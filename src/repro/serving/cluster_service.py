@@ -17,20 +17,33 @@ Microbatching & jit-cache policy:
     -1) and are sliced off before the response, so they can never alias a
     real answer.
 
-Admission queue (DESIGN.md §12): `coalesce=True` puts small requests
-through an admission queue that merges CONCURRENT requests into one
-fuller microbatch — the CYCLADES move of batching conflict-free work into
-fuller units, applied to the serving plane: the ONE-dispatch-per-
-microbatch invariant then amortizes across requests (and across tenants,
-via the router) instead of padding each tiny request up to its own
-bucket.  Flush policy is deadline-or-full: a group is dispatched the
-moment its rows would fill `coalesce_bucket`, or when the OLDEST queued
-request has waited `coalesce_delay_ms` — a stalled or absent partner can
-never hold a request past its latency budget.  Every request in a group
-is answered from the ONE snapshot pinned at flush time and tagged with
-its version (and group/offset), so responses still replay bit-exactly
-from their tagged version; requests larger than the coalesce bucket
-bypass the queue onto the solo path unchanged.
+Admission queue (DESIGN.md §12, QoS rebuilt in §17): `coalesce=True`
+puts small requests through an admission queue that merges CONCURRENT
+requests into one fuller microbatch — the CYCLADES move of batching
+conflict-free work into fuller units, applied to the serving plane: the
+ONE-dispatch-per-microbatch invariant then amortizes across requests
+(and across tenants, via the router) instead of padding each tiny
+request up to its own bucket.  Requests queue per (kind, k, lane) with
+INDEPENDENT deadline timers; flush policy per group is deadline-or-full
+(a group dispatches the moment its rows would fill `coalesce_bucket`,
+or when its earliest per-request deadline expires — a stalled or absent
+partner can never hold a request past its latency budget, and a long
+batch deadline can never delay an interactive flush).  The lane
+scheduler (`serving/qos.py`) lets `interactive` preempt
+`batch`/`analytics` at flush-scheduling time with a starvation-proof
+aging credit; under measured overload (queue depth or deadline-miss
+rate past `ServeConfig` thresholds) sheddable queries (`max_staleness
+> 0`, non-interactive lanes) degrade to a stale pinned snapshot instead
+of queueing.  Every request in a group is answered from the ONE
+snapshot pinned at flush time and tagged with its version (and
+group/offset) — and every degraded response is tagged with the stale
+version it was served from plus a `degraded` flag — so responses ALWAYS
+replay bit-exactly from their tagged version; requests larger than the
+coalesce bucket bypass the queue onto the solo path unchanged.
+
+The typed request surface is `submit(Query(...))`; `assign`/`score`/
+`topk` are thin shims constructing a `Query` with defaults (verified
+bit-identical to the historical call forms in tests/test_serving.py).
 
 Hot-swap semantics: the service re-reads `store.latest()` exactly once per
 microbatch; the whole microbatch is computed against that one immutable
@@ -59,9 +72,12 @@ from repro.kernels import ops as _kops
 from repro.kernels.topk_stream import topk_tile_loads
 from repro.obs import Obs
 from repro.obs.metrics import now as _now
+from repro.serving import qos
+from repro.serving.qos import Query, ServeConfig
 from repro.serving.snapshot import ModelSnapshot, SnapshotStore, next_bucket
 
-__all__ = ["ClusterService", "ServeResponse", "DispatchRecord"]
+__all__ = ["ClusterService", "ServeResponse", "DispatchRecord", "Query",
+           "ServeConfig"]
 
 
 class ServeResponse(NamedTuple):
@@ -73,6 +89,8 @@ class ServeResponse(NamedTuple):
     model: str | None = None    # owning model (set when served via a router)
     group: int = -1         # coalesced dispatch id (-1: solo dispatch)
     offset: int = 0         # this request's first row within the dispatch
+    degraded: bool = False  # served from the stale shed pin under overload
+    #                         (version tags the PIN — replay still bit-exact)
 
 
 class DispatchRecord(NamedTuple):
@@ -92,6 +110,8 @@ class DispatchRecord(NamedTuple):
     probes: int = 0         # coarse cells probed per query (0: flat dispatch
     #                         — replay through _topk_step; >0: hierarchical
     #                         multi-probe — replay through _mp_topk_step)
+    degraded: bool = False  # shed-path dispatch against the stale pin;
+    #                         `version` is the pin's — replay is identical
 
 
 # Trace counter: incremented only when a query step is (re)compiled.  Lets
@@ -182,33 +202,48 @@ def _mp_topk_step(coarse, coarse_mask, fine, fine_ids, fine_mask, xq,
 
 
 class _Pending:
-    """One admitted request waiting for its coalesced dispatch."""
-    __slots__ = ("x", "kind", "k", "want_scores", "t", "event", "out", "err")
+    """One admitted request waiting for its lane's coalesced dispatch."""
+    __slots__ = ("x", "query", "lane", "t", "deadline_t", "event", "out",
+                 "err")
 
-    def __init__(self, x, kind, k, want_scores):
-        self.x, self.kind, self.k = x, kind, k
-        self.want_scores = want_scores
+    def __init__(self, x, query: Query, lane: str, deadline_s: float):
+        self.x, self.query, self.lane = x, query, lane
         self.t = _now()
+        self.deadline_t = self.t + deadline_s
         self.event = threading.Event()
         self.out = self.err = None
 
 
 class _AdmissionQueue:
-    """Deadline-or-full request coalescer (one flusher thread per service).
+    """Per-(kind, k, lane) request queues under one lane scheduler.
 
-    Requests queue FIFO; the flusher drains the longest prefix of the
-    oldest request's (kind, k) group whose rows fit `bucket`, dispatching
-    either when the group would fill the bucket or when the oldest queued
-    request has waited `delay_s`.  Different (kind, k) groups flush as
-    separate dispatches (they are different jit programs) but each gets
-    the same deadline discipline.
+    Requests are admitted FIFO into their (kind, k, lane) group; each
+    group carries its OWN deadline (earliest per-request deadline, where
+    a request's deadline is its `Query.deadline_ms` or its lane's
+    configured budget).  One scheduler thread runs the pure policy from
+    `serving/qos.py`: `select_flush` picks the group to dispatch (ready
+    = full-or-deadline; interactive preempts batch/analytics; aging
+    credits bound starvation) and `next_deadline` bounds the wait, so a
+    long batch deadline can never delay an interactive flush.  With
+    `priority_lanes=False` the legacy single-queue policy
+    (`select_flush_fifo`: only the group holding the globally oldest
+    request may flush) runs instead — the measurable FIFO baseline for
+    the QoS A/B in launch/serve_clusters.
+
+    Close semantics (the PR-10 race fix): `close()` marks the queue
+    closed and the scheduler FLUSHES every already-admitted request
+    before exiting — pending work is dispatched, never dropped.  A
+    submit racing with close either lands in a flushed group or fails
+    fast with "service closed"; none can hang or lose its answer.
     """
 
-    def __init__(self, service: "ClusterService", bucket: int, delay_s: float):
+    def __init__(self, service: "ClusterService", bucket: int,
+                 cfg: ServeConfig):
         self._svc = service
+        self._cfg = cfg
         self.bucket = bucket
-        self.delay_s = delay_s
-        self._q: list[_Pending] = []
+        self._groups: dict[tuple, list[_Pending]] = {}
+        self._credits: dict[tuple, int] = {}
         self._cond = threading.Condition()
         self._stop = False
         self._thread = threading.Thread(
@@ -216,11 +251,18 @@ class _AdmissionQueue:
             name=f"admission-{service.name or id(service)}")
         self._thread.start()
 
-    def submit(self, x, kind: str, k: int, want_scores: bool,
+    def submit(self, x, query: Query, lane: str,
                timeout_s: float = 60.0) -> ServeResponse:
-        item = _Pending(x, kind, k, want_scores)
+        deadline_s = (query.deadline_ms / 1e3
+                      if query.deadline_ms is not None
+                      else self._cfg.lane_delay_s(lane))
+        item = _Pending(x, query, lane, deadline_s)
+        key = (query.kind, query.k, lane)
         with self._cond:
-            self._q.append(item)
+            if self._stop:
+                raise RuntimeError("service closed")
+            self._groups.setdefault(key, []).append(item)
+            self._svc._lane_depth(lane).add(x.shape[0])
             self._cond.notify_all()
         if not item.event.wait(timeout_s):
             raise RuntimeError("admission queue flush timed out")
@@ -228,54 +270,74 @@ class _AdmissionQueue:
             raise item.err
         return item.out
 
+    def depth_rows(self) -> int:
+        """Total queued rows across every group — the shed-policy input."""
+        with self._cond:
+            return sum(it.x.shape[0] for g in self._groups.values()
+                       for it in g)
+
     def close(self) -> None:
         with self._cond:
             self._stop = True
             self._cond.notify_all()
-        self._thread.join(timeout=5)
+        self._thread.join(timeout=10)
 
-    # ---------------------------------------------------------- flusher
-    def _group_rows(self) -> int:
-        key = (self._q[0].kind, self._q[0].k)
-        return sum(it.x.shape[0] for it in self._q
-                   if (it.kind, it.k) == key)
+    # ---------------------------------------------------------- scheduler
+    def _states(self) -> list[qos.LaneState]:
+        return [qos.LaneState(key, key[2],
+                              sum(it.x.shape[0] for it in g),
+                              g[0].t, min(it.deadline_t for it in g))
+                for key, g in self._groups.items() if g]
 
-    def _drain_locked(self) -> list[_Pending]:
-        key = (self._q[0].kind, self._q[0].k)
+    def _drain_locked(self, key: tuple) -> list[_Pending]:
+        """Longest FIFO prefix of the group that fits the bucket."""
+        group = self._groups[key]
         take, total = [], 0
-        for it in list(self._q):
-            if (it.kind, it.k) != key:
-                continue
-            if take and total + it.x.shape[0] > self.bucket:
+        while group:
+            nxt = group[0].x.shape[0]
+            if take and total + nxt > self.bucket:
                 break          # never overshoot the bucket once non-empty
-            take.append(it)
-            total += it.x.shape[0]
-            self._q.remove(it)
+            take.append(group.pop(0))
+            total += nxt
+        if not group:
+            del self._groups[key]
+        self._svc._lane_depth(key[2]).add(-total)
         return take
 
     def _loop(self) -> None:
         while True:
             with self._cond:
-                while not self._q and not self._stop:
-                    self._cond.wait()
-                if self._stop:
-                    for it in self._q:
-                        it.err = RuntimeError("service closed")
-                        it.event.set()
-                    return
-                deadline = self._q[0].t + self.delay_s
-                while self._group_rows() < self.bucket:
-                    remaining = deadline - _now()
-                    if remaining <= 0 or self._stop:
+                while True:
+                    states = self._states()
+                    now_t = _now()
+                    if self._cfg.priority_lanes:
+                        pick = qos.select_flush(
+                            states, now_t, self._credits, self.bucket,
+                            self._cfg.aging_limit)
+                    else:
+                        pick = qos.select_flush_fifo(states, now_t,
+                                                     self.bucket)
+                    if pick is None and self._stop and states:
+                        # Closing: nothing is due yet, but everything
+                        # already admitted must still be DISPATCHED
+                        # (flush-not-drop) — drain earliest-deadline
+                        # first until the queues are empty.
+                        key = min(states, key=lambda s: s.deadline_t).key
+                        pick = qos.FlushDecision(key, "close", ())
+                    if pick is not None:
+                        for k in pick.passed_over:
+                            self._credits[k] = self._credits.get(k, 0) + 1
+                        self._credits.pop(pick.key, None)
+                        batch = self._drain_locked(pick.key)
                         break
-                    self._cond.wait(remaining)
-                    if not self._q:
-                        break
-                if not self._q:
-                    continue
-                batch = self._drain_locked()
+                    if self._stop:
+                        return
+                    wake = qos.next_deadline(states)
+                    self._cond.wait(None if wake is None
+                                    else max(0.0, wake - now_t))
             try:
-                self._svc._flush_group(batch)
+                self._svc._flush_group(batch, lane=pick.key[2],
+                                       reason=pick.reason)
             except Exception as e:        # propagate to every waiter
                 for it in batch:
                     it.err = e
@@ -285,72 +347,67 @@ class _AdmissionQueue:
 class ClusterService:
     """Serves batched assignment queries from a SnapshotStore.
 
-    Args:
+    Construction: `ClusterService(store, config)` where `config` is a
+    `ServeConfig` (see serving/qos.py for every knob's meaning) — or the
+    historical keyword form `ClusterService(store, backend=...,
+    coalesce=...)`: any ServeConfig field passed as a keyword is
+    `replace`d into the config, so every pre-§17 call site still works
+    unchanged.  Runtime objects stay out of the config:
+
       store: the `SnapshotStore` the trainer publishes into.
-      backend: `kernels/ops` backend for the assignment kernel ("auto":
-        Pallas on TPU, jnp reference elsewhere — the same dispatch, and
-        hence the same numerics, as the engine's propose phase, which is
-        what makes serve-vs-train bit-parity hold).
-      min_bucket / max_bucket: power-of-two request bucket bounds; requests
-        larger than max_bucket are split into max_bucket microbatches.
       name: model tag stamped on responses (set by the router).
-      coalesce / coalesce_bucket / coalesce_delay_ms: admission-queue
-        coalescing — requests of <= coalesce_bucket rows merge into fuller
-        microbatches under the deadline-or-full policy; larger requests
-        take the solo path unchanged.
-      audit_log: retain a `DispatchRecord` per jitted dispatch (exact
-        padded inputs + member spans) so every response can be replayed
-        bit-exactly from its tagged version — the e2e audit surface.
-        Unbounded growth: enable for audits/tests, not steady production.
       mesh / data_axis: optional device mesh for replicated-snapshot /
         sharded-query serving.
-      probes: the multi-probe exactness knob (DESIGN.md §16).  None (the
-        default) serves top-k from the flat buffers.  An int p serves
-        top-k through the snapshot's hierarchical layout (requires
-        `SnapshotStore(hier=True)`): each query routes to its p nearest
-        coarse cells and only the microbatch's probed fine shards are
-        streamed.  p >= n_cells dispatches the FLAT step — so "probe
-        everything" is bit-identical to flat serving by construction, and
-        smaller p trades measured recall (see `recall_audit_every`) for
-        probed-shard work.  `assign`/`score` are unaffected (top-1 over
-        a pruned candidate set would silently change answers).
-      recall_audit_every: when > 0 and multi-probing, every Nth top-k
-        dispatch ALSO runs the flat step on the same microbatch and
-        publishes recall@k against it as the `serve_topk_recall` gauge —
-        a paid-for spot check, off by default.
       obs: optional shared `repro.obs.Obs`; counters/histograms land in
         its registry (labeled by model) and query dispatches become trace
         spans when a tracer is attached.
+      shed_signal: optional zero-arg callable returning an external
+        overload score; the shed decision uses max(own score, signal).
+        The router wires a fleet-wide queue-depth signal through this so
+        one tenant's backlog can start shedding a co-located tenant's
+        sheddable traffic before the shared process melts.
+
+    Request surface: `submit(Query(...))` is THE entrypoint;
+    `assign`/`score`/`topk` are shims constructing the equivalent Query
+    (bit-identical responses — pinned by tests/test_serving.py).  The
+    multi-probe exactness knob (`config.probes`, DESIGN.md §16): None
+    serves top-k flat; int p routes each query to its p nearest coarse
+    cells over the snapshot's hierarchical layout (requires
+    `SnapshotStore(hier=True)`), p >= n_cells IS the flat step;
+    `config.recall_audit_every` > 0 runs the paid-for recall@k spot
+    check every Nth multi-probe dispatch.  `config.audit_log` retains a
+    `DispatchRecord` per jitted dispatch (exact padded inputs + member
+    spans) so every response — including degraded shed-path responses —
+    replays bit-exactly from its tagged version.  Unbounded growth:
+    enable for audits/tests, not steady production.
     """
 
-    def __init__(self, store: SnapshotStore, backend: str = "auto",
-                 min_bucket: int = 8, max_bucket: int = 4096,
+    def __init__(self, store: SnapshotStore,
+                 config: ServeConfig | None = None, *,
                  name: str | None = None,
-                 coalesce: bool = False, coalesce_bucket: int = 64,
-                 coalesce_delay_ms: float = 2.0,
-                 audit_log: bool = False,
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data",
-                 probes: int | None = None,
-                 recall_audit_every: int = 0,
-                 obs: Obs | None = None):
-        assert min_bucket & (min_bucket - 1) == 0, "min_bucket: power of two"
-        assert max_bucket & (max_bucket - 1) == 0, "max_bucket: power of two"
-        assert coalesce_bucket & (coalesce_bucket - 1) == 0, \
-            "coalesce_bucket: power of two"
-        assert probes is None or probes >= 1, "probes: None or >= 1"
-        assert probes is None or mesh is None, \
+                 obs: Obs | None = None,
+                 shed_signal=None,
+                 **overrides):
+        if config is None:
+            config = ServeConfig()
+        if overrides:
+            config = config.replace(**overrides)
+        assert config.probes is None or mesh is None, \
             "multi-probe serving is not supported with a mesh yet"
+        self.config = config
         self.store = store
-        self.probes = probes
-        self.recall_audit_every = recall_audit_every
-        self.backend = backend
-        self.min_bucket = min_bucket
-        self.max_bucket = max_bucket
+        self.probes = config.probes
+        self.recall_audit_every = config.recall_audit_every
+        self.backend = config.backend
+        self.min_bucket = config.min_bucket
+        self.max_bucket = config.max_bucket
         self.name = name
-        self.coalesce_bucket = min(coalesce_bucket, max_bucket)
+        self.coalesce_bucket = min(config.coalesce_bucket, config.max_bucket)
         self.mesh = mesh
         self.data_axis = data_axis
+        self._shed_signal = shed_signal
         # Observability (§15): one dispatch per microbatch is the
         # contract.  Scalar counters live in the obs registry — each
         # counter's own lock makes flusher-thread vs request-thread
@@ -393,16 +450,40 @@ class ClusterService:
         self._h_queue_wait = m.histogram("serve_queue_wait_s", **mlab)
         self._h_dispatch = m.histogram("serve_dispatch_s", **mlab)
         self._h_request = m.histogram("serve_request_s", **mlab)
+        # QoS families (§17): per-lane queue depth (rows currently
+        # admitted), per-(lane, reason) flush counts from the lane
+        # scheduler, shed counts, the deadline-miss EWMA (a flush landing
+        # more than one lane budget late), and the derived overload gauge
+        # (`qos.overload_score` — 1.0 = shedding starts).
+        self._g_depth = {lane: m.gauge("serve_lane_depth", lane=lane, **mlab)
+                         for lane in qos.LANES}
+        self._c_shed = {lane: m.counter("serve_shed", lane=lane, **mlab)
+                        for lane in qos.LANES}
+        self._c_lane_flush: dict[tuple[str, str], Any] = {}
+        self._e_miss = m.ewma("serve_deadline_miss_rate", **mlab)
+        self._g_overload = m.gauge("serve_overload_score", **mlab)
+        self._mlab = mlab
         self._traces0 = _QUERY_TRACES
         self.bucket_hist: dict[int, int] = {}
         self.version_hist: dict[int, int] = {}
         self._cur_version: int | None = None
         self._mlock = threading.Lock()
         self._next_group = 0
-        self.audit: list[DispatchRecord] | None = [] if audit_log else None
-        self._queue = (_AdmissionQueue(self, self.coalesce_bucket,
-                                       coalesce_delay_ms / 1e3)
-                       if coalesce else None)
+        self._shed_pin: ModelSnapshot | None = None   # guarded by _mlock
+        self.audit: list[DispatchRecord] | None = (
+            [] if config.audit_log else None)
+        self._queue = (_AdmissionQueue(self, self.coalesce_bucket, config)
+                       if config.coalesce else None)
+
+    def _lane_depth(self, lane: str):
+        return self._g_depth[lane]
+
+    def _lane_flush_counter(self, lane: str, reason: str):
+        c = self._c_lane_flush.get((lane, reason))
+        if c is None:
+            c = self._c_lane_flush[(lane, reason)] = self.obs.metrics.counter(
+                "serve_lane_flushes", lane=lane, reason=reason, **self._mlab)
+        return c
 
     # ---------------------------------------------- legacy counter surface
     @property
@@ -472,11 +553,11 @@ class ClusterService:
                 self.version_hist.get(snap.version, 0) + n)
 
     def _record(self, group, snap, kind, k, bucket, n, xp, spans,
-                probes: int = 0) -> None:
+                probes: int = 0, degraded: bool = False) -> None:
         if self.audit is not None:
             self.audit.append(DispatchRecord(
                 group, snap.version, kind, k, bucket, n,
-                np.asarray(xp), tuple(spans), probes))
+                np.asarray(xp), tuple(spans), probes, degraded))
 
     def _split(self, x) -> list[jnp.ndarray]:
         x = jnp.asarray(x)
@@ -579,16 +660,24 @@ class ClusterService:
         return d2, idx
 
     # ----------------------------------------------------------- coalescing
-    def _flush_group(self, items: list[_Pending]) -> None:
+    def _flush_group(self, items: list[_Pending], lane: str = "interactive",
+                     reason: str = "deadline") -> None:
         """Dispatch one coalesced group: ONE snapshot pin, ONE jitted step,
-        per-request slices tagged (version, group, offset)."""
+        per-request slices tagged (version, group, offset).  `reason` is
+        the lane scheduler's verdict ("full" | "deadline" | "aged" |
+        "close"); the legacy `serve_flushes` counters keep their
+        historical fill-based split so pre-§17 dashboards read the same."""
         snap = self._take_snapshot()
-        kind, k = items[0].kind, items[0].k
+        q0 = items[0].query
+        kind, k = q0.kind, q0.k
         kk = min(k, snap.capacity) if kind == "topk" else 0
         x = (jnp.concatenate([it.x for it in items], 0)
              if len(items) > 1 else items[0].x)
         n = x.shape[0]
         t_flush = _now()
+        grace = self.config.miss_grace_s(lane)
+        missed = any(t_flush > it.deadline_t + grace for it in items)
+        self._e_miss.observe(1.0 if missed else 0.0)
         for it in items:        # admission-to-flush wait per member request
             self._h_queue_wait.observe(t_flush - it.t)
         xp, bucket = self._pad(x)
@@ -600,9 +689,9 @@ class ClusterService:
         deadline_flush = n < self.coalesce_bucket
         (self._c_flush_deadline if deadline_flush
          else self._c_flush_full).inc()
-        self.obs.instant("serve.flush", cat="serve",
-                         reason="deadline" if deadline_flush else "full",
-                         requests=len(items), rows=n)
+        self._lane_flush_counter(lane, reason).inc()
+        self.obs.instant("serve.flush", cat="serve", reason=reason,
+                         lane=lane, requests=len(items), rows=n)
         with self._mlock:
             gid = self._next_group
             self._next_group += 1
@@ -616,35 +705,63 @@ class ClusterService:
         for it, (lo, hi) in zip(items, spans):
             it.out = ServeResponse(
                 snap.version, labels[lo:hi],
-                scores[lo:hi] if it.want_scores else None, bucket,
+                scores[lo:hi] if it.query.want_scores else None, bucket,
                 model=self.name, group=gid, offset=lo)
             it.event.set()
 
-    def _coalesced(self, x, kind: str, k: int,
-                   want_scores: bool) -> ServeResponse | None:
-        """Route through the admission queue when eligible, else None."""
-        if self._queue is None:
-            return None
-        x = jnp.asarray(x)
-        if x.ndim == 1:
-            x = x[None, :]
-        if x.shape[0] > self.coalesce_bucket:
-            return None
-        return self._queue.submit(x, kind, k, want_scores)
-
     def close(self) -> None:
-        """Stop the admission-queue flusher (no-op for solo services)."""
+        """Stop the admission queue (no-op for solo services).  Requests
+        already admitted are FLUSHED on the way down, never dropped;
+        submits racing past the stop flag fail fast with RuntimeError."""
         if self._queue is not None:
             self._queue.close()
             self._queue = None
 
+    # ------------------------------------------------------------- shedding
+    def _overload(self) -> float:
+        """Current overload score; published as `serve_overload_score`."""
+        rows = self._queue.depth_rows() if self._queue is not None else 0
+        score = qos.overload_score(rows, self.config.shed_depth,
+                                   self._e_miss.value,
+                                   self.config.shed_miss_rate)
+        if self._shed_signal is not None:
+            score = max(score, float(self._shed_signal()))
+        self._g_overload.set(score)
+        return score
+
+    def queue_depth_rows(self) -> int:
+        """Rows currently queued for admission (0 for solo services) —
+        the router's fleet-wide shed signal reads this per tenant."""
+        return self._queue.depth_rows() if self._queue is not None else 0
+
+    def _stale_pin(self, max_staleness: int) -> ModelSnapshot:
+        """The graceful-degradation snapshot: pinned once and HELD while
+        shedding (no per-shed latest() chase — a stable version keeps the
+        jit cache warm and makes degraded replay deterministic), re-pinned
+        only when it drifts past the caller's staleness tolerance or the
+        store moved backwards (recovery truncation)."""
+        latest = self.store.latest()
+        if latest is None:
+            raise RuntimeError("no model version published yet")
+        with self._mlock:
+            pin = self._shed_pin
+            if (pin is None or pin.version > latest.version
+                    or pin.version < latest.version - max_staleness):
+                pin = self._shed_pin = latest
+        return pin
+
     # -------------------------------------------------------------- queries
-    def _solo(self, x, kind: str, k: int) -> ServeResponse:
+    def _solo(self, x, kind: str, k: int, snap: ModelSnapshot | None = None,
+              degraded: bool = False) -> ServeResponse:
         """The solo path: this request is its own microbatch (split into
         max_bucket chunks when giant).  The snapshot is pinned ONCE for the
         whole request — even when it splits, every row is answered by the
-        same version (the one in the tag); hot-swap is between requests."""
-        snap = self._take_snapshot()
+        same version (the one in the tag); hot-swap is between requests.
+        The shed path passes its stale pin (and degraded=True) explicitly;
+        the record and response carry the flag so replay audits know the
+        version tag is the pin's, not latest-at-dispatch."""
+        if snap is None:
+            snap = self._take_snapshot()
         kk = min(k, snap.capacity) if kind == "topk" else 0
         parts_l, parts_s, bucket = [], [], 0
         for xc in self._split(x):
@@ -653,40 +770,56 @@ class ClusterService:
             d2, idx = self._run_step(snap, xp, n, kind, kk)
             self._account(snap, n, bucket)
             self._record(-1, snap, kind, kk, bucket, n, xp, [(0, n)],
-                         self._mp_probes(snap) if kind == "topk" else 0)
+                         self._mp_probes(snap) if kind == "topk" else 0,
+                         degraded)
             parts_l.append(np.asarray(idx[:n]))
             parts_s.append(np.asarray(d2[:n]))
         self._c_requests.inc()
         return ServeResponse(snap.version, np.concatenate(parts_l),
                              np.concatenate(parts_s), bucket,
-                             model=self.name)
+                             model=self.name, degraded=degraded)
+
+    def submit(self, query: Query) -> ServeResponse:
+        """THE serving entrypoint: every request — typed or via the
+        `assign`/`score`/`topk` shims — lands here.
+
+        Routing: requests of <= coalesce_bucket rows go through the
+        admission queue in their priority lane; under measured overload
+        sheddable requests (non-interactive lane, max_staleness > 0)
+        skip the queue and are answered solo from the stale shed pin
+        with `degraded=True`; oversized requests take the solo path."""
+        t0 = _now()
+        x = jnp.asarray(query.x)
+        if x.ndim == 1:
+            x = x[None, :]
+        if self._queue is not None and x.shape[0] <= self.coalesce_bucket:
+            lane = qos.effective_lane(query.priority,
+                                      self.config.priority_lanes)
+            if qos.should_shed(lane, query.max_staleness, self._overload()):
+                self._c_shed[lane].inc()
+                resp = self._solo(x, query.kind, query.k,
+                                  snap=self._stale_pin(query.max_staleness),
+                                  degraded=True)
+            else:
+                resp = self._queue.submit(x, query, lane)
+        else:
+            resp = self._solo(x, query.kind, query.k)
+        if not query.want_scores and resp.scores is not None:
+            resp = resp._replace(scores=None)
+        self._h_request.observe(_now() - t0)
+        return resp
 
     def score(self, x) -> ServeResponse:
         """Nearest-center label AND squared distance per query row."""
-        t0 = _now()
-        resp = self._coalesced(x, "score", 0, want_scores=True)
-        if resp is None:
-            resp = self._solo(x, "score", 0)
-        self._h_request.observe(_now() - t0)
-        return resp
+        return self.submit(Query(x))
 
     def assign(self, x) -> ServeResponse:
         """Nearest-center label per query row (scores omitted)."""
-        t0 = _now()
-        resp = self._coalesced(x, "score", 0, want_scores=False)
-        if resp is None:
-            resp = self._solo(x, "score", 0)._replace(scores=None)
-        self._h_request.observe(_now() - t0)
-        return resp
+        return self.submit(Query(x, want_scores=False))
 
     def topk(self, x, k: int = 4) -> ServeResponse:
         """k nearest centers per query row, distances ascending."""
-        t0 = _now()
-        resp = self._coalesced(x, "topk", k, want_scores=True)
-        if resp is None:
-            resp = self._solo(x, "topk", k)
-        self._h_request.observe(_now() - t0)
-        return resp
+        return self.submit(Query(x, kind="topk", k=k))
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> dict[str, Any]:
@@ -707,6 +840,20 @@ class ClusterService:
             "requests_per_group":
                 self.n_group_requests / max(1, self.n_groups),
             "n_swaps": self.n_swaps,
+            # QoS (§17): lane-scheduler + shed-policy readouts.  The
+            # overload gauge holds the score at the LAST admission
+            # decision; lane flush counts are keyed "lane/reason" from
+            # the scheduler's verdicts; shed counts are degraded-path
+            # responses per lane (always 0 for interactive).
+            "overload_score": self._g_overload.value,
+            "deadline_miss_rate": self._e_miss.value,
+            "lane_depth_rows": {lane: int(g.value)
+                                for lane, g in self._g_depth.items()},
+            "lane_flushes": {f"{lane}/{reason}": int(c.value)
+                             for (lane, reason), c
+                             in sorted(dict(self._c_lane_flush).items())},
+            "n_shed": {lane: int(c.value)
+                       for lane, c in self._c_shed.items()},
             # registry-backed latency readouts (§15): total request wall
             # time and admission-queue wait, per this service's labels.
             "request_p50_ms": 1e3 * self._h_request.percentile(50)

@@ -15,10 +15,19 @@ assign/score/topk requests by model name.  The design invariants:
   compilation.  `metrics()["query_step_compiles"]` counts compiles since
   router construction — bounded by the distinct (bucket, capacity) pairs
   across ALL tenants, not by the tenant count.
-* **Coalescing per model** — with `coalesce=True` every tenant service gets
-  an admission queue (requests against different models can never share a
-  dispatch — the centers differ — so queues are per model; the jit-cache
-  sharing above is what keeps the multi-tenant compile footprint flat).
+* **Coalescing per model** — with `config.coalesce` every tenant service
+  gets an admission queue (requests against different models can never
+  share a dispatch — the centers differ — so queues and lanes are per
+  model; the jit-cache sharing above is what keeps the multi-tenant
+  compile footprint flat).
+* **Fleet-wide shed policy (§17)** — every tenant service is constructed
+  with a `shed_signal` that reads TOTAL queued rows across all tenants
+  against `config.shed_depth`: the queues are per model, but the flusher
+  threads contend for one process's devices, so one tenant's backlog
+  starts shedding every tenant's sheddable (batch/analytics,
+  max_staleness > 0) traffic before the shared process melts.
+  Interactive / max_staleness=0 traffic is never shed, per-tenant or
+  fleet-wide.
 * **Replication-ready** — `add_model(delta=True, wire=channel)` publishes
   through the append-only delta log and emits the `CenterDelta` wire
   stream (`distributed/replication.py`): a follower router on another host
@@ -34,6 +43,7 @@ import jax
 from repro.obs import Obs
 from repro.serving import cluster_service as _cs
 from repro.serving.cluster_service import ClusterService, ServeResponse
+from repro.serving.qos import Query, ServeConfig
 from repro.serving.snapshot import SnapshotStore
 
 __all__ = ["ModelRouter"]
@@ -42,39 +52,58 @@ __all__ = ["ModelRouter"]
 class ModelRouter:
     """Routes batched assignment queries to named per-model services.
 
-    Constructor arguments are the shared service defaults; `add_model`
-    accepts per-tenant overrides.  Thread-safe: `add_model` and queries
-    may race (the model map flips atomically under a lock; queries hold a
-    reference to their tenant's service for the duration of the call).
+    Construction mirrors `ClusterService`: `ModelRouter(config)` with a
+    shared `ServeConfig` (see serving/qos.py), or the historical keyword
+    form (`ModelRouter(coalesce=True, ...)`) — ServeConfig fields passed
+    as keywords are `replace`d into the config.  The config is every
+    tenant's default; `add_model` accepts per-tenant ServeConfig-field
+    overrides (or a whole `config=`).  Thread-safe: `add_model` and
+    queries may race (the model map flips atomically under a lock;
+    queries hold a reference to their tenant's service for the duration
+    of the call).
     """
 
-    def __init__(self, backend: str = "auto", min_bucket: int = 8,
-                 max_bucket: int = 4096, coalesce: bool = False,
-                 coalesce_bucket: int = 64, coalesce_delay_ms: float = 2.0,
-                 audit_log: bool = False,
+    def __init__(self, config: ServeConfig | None = None, *,
                  mesh: jax.sharding.Mesh | None = None,
                  data_axis: str = "data",
-                 obs: Obs | None = None):
+                 obs: Obs | None = None,
+                 **overrides):
+        if config is None:
+            config = ServeConfig()
+        if overrides:
+            config = config.replace(**overrides)
+        self.config = config
         # ONE shared obs: every tenant's counters land in the same
         # registry (distinguished by their model= label), so the router-
         # level aggregates below are plain registry reads.
         self.obs = obs if obs is not None else Obs()
-        self._defaults = dict(
-            backend=backend, min_bucket=min_bucket, max_bucket=max_bucket,
-            coalesce=coalesce, coalesce_bucket=coalesce_bucket,
-            coalesce_delay_ms=coalesce_delay_ms, audit_log=audit_log,
-            mesh=mesh, data_axis=data_axis, obs=self.obs)
+        self.mesh = mesh
+        self.data_axis = data_axis
         self._services: dict[str, ClusterService] = {}
         self._lock = threading.Lock()
         self._traces0 = _cs._QUERY_TRACES
 
     # ------------------------------------------------------------ model mgmt
+    def _fleet_shed_signal(self):
+        """Fleet-wide overload term: total queued rows across every
+        tenant, normalized by the shared shed_depth threshold.  Each
+        service takes max(own score, this) at admission time."""
+        def signal() -> float:
+            with self._lock:
+                svcs = list(self._services.values())
+            rows = sum(svc.queue_depth_rows() for svc in svcs)
+            return rows / max(1, self.config.shed_depth)
+        return signal
+
     def add_model(self, name: str, store: SnapshotStore | None = None, *,
                   snapshot_capacity: int = 16, delta: bool = False,
                   wire: Any = None, max_model_capacity: int | None = None,
+                  config: ServeConfig | None = None,
                   **service_overrides) -> SnapshotStore:
         """Register a tenant; returns its store (hand `store.publish_pass`
-        to the tenant's `OCCEngine(publish=)`)."""
+        to the tenant's `OCCEngine(publish=)`).  `config` replaces the
+        router default wholesale for this tenant; bare ServeConfig fields
+        in `service_overrides` patch it."""
         with self._lock:
             if name in self._services:
                 raise ValueError(f"model {name!r} already registered")
@@ -82,11 +111,15 @@ class ModelRouter:
             store = SnapshotStore(capacity=snapshot_capacity, delta=delta,
                                   model=name, wire=wire,
                                   max_model_capacity=max_model_capacity)
+        cfg = config if config is not None else self.config
+        if service_overrides:
+            cfg = cfg.replace(**service_overrides)
         # Construct outside the lock (coalescing services spawn a flusher
         # thread); re-check under it so a racing duplicate never leaks that
         # thread — the loser closes its service and raises.
-        svc = ClusterService(store, name=name,
-                             **{**self._defaults, **service_overrides})
+        svc = ClusterService(store, cfg, name=name, mesh=self.mesh,
+                             data_axis=self.data_axis, obs=self.obs,
+                             shed_signal=self._fleet_shed_signal())
         with self._lock:
             if name in self._services:
                 svc.close()
@@ -125,6 +158,10 @@ class ModelRouter:
         return self.store(model).publish_pass
 
     # --------------------------------------------------------------- queries
+    def submit(self, model: str, query: Query) -> ServeResponse:
+        """Typed entrypoint, mirroring `ClusterService.submit`."""
+        return self.service(model).submit(query)
+
     def score(self, model: str, x) -> ServeResponse:
         return self.service(model).score(x)
 
@@ -149,6 +186,14 @@ class ModelRouter:
             "bucket_fill_ratio": (
                 sum(m["n_queries"] for m in per_model.values())
                 / max(1, sum(svc.n_padded_rows for svc in svcs.values()))),
+            # fleet-wide QoS pressure: the max of every tenant's last
+            # published overload score, plus total shed counts per lane.
+            "overload_score": max(
+                (m["overload_score"] for m in per_model.values()),
+                default=0.0),
+            "n_shed": {
+                lane: sum(m["n_shed"][lane] for m in per_model.values())
+                for lane in ("interactive", "batch", "analytics")},
             # compiles since ROUTER construction, across every tenant —
             # bounded by distinct (bucket, capacity, backend) triples, NOT
             # by tenant count: the shared-jit-cache proof.

@@ -1,0 +1,92 @@
+"""Public API surface snapshot for `repro.serving` (DESIGN.md §17).
+
+The §17 redesign made `submit(Query(...))` + `ServeConfig` THE serving
+surface; this test freezes that surface — exported names, constructor
+signatures, dataclass/NamedTuple fields with defaults, public methods —
+into tests/golden/api_surface_serving.json so an accidental signature
+drift (a renamed field, a default flip, a dropped export) fails loudly
+instead of silently breaking downstream callers.
+
+Intentional changes regenerate the snapshot:
+
+    PYTHONPATH=src python tests/test_api_surface.py --regen
+"""
+import dataclasses
+import inspect
+import json
+import os
+
+import repro.serving as serving
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "api_surface_serving.json")
+
+
+def _members(obj) -> dict:
+    """Public methods/properties defined ON the class (inherited tuple /
+    object plumbing excluded — it isn't part of our surface)."""
+    out = {}
+    for name, val in sorted(vars(obj).items()):
+        if name.startswith("_"):
+            continue
+        if isinstance(val, property):
+            out[name] = "<property>"
+        elif isinstance(val, (staticmethod, classmethod)):
+            out[name] = str(inspect.signature(val.__func__))
+        elif callable(val):
+            out[name] = str(inspect.signature(val))
+    return out
+
+
+def _describe(obj) -> dict:
+    if dataclasses.is_dataclass(obj):
+        return {"kind": "dataclass",
+                "fields": [[f.name,
+                            "<required>"
+                            if f.default is dataclasses.MISSING
+                            else repr(f.default)]
+                           for f in dataclasses.fields(obj)],
+                "members": _members(obj)}
+    if isinstance(obj, type) and issubclass(obj, tuple) \
+            and hasattr(obj, "_fields"):
+        return {"kind": "namedtuple",
+                "fields": list(obj._fields),
+                "defaults": {k: repr(v)
+                             for k, v in obj._field_defaults.items()}}
+    if isinstance(obj, type):
+        return {"kind": "class",
+                "init": str(inspect.signature(obj.__init__)),
+                "members": _members(obj)}
+    return {"kind": "function", "signature": str(inspect.signature(obj))}
+
+
+def surface() -> dict:
+    return {"exports": sorted(serving.__all__),
+            "api": {name: _describe(getattr(serving, name))
+                    for name in sorted(serving.__all__)}}
+
+
+def test_serving_api_surface_matches_golden():
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    got = json.loads(json.dumps(surface()))    # normalize tuples -> lists
+    assert got == want, (
+        "repro.serving public API drifted from tests/golden/"
+        "api_surface_serving.json — if the change is intentional, rerun "
+        "`PYTHONPATH=src python tests/test_api_surface.py --regen`")
+
+
+def test_every_export_exists_and_is_public():
+    for name in serving.__all__:
+        assert not name.startswith("_")
+        assert hasattr(serving, name)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(surface(), f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"regenerated {GOLDEN}")

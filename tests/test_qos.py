@@ -1,0 +1,445 @@
+"""Mixed-traffic QoS serving plane (DESIGN.md §17).
+
+Contracts under test:
+  * lane scheduler (pure) — ready = full-or-deadline per group with
+    INDEPENDENT timers; interactive preempts batch/analytics; aging
+    credits bound starvation at `aging_limit` passed-over rounds; the
+    FIFO baseline keeps head-of-line blocking by construction;
+  * shed policy (pure + threaded) — sheds only under overload, only
+    non-interactive lanes, only `max_staleness > 0`; degraded responses
+    are tagged with their stale pin's version and replay bit-exactly;
+  * typed surface — `Query` / `ServeConfig` validation fails fast;
+  * close-race (the PR-10 bugfix) — requests admitted before `close()`
+    are FLUSHED with real answers, never dropped; submits racing close
+    either land in a flushed group or fail fast.
+
+Threaded tests run `backend="ref"` with second-scale latency bounds:
+the PRECISION lives in the pure-scheduler tests (explicit clocks), the
+threaded ones only pin end-to-end wiring on a 1-CPU worst case.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DPMeansTransaction, OCCEngine, nearest_center
+from repro.data import dp_stick_breaking_data
+from repro.obs.metrics import Ewma, now as _now
+from repro.serving import ClusterService, Query, ServeConfig, SnapshotStore
+from repro.serving import qos
+from repro.serving.cluster_service import _assign_step, _topk_step
+from repro.serving.qos import FlushDecision, LaneState
+
+LAM = 4.0
+
+
+def _stream(n=768, seed=0, dim=8):
+    x, _, _ = dp_stick_breaking_data(n, seed=seed, dim=dim)
+    return jnp.asarray(x)
+
+
+def _trained_store(x, batches=((0, 300), (300, 768))):
+    store = SnapshotStore(capacity=64)
+    eng = OCCEngine(DPMeansTransaction(LAM, k_max=128), pb=64,
+                    publish=store.publish_pass)
+    for lo, hi in batches:
+        eng.partial_fit(x[lo:hi])
+    eng.flush()
+    return store, eng
+
+
+def _st(key, rows, oldest, deadline):
+    return LaneState(key, key[2], rows, oldest, deadline)
+
+
+def _replay(rec, snap, backend="ref"):
+    """Replay one DispatchRecord through the service's own jitted steps."""
+    if rec.kind == "topk":
+        d2, idx = _topk_step(snap.centers, snap.mask, np.int32(snap.count),
+                             jnp.asarray(rec.x), np.int32(rec.n_valid),
+                             k=rec.k, backend=backend)
+    else:
+        d2, idx = _assign_step(snap.centers, snap.mask, np.int32(snap.count),
+                               jnp.asarray(rec.x), np.int32(rec.n_valid),
+                               backend=backend)
+    return np.asarray(d2), np.asarray(idx)
+
+
+IK = ("score", 0, "interactive")
+BK = ("score", 0, "batch")
+AK = ("topk", 4, "analytics")
+
+
+# ------------------------------------------------------- lane scheduler
+
+def test_select_flush_nothing_ready():
+    states = [_st(IK, 4, 0.0, 10.0), _st(BK, 8, 0.0, 20.0)]
+    assert qos.select_flush(states, 5.0, {}, 64, 4) is None
+
+
+def test_select_flush_full_and_deadline_reasons():
+    # full beats the clock; deadline fires exactly at deadline_t
+    pick = qos.select_flush([_st(IK, 64, 0.0, 99.0)], 1.0, {}, 64, 4)
+    assert pick == FlushDecision(IK, "full", ())
+    pick = qos.select_flush([_st(IK, 4, 0.0, 3.0)], 3.0, {}, 64, 4)
+    assert pick == FlushDecision(IK, "deadline", ())
+
+
+def test_select_flush_interactive_preempts_ready_batch():
+    # BOTH ready (batch earlier deadline, even full) — interactive still
+    # wins on lane rank; batch is recorded as passed over.
+    states = [_st(BK, 64, 0.0, 1.0), _st(IK, 4, 2.0, 3.0)]
+    pick = qos.select_flush(states, 5.0, {}, 64, 4)
+    assert pick.key == IK and pick.passed_over == (BK,)
+
+
+def test_select_flush_deadline_timer_independence():
+    # A stalled batch group whose long deadline has NOT expired is
+    # invisible to the decision: interactive flushes on its own timer and
+    # batch is not even "passed over" (no credit accrues while unready).
+    states = [_st(BK, 32, 0.0, 1000.0), _st(IK, 4, 5.0, 6.0)]
+    pick = qos.select_flush(states, 6.0, {}, 64, 4)
+    assert pick == FlushDecision(IK, "deadline", ())
+
+
+def test_select_flush_aging_preempts_everything():
+    states = [_st(BK, 8, 0.0, 1.0), _st(IK, 4, 2.0, 3.0)]
+    pick = qos.select_flush(states, 5.0, {BK: 4}, 64, aging_limit=4)
+    assert pick.key == BK and pick.reason == "aged"
+    assert pick.passed_over == (IK,)
+    # one credit short: interactive still preempts
+    pick = qos.select_flush(states, 5.0, {BK: 3}, 64, aging_limit=4)
+    assert pick.key == IK
+
+
+def test_select_flush_same_lane_tiebreak_by_deadline():
+    k2 = ("topk", 4, "interactive")
+    states = [_st(IK, 4, 0.0, 9.0), _st(k2, 4, 1.0, 7.0)]
+    pick = qos.select_flush(states, 10.0, {}, 64, 4)
+    assert pick.key == k2 and pick.passed_over == (IK,)
+
+
+def test_aging_simulation_bounds_starvation():
+    # Drive the pure policy round by round the way _AdmissionQueue does:
+    # a batch group READY from t=0 under sustained ready-interactive
+    # pressure must win by round aging_limit + 1, no later.
+    limit, credits = 3, {}
+    states = [_st(BK, 8, 0.0, 0.0), _st(IK, 4, 1.0, 1.0)]
+    for rnd in range(1, 10):
+        pick = qos.select_flush(states, 2.0, credits, 64, limit)
+        if pick.key == BK:
+            assert pick.reason == "aged" and rnd == limit + 1
+            break
+        for k in pick.passed_over:
+            credits[k] = credits.get(k, 0) + 1
+        credits.pop(pick.key, None)
+    else:
+        pytest.fail("batch lane starved past the aging bound")
+
+
+def test_select_flush_fifo_head_of_line_blocking():
+    # Oldest request belongs to analytics with a far deadline: the FIFO
+    # baseline flushes NOTHING, even though interactive expired — the
+    # exact head-of-line blocking the lane scheduler removes.
+    states = [_st(AK, 8, 0.0, 100.0), _st(IK, 4, 1.0, 2.0)]
+    assert qos.select_flush_fifo(states, 50.0, 64) is None
+    assert qos.select_flush(states, 50.0, {}, 64, 4).key == IK
+    # head past its own deadline (or full) finally flushes
+    assert qos.select_flush_fifo(states, 100.0, 64) == \
+        FlushDecision(AK, "deadline", ())
+    full = [_st(AK, 64, 0.0, 100.0), _st(IK, 4, 1.0, 2.0)]
+    assert qos.select_flush_fifo(full, 3.0, 64) == \
+        FlushDecision(AK, "full", ())
+
+
+def test_next_deadline_is_min_over_all_groups():
+    assert qos.next_deadline([]) is None
+    states = [_st(AK, 8, 0.0, 100.0), _st(IK, 4, 1.0, 2.0)]
+    assert qos.next_deadline(states) == 2.0
+
+
+def test_effective_lane():
+    assert qos.effective_lane("analytics", True) == "analytics"
+    assert qos.effective_lane("analytics", False) == "interactive"
+
+
+# ----------------------------------------------------------- shed policy
+
+def test_overload_score_max_of_normalized_terms():
+    assert qos.overload_score(0, 512, 0.0, 0.5) == 0.0
+    assert qos.overload_score(512, 512, 0.0, 0.5) == 1.0
+    assert qos.overload_score(256, 512, 0.25, 0.5) == 0.5
+    assert qos.overload_score(128, 512, 0.6, 0.5) == pytest.approx(1.2)
+
+
+def test_should_shed_matrix():
+    # sheds only when: overloaded AND non-interactive AND staleness > 0
+    assert qos.should_shed("analytics", 3, 1.0)
+    assert qos.should_shed("batch", 1, 2.0)
+    assert not qos.should_shed("analytics", 3, 0.99)      # not overloaded
+    assert not qos.should_shed("interactive", 3, 5.0)     # interactive
+    assert not qos.should_shed("analytics", 0, 5.0)       # latest-only
+
+
+# -------------------------------------------------------- typed surface
+
+def test_query_validation_errors():
+    x = np.zeros((4, 8), np.float32)
+    with pytest.raises(ValueError, match="kind"):
+        Query(x, kind="knn")
+    with pytest.raises(ValueError, match="k >= 1"):
+        Query(x, kind="topk")
+    with pytest.raises(ValueError, match="k == 0"):
+        Query(x, kind="score", k=3)
+    with pytest.raises(ValueError, match="priority"):
+        Query(x, priority="realtime")
+    with pytest.raises(ValueError, match="deadline_ms"):
+        Query(x, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="max_staleness"):
+        Query(x, max_staleness=-1)
+    with pytest.raises(ValueError, match="max_staleness"):
+        Query(x, max_staleness=1.5)
+
+
+def test_serve_config_validation_and_lane_delays():
+    with pytest.raises(ValueError, match="power of two"):
+        ServeConfig(coalesce_bucket=48)
+    with pytest.raises(ValueError, match="coalesce_delay_ms"):
+        ServeConfig(coalesce_delay_ms=0.0)
+    with pytest.raises(ValueError, match="aging_limit"):
+        ServeConfig(aging_limit=0)
+    with pytest.raises(ValueError, match="shed"):
+        ServeConfig(shed_depth=0)
+    cfg = ServeConfig(coalesce_delay_ms=2.0)
+    # derived lane budgets: batch 8x, analytics 16x the interactive one
+    assert cfg.lane_delay_s("interactive") == pytest.approx(0.002)
+    assert cfg.lane_delay_s("batch") == pytest.approx(0.016)
+    assert cfg.lane_delay_s("analytics") == pytest.approx(0.032)
+    # explicit overrides win; miss grace defaults to the lane budget
+    cfg2 = cfg.replace(batch_delay_ms=5.0, miss_grace_ms=1.0)
+    assert cfg2.lane_delay_s("batch") == pytest.approx(0.005)
+    assert cfg2.miss_grace_s("analytics") == pytest.approx(0.001)
+    assert cfg.miss_grace_s("batch") == cfg.lane_delay_s("batch")
+    assert cfg.replace() == cfg
+
+
+def test_ewma_seeds_exactly_then_decays():
+    e = Ewma(alpha=0.5)
+    assert e.value == 0.0 and e.count == 0
+    e.observe(1.0)
+    assert e.value == 1.0          # first observation seeds, no 0-bias
+    e.observe(0.0)
+    assert e.value == pytest.approx(0.5)
+    assert e.count == 2
+
+
+# ------------------------------------------------- threaded service QoS
+
+def test_service_deadline_timer_independence():
+    """A queued analytics request with a multi-second deadline must not
+    delay an interactive flush; close() then dispatches the analytics
+    group (flush-not-drop) instead of letting it wait out its budget."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=50.0,
+                         analytics_delay_ms=30_000.0, audit_log=True)
+    try:
+        out = {}
+
+        def analytics():
+            out["a"] = svc.submit(Query(x[:16], kind="topk", k=4,
+                                        priority="analytics",
+                                        max_staleness=2))
+        th = threading.Thread(target=analytics)
+        th.start()
+        t0 = _now()
+        while svc.queue_depth_rows() == 0 and _now() - t0 < 5.0:
+            pass                      # analytics admitted and parked
+        t0 = _now()
+        resp = svc.submit(Query(x[:4]))
+        dt = _now() - t0
+        assert resp.group >= 0 and not resp.degraded
+        # seconds-scale bound (1-CPU noise floor) — still far below the
+        # 30 s analytics budget a blocking head would have cost us.
+        assert dt < 5.0, f"interactive flush waited {dt:.2f}s"
+        assert svc.queue_depth_rows() >= 16   # analytics still parked
+    finally:
+        svc.close()
+    th.join(timeout=10)
+    assert not th.is_alive() and out["a"].group >= 0
+    lf = svc.metrics()["lane_flushes"]
+    assert any(key.startswith("interactive/") for key in lf)
+    assert lf.get("analytics/close", 0) == 1   # drained on the way down
+
+
+def test_service_priority_aging_drains_batch_under_load():
+    """One batch request under a sustained stream of interactive traffic
+    completes anyway (aging credit), while the flood is still running."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=10.0,
+                         batch_delay_ms=20.0, aging_limit=2)
+    try:
+        done = threading.Event()
+
+        def batch():
+            svc.submit(Query(x[:8], priority="batch"))
+            done.set()
+        th = threading.Thread(target=batch)
+        th.start()
+        t0 = _now()
+        while not done.is_set() and _now() - t0 < 30.0:
+            svc.submit(Query(x[:4]))          # sustained interactive load
+        assert done.is_set(), "batch lane starved behind interactive flood"
+        th.join(timeout=10)
+        lf = svc.metrics()["lane_flushes"]
+        assert sum(v for key, v in lf.items()
+                   if key.startswith("batch/")) >= 1
+    finally:
+        svc.close()
+
+
+def test_shed_path_degrades_and_replays_bit_exact():
+    """Forced overload (external shed signal): sheddable traffic degrades
+    to the stale pin and replays bit-exactly; interactive and latest-only
+    traffic is NEVER shed, whatever the signal says."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=32, coalesce_delay_ms=10.0,
+                         audit_log=True, shed_signal=lambda: 2.0)
+    try:
+        r_an = svc.submit(Query(x[:8], kind="topk", k=4,
+                                priority="analytics", max_staleness=3))
+        assert r_an.degraded and r_an.group == -1
+        r_ba = svc.submit(Query(x[8:16], priority="batch", max_staleness=1))
+        assert r_ba.degraded
+        # never shed: interactive (even staleness-tolerant), latest-only
+        r_in = svc.submit(Query(x[:8], max_staleness=5))
+        assert not r_in.degraded and r_in.group >= 0
+        r_b0 = svc.submit(Query(x[:8], priority="batch", max_staleness=0))
+        assert not r_b0.degraded and r_b0.group >= 0
+        m = svc.metrics()
+        assert m["n_shed"] == {"interactive": 0, "batch": 1, "analytics": 1}
+        assert m["overload_score"] >= 2.0
+        # degraded responses replay bit-exactly from their tagged version
+        deg = [r for r in svc.audit if r.degraded]
+        assert len(deg) == 2
+        for rec, resp in zip(deg, (r_an, r_ba)):
+            assert rec.version == resp.version
+            d2, idx = _replay(rec, store.get(rec.version))
+            n = rec.n_valid
+            np.testing.assert_array_equal(idx[:n], resp.labels)
+            np.testing.assert_array_equal(d2[:n], resp.scores)
+    finally:
+        svc.close()
+
+
+def test_stale_pin_held_then_repinned_on_drift():
+    """The shed pin is HELD across sheds (stable degraded version) and
+    re-pinned only when it drifts past the caller's tolerance."""
+    x = _stream()
+    store, eng = _trained_store(x, batches=((0, 200),))
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=32, coalesce_delay_ms=10.0,
+                         shed_signal=lambda: 2.0)
+    try:
+        v0 = svc.submit(Query(x[:4], kind="topk", k=4, priority="analytics",
+                              max_staleness=8)).version
+        assert v0 == store.latest().version
+        eng.partial_fit(x[200:500])          # advance published versions
+        eng.partial_fit(x[500:768])
+        eng.flush()
+        drift = store.latest().version - v0
+        assert drift >= 2
+        # within tolerance: pin held — the degraded version is STALE
+        r = svc.submit(Query(x[:4], kind="topk", k=4, priority="analytics",
+                             max_staleness=drift + 1))
+        assert r.degraded and r.version == v0 < store.latest().version
+        # tolerance tightened past the drift: re-pin to latest
+        r = svc.submit(Query(x[:4], kind="topk", k=4, priority="analytics",
+                             max_staleness=1))
+        assert r.degraded and r.version == store.latest().version
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------------------- close race
+
+def test_close_flushes_pending_requests():
+    """The PR-10 bugfix pin: requests admitted before close() get REAL
+    answers (bit-identical to solo serving), not errors or drops."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=60_000.0)
+    ref = ClusterService(store, backend="ref")
+    outs, errs = {}, {}
+
+    def client(i, lo, hi):
+        try:
+            outs[i] = svc.submit(Query(x[lo:hi], deadline_ms=60_000.0))
+        except Exception as e:            # noqa: BLE001 — recorded for assert
+            errs[i] = e
+    spans = [(0, 8), (8, 13), (13, 21)]
+    threads = [threading.Thread(target=client, args=(i, lo, hi))
+               for i, (lo, hi) in enumerate(spans)]
+    for th in threads:
+        th.start()
+    t0 = _now()
+    while svc.queue_depth_rows() < 21 and _now() - t0 < 10.0:
+        pass
+    assert svc.queue_depth_rows() == 21   # all parked on the 60 s timer
+    t0 = _now()
+    svc.close()
+    assert _now() - t0 < 10.0             # drained, not waited out
+    for th in threads:
+        th.join(timeout=10)
+    assert not errs and sorted(outs) == [0, 1, 2]
+    for i, (lo, hi) in enumerate(spans):
+        assert outs[i].group >= 0 and not outs[i].degraded
+        np.testing.assert_array_equal(outs[i].labels,
+                                      ref.score(x[lo:hi]).labels)
+
+
+def test_submit_racing_close_never_hangs():
+    """Submits racing close() either land in a flushed group or fail fast
+    with 'service closed' — none may hang, none may lose its answer."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=40.0)
+    n_ok, n_closed, bad = [], [], []
+    stop = threading.Event()
+
+    def client(i):
+        while not stop.is_set():
+            try:
+                resp = svc.submit(Query(x[i * 4:i * 4 + 4]))
+                assert resp.labels.shape == (4,)
+                n_ok.append(i)
+            except RuntimeError as e:
+                assert "service closed" in str(e), e
+                n_closed.append(i)
+                return
+            except Exception as e:        # noqa: BLE001
+                bad.append(e)
+                return
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+    for th in threads:
+        th.start()
+    t0 = _now()
+    while not n_ok and _now() - t0 < 10.0:
+        pass                              # at least one flush served
+    svc.close()
+    stop.set()
+    for th in threads:
+        th.join(timeout=15)
+    assert not any(th.is_alive() for th in threads)
+    assert not bad and n_ok
+    # after close the service still answers — on the solo path
+    resp = svc.score(x[:4])
+    assert resp.group == -1 and not resp.degraded

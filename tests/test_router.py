@@ -28,7 +28,7 @@ from repro.core import DPMeansTransaction, OCCEngine, nearest_center
 from repro.data import dp_stick_breaking_data
 from repro.distributed import DeltaChannel, make_follower
 from repro.serving import (
-    ClusterService, ModelRouter, SnapshotStore,
+    ClusterService, ModelRouter, Query, ServeConfig, SnapshotStore,
 )
 from repro.serving import cluster_service as cs_mod
 
@@ -397,3 +397,67 @@ def test_cap_trace_surfaces_in_serving_metrics():
     _train_into(store2.publish_pass, x)
     m2 = ClusterService(store2, backend="ref").metrics()
     assert m2["cap_est"] is None and m2["cap_trace"] is not None
+
+
+# ----------------------------------------------------- §17 typed surface
+
+def test_router_typed_submit_and_shared_config():
+    """`router.submit(model, Query)` is bit-identical to the shims; one
+    ServeConfig seeds every tenant, per-tenant overrides patch it, and
+    the fleet-level metrics expose the QoS aggregates."""
+    x = _stream()
+    router = ModelRouter(ServeConfig(backend="ref", min_bucket=16))
+    store = router.add_model("m")
+    _train_into(store.publish_pass, x)
+    q = np.asarray(x[:9])
+    typed = router.submit("m", Query(q, kind="topk", k=3))
+    shim = router.topk("m", q, k=3)
+    assert typed.model == shim.model == "m"
+    assert typed.version == shim.version and typed.bucket == shim.bucket
+    np.testing.assert_array_equal(typed.labels, shim.labels)
+    np.testing.assert_array_equal(typed.scores, shim.scores)
+    # config propagation: router default -> tenant; overrides patch it
+    assert router.service("m").config == router.config
+    router.add_model("n", min_bucket=32)
+    assert router.service("n").min_bucket == 32
+    assert router.service("n").config.backend == "ref"
+    m = router.metrics()
+    assert m["overload_score"] == 0.0
+    assert m["n_shed"] == {"interactive": 0, "batch": 0, "analytics": 0}
+    router.close()
+
+
+def test_router_fleet_shed_signal_crosses_tenants():
+    """One tenant's queued backlog sheds ANOTHER tenant's sheddable
+    traffic: the shed signal is fleet-wide queue depth, so co-located
+    tenants degrade before the shared process melts."""
+    x = _stream()
+    router = ModelRouter(ServeConfig(
+        backend="ref", coalesce=True, coalesce_bucket=64,
+        coalesce_delay_ms=20.0, analytics_delay_ms=20_000.0,
+        shed_depth=16, audit_log=True))
+    sa = router.add_model("a")
+    sb = router.add_model("b")
+    _train_into(sa.publish_pass, x)
+    _train_into(sb.publish_pass, x, lam=6.0)
+    # park a backlog past shed_depth on tenant a (analytics, long budget)
+    parked = threading.Thread(target=lambda: router.submit(
+        "a", Query(x[:32], kind="topk", k=4, priority="analytics",
+                   max_staleness=2)))
+    parked.start()
+    t0 = time.perf_counter()
+    while (router.service("a").queue_depth_rows() < 32
+           and time.perf_counter() - t0 < 10.0):
+        pass
+    assert router.service("a").queue_depth_rows() >= 32
+    # tenant b's sheddable traffic now degrades off tenant a's backlog...
+    rb = router.submit("b", Query(x[:8], priority="batch", max_staleness=1))
+    assert rb.degraded and rb.model == "b"
+    # ...while b's latest-only traffic is still served fresh
+    rb0 = router.submit("b", Query(x[:8]))
+    assert not rb0.degraded
+    m = router.metrics()
+    assert m["n_shed"]["batch"] == 1 and m["overload_score"] >= 1.0
+    router.close()
+    parked.join(timeout=10)
+    assert not parked.is_alive()

@@ -19,8 +19,8 @@ from repro.core import DPMeansTransaction, OCCEngine, nearest_center
 from repro.data import dp_stick_breaking_data
 from repro.kernels import ops
 from repro.serving import (
-    ClusterService, ModelSnapshot, SnapshotStore, freeze_snapshot,
-    next_bucket,
+    ClusterService, ModelSnapshot, Query, ServeConfig, SnapshotStore,
+    freeze_snapshot, next_bucket,
 )
 from repro.serving import cluster_service as cs_mod
 
@@ -439,3 +439,69 @@ def test_service_probes_requires_hier_snapshot():
     svc = ClusterService(store, backend="ref", probes=2)
     with pytest.raises(RuntimeError, match="hier"):
         svc.topk(np.asarray(x[:8]), k=3)
+
+
+# --------------------------------------------------- §17 typed surface
+
+def test_shims_bit_identical_to_submit_query_solo():
+    """`assign`/`score`/`topk` are pure shims over `submit(Query(...))`:
+    every response field bit-identical on the solo path."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref")
+    q = np.asarray(x[:33])
+    pairs = [
+        (svc.score(q), svc.submit(Query(q))),
+        (svc.assign(q), svc.submit(Query(q, want_scores=False))),
+        (svc.topk(q, k=5), svc.submit(Query(q, kind="topk", k=5))),
+    ]
+    for shim, typed in pairs:
+        assert shim.version == typed.version
+        assert shim.bucket == typed.bucket
+        assert shim.group == typed.group == -1
+        assert shim.degraded == typed.degraded is False
+        np.testing.assert_array_equal(shim.labels, typed.labels)
+        if shim.scores is None:
+            assert typed.scores is None
+        else:
+            np.testing.assert_array_equal(shim.scores, typed.scores)
+
+
+def test_shims_bit_identical_to_submit_query_coalesced():
+    """Same identity through the admission queue: the shims land in the
+    same (kind, k, lane) groups the typed form does."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    svc = ClusterService(store, backend="ref", coalesce=True,
+                         coalesce_bucket=64, coalesce_delay_ms=5.0)
+    try:
+        q = np.asarray(x[:17])
+        shim, typed = svc.score(q), svc.submit(Query(q))
+        assert shim.version == typed.version
+        assert shim.group >= 0 and typed.group >= 0
+        np.testing.assert_array_equal(shim.labels, typed.labels)
+        np.testing.assert_array_equal(shim.scores, typed.scores)
+        tk = svc.submit(Query(q, kind="topk", k=4))
+        np.testing.assert_array_equal(svc.topk(q, k=4).labels, tk.labels)
+    finally:
+        svc.close()
+
+
+def test_serve_config_object_and_keyword_forms_agree():
+    """`ClusterService(store, ServeConfig(...))` and the historical
+    keyword form resolve to the same construction; keyword overrides
+    patch a passed config."""
+    x = _stream()
+    store, _ = _trained_store(x)
+    cfg = ServeConfig(backend="ref", min_bucket=16, coalesce_bucket=128)
+    svc_a = ClusterService(store, cfg, max_bucket=256)
+    svc_b = ClusterService(store, backend="ref", min_bucket=16,
+                           coalesce_bucket=128, max_bucket=256)
+    assert svc_a.config == svc_b.config
+    assert (svc_a.backend, svc_a.min_bucket, svc_a.max_bucket) == \
+        ("ref", 16, 256)
+    assert svc_a.config.coalesce_bucket == 128
+    q = np.asarray(x[:9])
+    ra, rb = svc_a.score(q), svc_b.score(q)
+    assert ra.version == rb.version and ra.bucket == rb.bucket == 16
+    np.testing.assert_array_equal(ra.labels, rb.labels)
